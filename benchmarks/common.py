@@ -1,0 +1,57 @@
+"""Shared benchmark utilities: corpus tiers, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import build
+from repro.text import corpus
+
+# CPU-runnable tier calibrated to the paper's posting-length REGIME
+# (paper: N_d/W ~ 1100 postings/term, query df ~ 0.3*D): docs=20k,
+# vocab=2k -> ~600 postings/term.  Paper-scale numbers are reproduced
+# analytically via core/size_model (see DESIGN.md §8).
+BENCH_SPEC = corpus.CorpusSpec(num_docs=20_000, vocab=2_000,
+                               avg_distinct=60, seed=42)
+
+_HOST_CACHE = {}
+
+
+def bench_host(spec: corpus.CorpusSpec = BENCH_SPEC):
+    key = (spec.num_docs, spec.vocab, spec.avg_distinct, spec.seed)
+    if key not in _HOST_CACHE:
+        tc = corpus.generate(spec)
+        _HOST_CACHE[key] = (tc, build.bulk_build(tc))
+    return _HOST_CACHE[key]
+
+
+def time_call(fn: Callable, *args, reps: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def time_host(fn: Callable, *args, reps: int = 3) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,52 @@
+"""Paper §4.4: query-expansion (document-based access) times.
+
+The paper: PR without a doc-access path degenerates to a sequential
+scan (~16 h); ORIF ~20 min; the proposed fix is a DIRECT (forward)
+index.  We measure all three access paths on the bench tier.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_host, emit, time_call
+from repro.core import direct_index, layouts, query
+from repro.text import corpus
+
+
+def main() -> None:
+    _, host = bench_host()
+    cap = host.max_posting_len
+    orx = layouts.build_csr(host)
+    prx = layouts.build_coo(host)
+    di = direct_index.build_direct(host)
+
+    qh = corpus.sample_query_terms(host.df, host.term_hashes, 1, 2,
+                                   num_docs=host.num_docs, seed=7)[0]
+    r = query.score_query(orx, jnp.asarray(qh), k=5, cap=cap)
+    top = r.doc_ids
+
+    import jax
+    scan_pr = jax.jit(lambda docs: direct_index.expand_query_scan(
+        prx, docs, host.num_terms))
+    scan_or = jax.jit(lambda docs: direct_index.expand_query_scan(
+        orx, docs, host.num_terms))
+    fast = jax.jit(lambda docs: direct_index.expand_query(
+        di, docs, host.num_terms, cap=di.max_doc_len))
+
+    us_pr = time_call(scan_pr, top)
+    us_or = time_call(scan_or, top)
+    us_di = time_call(fast, top)
+    emit("expansion/pr_full_scan", us_pr, "paper:~16h at 1M docs")
+    emit("expansion/orif_scan", us_or, "paper:~19.8min at 1M docs")
+    emit("expansion/direct_index", us_di,
+         f"speedup_vs_scan={us_or / us_di:.1f};direct_bytes={di.nbytes()}")
+
+    # relevance feedback via the same access path
+    tids = orx.lookup_terms(jnp.asarray(qh))
+    fb = jax.jit(lambda docs: direct_index.relevance_feedback(
+        di, docs, tids, host.num_terms, cap=di.max_doc_len))
+    emit("expansion/relevance_feedback", time_call(fb, top), "rocchio")
+
+
+if __name__ == "__main__":
+    main()

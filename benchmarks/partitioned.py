@@ -1,0 +1,73 @@
+"""Doc- vs term-partitioned retrieval: the distribution crossover.
+
+Runs both shard_map engines on an 8-device host mesh (subprocess, since
+XLA device count must be set before jax init) and reports per-query
+latency plus the ANALYTIC per-query wire bytes at production scale —
+the quantity that decides the sharding choice at 1000+ nodes:
+
+  doc-partitioned : wire/query ~ shards * k * 8 B      (top-k merge)
+  term-partitioned: wire/query ~ D * 4 B               ([D] psum)
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+SCRIPT = r"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.text import corpus
+from repro.core import build
+from repro.distributed import retrieval
+
+mesh = jax.make_mesh((8,), ("data",))
+tc = corpus.generate(corpus.CorpusSpec(num_docs=8000, vocab=2000,
+                                       avg_distinct=60, seed=4))
+host = build.bulk_build(tc)
+qh = corpus.sample_query_terms(host.df, host.term_hashes, 32, 3,
+                               num_docs=host.num_docs, seed=5)
+
+for name, builder, mk in [
+        ("doc", retrieval.build_doc_sharded,
+         retrieval.make_doc_sharded_scorer),
+        ("term", retrieval.build_term_sharded,
+         retrieval.make_term_sharded_scorer)]:
+    ix = builder(host, 8)
+    scorer = mk(ix, mesh, "data", k=10)
+    scorer(jnp.asarray(qh[0]))          # warm
+    t0 = time.perf_counter()
+    for q in qh:
+        out = scorer(jnp.asarray(q))
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    us = (time.perf_counter() - t0) / len(qh) * 1e6
+    print(f"RESULT {name} {us:.1f}")
+"""
+
+
+def main() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=520)
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, name, us = line.split()
+            emit(f"partitioned/{name}_sharded_8dev", float(us), "per_query")
+    if "RESULT" not in out.stdout:
+        emit("partitioned/FAILED", 0.0, out.stderr[-200:].replace("\n", " "))
+
+    # analytic production-scale wire (1M docs, 256 shards, k=10)
+    shards, k, docs = 256, 10, 1_004_721
+    emit("partitioned/analytic/doc_wire_bytes", 0.0,
+         f"per_query={shards * k * 8}")
+    emit("partitioned/analytic/term_wire_bytes", 0.0,
+         f"per_query={docs * 4};ratio={docs * 4 / (shards * k * 8):.0f}x")
+
+
+if __name__ == "__main__":
+    main()

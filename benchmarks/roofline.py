@@ -1,0 +1,206 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch x shape x mesh) cell, derive the three roofline terms
+from the compiled program:
+
+  compute    = FLOPs / (chips x 197e12)
+  memory     = HBM bytes / (chips x 819e9)
+  collective = ICI wire bytes / (chips x 50e9 x links)
+
+Methodology (CPU container — no wall-clock MFU possible):
+  * FLOPs: XLA's ``cost_analysis`` counts while-loop bodies ONCE, so for
+    scanned models it under-counts by ~n_layers; we therefore use the
+    ANALYTIC model FLOPs (6·N·D train / 2·N·D inference, documented per
+    family in configs/base.py meta) as the compute numerator and report
+    HLO_flops alongside as the "per-trip" count.
+  * HBM bytes: optimistic lower bound = every argument read once +
+    outputs written once + temp buffers written+read once (buffer sizes
+    from ``memory_analysis``), plus for decode cells the KV cache read.
+  * ICI bytes: a WHILE-AWARE walk of the optimized HLO — collectives
+    inside loop bodies are multiplied by the loop trip count (parsed
+    from the loop condition's comparison constant), with per-op wire
+    factors: all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all
+    (n-1)/n, collective-permute 1.
+
+Emits one CSV row per cell and writes experiments/roofline.csv.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+import numpy as np
+
+from repro.launch import hw
+
+BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4,
+         "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+class HloModule:
+    """Minimal HLO text parser: computations, collectives, while loops."""
+
+    def __init__(self, text: str, n_devices: int):
+        self.n_devices = n_devices
+        self.comp_collectives: dict[str, list[tuple[str, int, int]]] = {}
+        self.comp_whiles: dict[str, list[tuple[str, str]]] = {}
+        self.comp_consts: dict[str, list[int]] = {}
+        self.entry = None
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            # computation headers sit at column 0: "%name (args...) -> T {"
+            # (args may contain nested parens -> match only the name)
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", line) \
+                if line and not line.startswith(" ") and \
+                line.rstrip().endswith("{") else None
+            if m:
+                cur = m.group(2)
+                self.comp_collectives[cur] = []
+                self.comp_whiles[cur] = []
+                self.comp_consts[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            for c in COLLECTIVES:
+                if f" {c}(" in stripped and "=" in stripped:
+                    lhs = stripped.split(f" {c}(", 1)[0]
+                    b = sum(_shape_bytes(mm.group(1), mm.group(2))
+                            for mm in _SHAPE_RE.finditer(lhs))
+                    self.comp_collectives[cur].append(
+                        (c, b, _group_size(stripped, self.n_devices)))
+                    break
+            mw = re.search(r"while\(.*\), condition=%?([\w.\-]+), "
+                           r"body=%?([\w.\-]+)", stripped)
+            if mw:
+                self.comp_whiles[cur].append((mw.group(1), mw.group(2)))
+            for mc in re.finditer(r"constant\((\d+)\)", stripped):
+                self.comp_consts[cur].append(int(mc.group(1)))
+
+    def trip_count(self, cond: str) -> int:
+        consts = self.comp_consts.get(cond, [])
+        return max(consts) if consts else 1
+
+    def wire_bytes(self, comp: str | None = None, mult: float = 1.0,
+                   seen=None) -> float:
+        comp = comp or self.entry
+        if comp is None or comp not in self.comp_collectives:
+            return 0.0
+        seen = seen or set()
+        total = 0.0
+        for op, b, n in self.comp_collectives[comp]:
+            factor = WIRE_FACTOR[op] * (max(n - 1, 0) / max(n, 1))
+            total += mult * b * factor
+        for cond, body in self.comp_whiles[comp]:
+            trips = self.trip_count(cond)
+            total += self.wire_bytes(body, mult * trips, seen)
+        return total
+
+
+def analyze_cell(path: str) -> dict | None:
+    with open(path) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return None
+    mesh = rec["mesh_shape"]
+    chips = int(np.prod(list(mesh.values())))
+    meta = rec["meta"]
+    mem = rec["memory"]
+
+    model_flops = meta["model_flops"]
+    hlo_flops_trip = rec["cost"].get("flops", 0.0) * chips
+
+    # memory term: args once + out once + temps twice, per device
+    hbm_bytes = (mem["argument_size_in_bytes"] +
+                 mem["output_size_in_bytes"] +
+                 2 * mem["temp_size_in_bytes"])
+    t_mem = hbm_bytes / hw.HBM_BW
+
+    t_comp = model_flops / (chips * hw.PEAK_FLOPS_BF16)
+
+    hlo_path = path.replace(".json", ".hlo.txt")
+    t_coll = 0.0
+    wire = 0.0
+    if os.path.exists(hlo_path):
+        mod = HloModule(open(hlo_path).read(), chips)
+        wire = mod.wire_bytes()          # per-device wire bytes
+        t_coll = wire / hw.ICI_BW
+
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_comp, t_mem, t_coll)
+    frac = t_comp / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "model_flops": model_flops,
+        "hlo_flops_per_trip": hlo_flops_trip,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "hbm_bytes_per_dev": hbm_bytes, "wire_bytes_per_dev": wire,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "useful_ratio": (model_flops / hlo_flops_trip
+                         if hlo_flops_trip else float("nan")),
+    }
+
+
+def main(out_dir: str = "experiments/dryrun",
+         csv_path: str = "experiments/roofline.csv") -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
+        r = analyze_cell(path)
+        if r:
+            rows.append(r)
+    if not rows:
+        print("roofline/no_dryrun_artifacts,0.0,run launch.dryrun first")
+        return
+    os.makedirs(os.path.dirname(csv_path), exist_ok=True)
+    keys = list(rows[0].keys())
+    with open(csv_path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    for r in rows:
+        name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        us = max(r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"]) * 1e6
+        print(f"{name},{us:.1f},dom={r['dominant']};"
+              f"frac={r['roofline_fraction']:.3f};"
+              f"comp={r['t_compute_s']:.2e};mem={r['t_memory_s']:.2e};"
+              f"coll={r['t_collective_s']:.2e}")
+    print(f"roofline/csv,0.0,{csv_path};cells={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

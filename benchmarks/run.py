@@ -1,0 +1,40 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+  table5   paper Table 5 (sizes + copy times)
+  table6   paper Table 6 (aux-index sizes + creation)
+  table7   paper Table 7 (query evaluation, 1-4 terms)
+  expansion  paper §4.4 (document-based access)
+  roofline   §Roofline terms from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import expansion, partitioned, roofline, table5_size, \
+        table6_index, table7_query
+    suites = [("table5", table5_size.main), ("table6", table6_index.main),
+              ("table7", table7_query.main), ("expansion", expansion.main),
+              ("partitioned", partitioned.main),
+              ("roofline", roofline.main)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if only and name != only:
+            continue
+        try:
+            fn()
+        except Exception:                        # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

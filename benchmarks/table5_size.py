@@ -1,0 +1,50 @@
+"""Paper Table 5: table sizes + bulk build ("copy") times per
+representation, at the CPU bench tier AND analytically at paper scale."""
+from __future__ import annotations
+
+from benchmarks.common import bench_host, emit, time_host
+from repro.core import build, layouts
+from repro.core import size_model as sm
+
+
+def main() -> None:
+    tc, host = bench_host()
+    stats = build.corpus_stats(host)
+
+    builders = {
+        "pr": layouts.build_coo,
+        "or": layouts.build_csr,
+        "cor": layouts.build_compact_csr,
+        "hor": layouts.build_blocked,
+        "packed": layouts.build_packed_csr,
+    }
+    pr_bytes = None
+    for name, bld in builders.items():
+        us = time_host(lambda b=bld: b(host), reps=1)
+        ix = bld(host)
+        nbytes = ix.nbytes()
+        if name == "pr":
+            pr_bytes = nbytes
+        emit(f"table5/size/{name}", us,
+             f"bytes={nbytes};ratio_vs_pr={pr_bytes / nbytes:.2f}")
+
+    # the bulk sort itself (the §3.6 COPY path)
+    us = time_host(lambda: build.bulk_build(tc), reps=1)
+    emit("table5/bulk_build", us,
+         f"postings={stats.N_d};per_posting_ns={us * 1e3 / stats.N_d:.1f}")
+
+    # analytic paper-scale reproduction (Table 4/5)
+    p = sm.PAPER_COLLECTION
+    emit("table5/analytic/pr_bytes", 0.0, f"bytes={sm.pr_bytes(p)}")
+    emit("table5/analytic/orif_bytes", 0.0, f"bytes={sm.orif_bytes(p)}")
+    emit("table5/analytic/pr_over_orif", 0.0,
+         f"ratio={sm.pr_over_orif(p):.2f}")
+    emit("table5/analytic/packed_bytes", 0.0,
+         f"bytes={sm.packed_csr_layout_bytes(p)};"
+         f"pr_over_packed={sm.pr_bytes(p) / sm.packed_csr_layout_bytes(p):.2f}")
+    emit("table5/paper_measured", 0.0,
+         "pr_pages=1338589;orif_pages=65509;ratio=20.4")
+
+
+if __name__ == "__main__":
+    main()

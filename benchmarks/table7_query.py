@@ -1,0 +1,66 @@
+"""Paper Table 7: query evaluation times for 1–4 term queries, per
+representation x lookup kind, plus the Pallas blocked-scoring path.
+
+Mirrors §4.3's protocol: frequent terms (df band), batched queries,
+median steady-state time per query.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_host, emit, time_call
+from repro.core import layouts, query
+from repro.core.query import idf as idf_fn
+from repro.kernels import ops
+from repro.text import corpus
+
+N_QUERIES = 8
+
+
+def main() -> None:
+    _, host = bench_host()
+    cap = host.max_posting_len
+    indexes = {
+        "pr_btree": layouts.build_coo(host),
+        "pr_hash": layouts.build_coo(host, lookup="hash"),
+        "or_btree": layouts.build_csr(host),
+        "or_hash": layouts.build_csr(host, lookup="hash"),
+        "cor": layouts.build_compact_csr(host),
+        "hor": layouts.build_blocked(host),
+        "packed": layouts.build_packed_csr(host),
+    }
+
+    pr_time = {}
+    for n_terms in (1, 2, 3, 4):
+        qh = corpus.sample_query_terms(host.df, host.term_hashes,
+                                       N_QUERIES, n_terms,
+                                       num_docs=host.num_docs,
+                                       seed=n_terms)
+        for name, ix in indexes.items():
+            scorer = query.make_scorer(ix, k=10, cap=cap)
+            us = time_call(scorer, jnp.asarray(qh)) / N_QUERIES
+            if name == "pr_btree":
+                pr_time[n_terms] = us
+            emit(f"table7/{name}/{n_terms}t", us,
+                 f"speedup_vs_pr={pr_time[n_terms] / us:.2f}")
+
+        # Pallas fused blocked scoring (the TPU hot-path kernel,
+        # interpret-mode on CPU so time is NOT hardware-representative;
+        # reported for completeness, roofline covers the TPU story)
+        hor = indexes["hor"]
+        q0 = jnp.asarray(qh[0])
+        tids = hor.lookup_terms(q0)
+        w = idf_fn(hor.term_df(tids), host.num_docs)
+        us = time_call(
+            lambda t, ww: ops.blocked_query_scores(
+                hor, t, ww, hor.max_blocks_per_term,
+                max_pairs=16384, backend="xla"),
+            tids, w)
+        emit(f"table7/kernel_xla/{n_terms}t", us, "per_query")
+
+    emit("table7/paper_measured", 0.0,
+         "pr_4t_ms=143491;orif_4t_ms=13076;speedup=11.0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Index lifecycle: bulk build -> incremental batch add -> deletion ->
+expansion/feedback — the paper's §3.6 maintenance story end to end.
+
+    PYTHONPATH=src python examples/index_lifecycle.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build, direct_index, layouts, query
+from repro.text import corpus
+
+spec = corpus.CorpusSpec(num_docs=3000, vocab=2500, avg_distinct=40, seed=3)
+tc = corpus.generate(spec)
+
+# bulk build the first 2000 docs (the §3.6 COPY path)
+first = build.TokenizedCorpus(tc.doc_term_ids[:2000], tc.doc_counts[:2000],
+                              tc.term_hashes, 2000)
+host = build.bulk_build(first)
+print(f"bulk built: D={host.num_docs} P={host.num_postings}")
+
+# incremental add of a new crawl batch (drop-index -> merge -> rebuild)
+second = build.TokenizedCorpus(tc.doc_term_ids[2000:], tc.doc_counts[2000:],
+                               tc.term_hashes, 1000)
+host = build.add_documents(host, second)
+print(f"after add: D={host.num_docs} P={host.num_postings}")
+
+ix = layouts.build_compact_csr(host)       # COR
+qh = corpus.sample_query_terms(host.df, host.term_hashes, 1, 3,
+                               num_docs=host.num_docs, seed=4)[0]
+cap = host.max_posting_len
+r = query.score_query(ix, jnp.asarray(qh), k=5, cap=cap)
+print("top-5:", np.asarray(r.doc_ids).tolist())
+
+# delete the top document; it disappears from results
+norm2 = direct_index.delete_docs(ix.docs.norm, r.doc_ids[:1])
+ix2 = layouts.CompactCsrIndex(
+    sorted_hash=ix.sorted_hash, df=ix.df, offsets=ix.offsets,
+    doc_ids=ix.doc_ids, tfs=ix.tfs,
+    docs=layouts.DocTable(norm=norm2, rank=ix.docs.rank),
+    max_posting_len=ix.max_posting_len)
+r2 = query.score_query(ix2, jnp.asarray(qh), k=5, cap=cap)
+print("after delete:", np.asarray(r2.doc_ids).tolist())
+assert int(r.doc_ids[0]) not in np.asarray(r2.doc_ids).tolist()
+
+# expansion + Rocchio feedback via the direct index (§4.4)
+di = direct_index.build_direct(host)
+exp = direct_index.expand_query(di, r2.doc_ids, host.num_terms,
+                                cap=di.max_doc_len)
+fb = direct_index.relevance_feedback(di, r2.doc_ids[:2],
+                                     ix.lookup_terms(jnp.asarray(qh)),
+                                     host.num_terms, cap=di.max_doc_len)
+print("expansion:", np.asarray(exp.term_ids).tolist())
+print("feedback :", np.asarray(fb.term_ids).tolist())
+print("lifecycle OK")

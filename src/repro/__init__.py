@@ -1,0 +1,2 @@
+"""repro: TPU-native index-layout framework (ORDBMS text-indexing paper)."""
+__version__ = "0.1.0"

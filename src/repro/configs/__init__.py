@@ -1,0 +1,18 @@
+"""Architecture registry: the 10 assigned archs + the paper's own index."""
+from repro.configs import (bert4rec, dien, gemma3_4b, minicpm3_4b,
+                           mixtral_8x22b, mixtral_8x7b, pna, qwen3_0p6b,
+                           sasrec, xdeepfm)
+from repro.configs.base import ArchDef, Cell  # noqa: F401
+
+ARCHS = {m.ARCH.arch_id: m.ARCH for m in (
+    gemma3_4b, minicpm3_4b, qwen3_0p6b, mixtral_8x7b, mixtral_8x22b,
+    pna, sasrec, bert4rec, dien, xdeepfm)}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    return ARCHS[arch_id]
+
+
+def list_cells():
+    """All 40 (arch x shape) dry-run cells."""
+    return [(a, s) for a, arch in ARCHS.items() for s in arch.shape_ids()]

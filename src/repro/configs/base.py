@@ -1,0 +1,497 @@
+"""Config/registry machinery: ArchDef + dry-run Cell builders.
+
+A **Cell** = (architecture x input shape) -> one concrete jit-able step:
+  train_*     -> full train step (fwd + bwd + AdamW update)
+  prefill_*   -> prefill (logits + KV cache)
+  decode_*/long_* -> one decode step against a seq_len cache
+  serve_*     -> batched scoring
+  retrieval_* -> two-tower candidate scoring + top-k
+
+Cells carry abstract (ShapeDtypeStruct) args and a sharding builder, so
+the multi-pod dry-run can ``jit(...).lower(...).compile()`` every cell
+without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import sharding as shard_lib
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt_lib
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch_id: str
+    shape_id: str
+    kind: str
+    fn: Callable
+    abstract_args: tuple
+    donate: tuple
+    make_shardings: Callable            # mesh -> tuple matching args
+    meta: dict
+    make_out_shardings: Callable | None = None   # mesh -> out tree or None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    kind: str                           # "lm" | "gnn" | "recsys"
+    make_config: Callable               # (scale, shape_id) -> model config
+    shapes: dict
+    smoke_shapes: dict
+    source: str = ""                    # provenance tag
+
+    def shape_ids(self):
+        return list(self.shapes)
+
+    def cell(self, shape_id: str, scale: str = "full",
+             mesh_axes: tuple = ()) -> Cell:
+        """``mesh_axes``: axis names of the target mesh; enables GSPMD
+        activation-sharding annotations in the model (dry-run path)."""
+        shp = (self.shapes if scale == "full" else
+               self.smoke_shapes)[shape_id]
+        cfg = self.make_config(scale, shape_id)
+        if self.kind == "lm":
+            if mesh_axes:
+                batch_axes = tuple(a for a in ("pod", "data")
+                                   if a in mesh_axes)
+                cfg = dataclasses.replace(
+                    cfg, batch_axes=batch_axes,
+                    tp_axis="model" if "model" in mesh_axes else "")
+                if cfg.moe is not None:
+                    # dispatch groups == dp shards (16 or 32); decode
+                    # steps route only `batch` tokens
+                    dp = 16 * (2 if "pod" in mesh_axes else 1)
+                    tokens = shp["batch"] * (
+                        shp["seq"] if shp["step"] in ("train", "prefill")
+                        else 1)
+                    if tokens % dp == 0:
+                        cfg = dataclasses.replace(
+                            cfg, moe=dataclasses.replace(cfg.moe,
+                                                         groups=dp))
+            return _lm_cell(self.arch_id, cfg, shape_id, shp)
+        if self.kind == "gnn":
+            return _gnn_cell(self.arch_id, cfg, shape_id, shp)
+        if mesh_axes:
+            cfg = dataclasses.replace(
+                cfg,
+                batch_axes=tuple(a for a in ("pod", "data")
+                                 if a in mesh_axes),
+                tp_axis="model" if "model" in mesh_axes else "")
+        return _recsys_cell(self.arch_id, cfg, shape_id, shp)
+
+
+OPT_CFG = opt_lib.AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _params_abstract(init_fn):
+    return jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def lm_active_params(p_abs, cfg: tfm.TransformerConfig) -> int:
+    """Active (per-token) parameter count — MoE counts top_k/E experts."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(p_abs)[0]
+    for path, leaf in flat:
+        s = shard_lib._path_str(path)
+        n = int(np.prod(leaf.shape))
+        if cfg.moe is not None and "mlp" in s and "router" not in s:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def _bf16_abstract(tree):
+    """Serving reads bf16 weights (args + HBM traffic halve)."""
+    return jax.tree.map(
+        lambda x: sds(x.shape, jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def _lm_cell(arch_id: str, cfg: tfm.TransformerConfig, shape_id: str,
+             shp: dict) -> Cell:
+    p_abs = _params_abstract(lambda k: tfm.init_params(k, cfg))
+    n_active = lm_active_params(p_abs, cfg)
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p_abs))
+    b, s = shp["batch"], shp["seq"]
+    if shp["step"] in ("prefill", "decode"):
+        p_abs = _bf16_abstract(p_abs)
+
+    if shp["step"] == "train":
+        # parallelism policy: models under ~2B params don't use tensor
+        # parallelism — both non-pod axes become FSDP/data (see
+        # launch/sharding.lm_small_param_spec).
+        small = n_total < 2_000_000_000
+        if small and cfg.batch_axes:
+            cfg = dataclasses.replace(cfg, tp_axis="",
+                                      batch_axes=("data", "model"))
+        opt_abs = _abstract(opt_lib.init, p_abs)
+        batch_abs = {"tokens": sds((b, s), jnp.int32),
+                     "labels": sds((b, s), jnp.int32)}
+        step = opt_lib.make_train_step(
+            lambda p, bb: tfm.loss_fn(p, cfg, bb), OPT_CFG,
+            microbatches=shp.get("microbatches", 1))
+        pspec = (shard_lib.lm_small_param_spec if small
+                 else shard_lib.lm_param_spec)
+        bspec = (shard_lib.lm_small_batch_spec if small
+                 else shard_lib.batch_spec)
+
+        def mk_sh(mesh):
+            psh = shard_lib.named(p_abs, mesh, pspec)
+            osh = shard_lib.named(opt_abs, mesh, pspec)
+            bsh = shard_lib.named(batch_abs, mesh, bspec)
+            return (psh, osh, bsh)
+
+        return Cell(arch_id, shape_id, "train", step,
+                    (p_abs, opt_abs, batch_abs), (0, 1), mk_sh,
+                    {"model_flops": 6.0 * n_active * b * s,
+                     "n_params": n_total, "n_active": n_active,
+                     "tokens": b * s})
+
+    if shp["step"] == "prefill":
+        tokens_abs = sds((b, s), jnp.int32)
+        fn = functools.partial(_lm_prefill, cfg)
+        # out_abs via a constraint-free twin: eval_shape runs without a
+        # mesh context and with_sharding_constraint would reject specs.
+        cfg_plain = dataclasses.replace(cfg, batch_axes=(), tp_axis="")
+        out_abs = _abstract(functools.partial(_lm_prefill, cfg_plain),
+                            p_abs, tokens_abs)
+
+        def mk_sh(mesh):
+            psh = shard_lib.named(p_abs, mesh, shard_lib.lm_param_spec)
+            tsh = shard_lib.named(tokens_abs, mesh, shard_lib.batch_spec)
+            return (psh, tsh)
+
+        def mk_out(mesh):
+            # the prefill KV cache [L,B,H,S,hd] (or MLA [L,B,S,c]) must
+            # leave the step sequence-sharded over "model" — without an
+            # out_sharding it materializes unsharded (15+ GiB/device).
+            def one(path, leaf):
+                if len(leaf.shape) >= 4:     # a cache leaf
+                    return shard_lib.named_from_specs(
+                        shard_lib.kv_cache_spec(
+                            leaf.shape, mesh, batch_idx=1,
+                            seq_idx=2 if cfg.attn == "mla" else 3), mesh)
+                return shard_lib.named_from_specs(
+                    shard_lib.batch_spec(path, leaf, mesh), mesh)
+            return jax.tree_util.tree_map_with_path(one, out_abs)
+
+        return Cell(arch_id, shape_id, "prefill", fn, (p_abs, tokens_abs),
+                    (), mk_sh,
+                    {"model_flops": 2.0 * n_active * b * s,
+                     "n_params": n_total, "n_active": n_active,
+                     "tokens": b * s}, mk_out)
+
+    # decode (decode_32k / long_500k): one token against a seq-len cache
+    cache_abs = _abstract(lambda: tfm.init_cache(cfg, b, s))
+    tokens_abs = sds((b, 1), jnp.int32)
+    clen_abs = sds((b,), jnp.int32)
+    fn = functools.partial(_lm_decode, cfg)
+
+    def mk_sh(mesh):
+        psh = shard_lib.named(p_abs, mesh, shard_lib.lm_param_spec)
+        csh = jax.tree.map(
+            lambda l: shard_lib.named_from_specs(
+                shard_lib.kv_cache_spec(
+                    l.shape, mesh, batch_idx=1,
+                    seq_idx=2 if cfg.attn == "mla" else 3), mesh),
+            cache_abs)
+        tsh = shard_lib.named(tokens_abs, mesh, shard_lib.batch_spec)
+        lsh = shard_lib.named(clen_abs, mesh, shard_lib.batch_spec)
+        return (psh, csh, tsh, lsh)
+
+    cache_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache_abs))
+    return Cell(arch_id, shape_id, "decode", fn,
+                (p_abs, cache_abs, tokens_abs, clen_abs), (1,), mk_sh,
+                {"model_flops": 2.0 * n_active * b,
+                 "n_params": n_total, "n_active": n_active, "tokens": b,
+                 "cache_bytes": cache_bytes})
+
+
+def _lm_prefill(cfg, params, tokens):
+    return tfm.prefill(params, cfg, tokens)
+
+
+def _lm_decode(cfg, params, cache, tokens, cache_len):
+    return tfm.decode_step(params, cfg, cache, tokens, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells (all four shapes are training steps)
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cell(arch_id: str, cfg: gnn_lib.PnaConfig, shape_id: str,
+              shp: dict) -> Cell:
+    p_abs = _params_abstract(lambda k: gnn_lib.init_params(k, cfg))
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p_abs))
+    opt_abs = _abstract(opt_lib.init, p_abs)
+    n, e = shp["n_nodes"], shp["n_edges"]
+    if shp.get("graph_level"):
+        batch_abs = {"feats": sds((n, cfg.d_feat), jnp.float32),
+                     "src": sds((e,), jnp.int32),
+                     "dst": sds((e,), jnp.int32),
+                     "graph_ids": sds((n,), jnp.int32),
+                     "g_labels": sds((shp["n_graphs"],), jnp.int32)}
+        loss = lambda p, bb: gnn_lib.graph_loss(p, cfg, bb)   # noqa: E731
+    else:
+        batch_abs = {"feats": sds((n, cfg.d_feat), jnp.float32),
+                     "src": sds((e,), jnp.int32),
+                     "dst": sds((e,), jnp.int32),
+                     "labels": sds((n,), jnp.int32),
+                     "mask": sds((n,), jnp.bool_)}
+        loss = lambda p, bb: gnn_lib.node_loss(p, cfg, bb)    # noqa: E731
+    step = opt_lib.make_train_step(loss, OPT_CFG)
+
+    def mk_sh(mesh):
+        psh = shard_lib.named(p_abs, mesh, shard_lib.gnn_param_spec)
+        osh = shard_lib.named(opt_abs, mesh, shard_lib.gnn_param_spec)
+        bsh = shard_lib.named(batch_abs, mesh, shard_lib.gnn_batch_spec)
+        return (psh, osh, bsh)
+
+    # message-passing flops: ~ E * (2d*d pretrans) + N * posttrans
+    d = cfg.d_hidden
+    mp_flops = cfg.n_layers * (2 * e * 2 * d * d +
+                               2 * n * (13 * d) * d) * 3   # fwd+bwd
+    return Cell(arch_id, shape_id, "train", step,
+                (p_abs, opt_abs, batch_abs), (0, 1), mk_sh,
+                {"model_flops": float(mp_flops), "n_params": n_total,
+                 "tokens": n})
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+
+_REC_INIT = {
+    "sasrec": rec_lib.init_sasrec,
+    "bert4rec": rec_lib.init_bert4rec,
+    "dien": rec_lib.init_dien,
+    "xdeepfm": rec_lib.init_xdeepfm,
+}
+_REC_LOSS = {
+    "sasrec": rec_lib.sasrec_loss,
+    "bert4rec": rec_lib.bert4rec_loss,
+    "dien": rec_lib.dien_loss,
+    "xdeepfm": rec_lib.xdeepfm_loss,
+}
+_REC_USER = {
+    "sasrec": rec_lib.sasrec_user_vec,
+    "bert4rec": rec_lib.bert4rec_user_vec,
+    "dien": rec_lib.dien_user_vec,
+    "xdeepfm": rec_lib.xdeepfm_user_vec,
+}
+
+
+def _rec_batch_abs(arch: str, cfg, b: int) -> dict:
+    i32 = jnp.int32
+    if arch == "sasrec":
+        s = cfg.seq_len
+        return {"hist": sds((b, s), i32), "pos": sds((b, s), i32),
+                "neg": sds((b, s, cfg.n_negatives), i32)}
+    if arch == "bert4rec":
+        s = cfg.seq_len
+        return {"hist": sds((b, s), i32), "targets": sds((b, s), i32),
+                "neg": sds((b, s, cfg.n_negatives), i32)}
+    if arch == "dien":
+        s = cfg.seq_len
+        return {"hist": sds((b, s), i32), "target": sds((b,), i32),
+                "label": sds((b,), jnp.float32),
+                "aux_neg": sds((b, s), i32)}
+    s = cfg.n_fields
+    shape = (b, s) if cfg.n_hot == 1 else (b, s, cfg.n_hot)
+    return {"sparse": sds(shape, i32), "label": sds((b,), jnp.float32)}
+
+
+def _rec_serve_inputs(arch: str, cfg, b: int) -> dict:
+    i32 = jnp.int32
+    if arch in ("sasrec", "bert4rec"):
+        return {"hist": sds((b, cfg.seq_len), i32)}
+    if arch == "dien":
+        return {"hist": sds((b, cfg.seq_len), i32),
+                "target": sds((b,), i32)}
+    shape = (b, cfg.n_fields) if cfg.n_hot == 1 else \
+        (b, cfg.n_fields, cfg.n_hot)
+    return {"sparse": sds(shape, i32)}
+
+
+def _rec_embed_dim(arch: str, cfg) -> int:
+    return cfg.embed_dim
+
+
+def _recsys_cell(arch_id: str, cfg, shape_id: str, shp: dict) -> Cell:
+    arch = arch_id.split("-")[0] if "-" in arch_id else arch_id
+    init_fn = _REC_INIT[arch]
+    p_abs = _params_abstract(lambda k: init_fn(k, cfg))
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p_abs))
+    b = shp["batch"]
+
+    if shp["step"] == "train":
+        opt_abs = _abstract(opt_lib.init, p_abs)
+        batch_abs = _rec_batch_abs(arch, cfg, b)
+        loss_fn = _REC_LOSS[arch]
+        step = opt_lib.make_train_step(
+            lambda p, bb: loss_fn(p, cfg, bb), OPT_CFG)
+
+        def mk_sh(mesh):
+            return (shard_lib.named(p_abs, mesh,
+                                    shard_lib.recsys_param_spec),
+                    shard_lib.named(opt_abs, mesh,
+                                    shard_lib.recsys_param_spec),
+                    shard_lib.named(batch_abs, mesh, shard_lib.batch_spec))
+
+        # dense tower flops dominate; embedding gathers dominate bytes
+        return Cell(arch_id, shape_id, "train", step,
+                    (p_abs, opt_abs, batch_abs), (0, 1), mk_sh,
+                    {"model_flops": 6.0 * _rec_dense_params(arch, cfg) * b,
+                     "n_params": n_total, "tokens": b})
+
+    if shp["step"] == "serve":
+        # Big offline batches stream through the encoder tower in user
+        # chunks (bert4rec's dense 200x200 attention at 16k users/device
+        # was ~10 GiB of temps).  The chunk structure is explicit in the
+        # INPUT LAYOUT — [n_chunks, uchunk, ...] with uchunk data-sharded
+        # and the scanned chunk dim unsharded — because dynamic-slicing a
+        # sharded batch dim makes GSPMD all-gather it (200 MiB/step
+        # measured).  Serving params are REPLICATED (the 1M x 64 table is
+        # 256 MB) so lookups and candidate dots are local.
+        uchunk = shp.get("user_chunk", 2048)
+        n_chunks = b // uchunk if (b % uchunk == 0 and b > uchunk) else 1
+        ueff = b // n_chunks
+        flat_abs = _rec_serve_inputs(arch, cfg, b)
+        inp_abs = jax.tree.map(
+            lambda x: sds((n_chunks, ueff) + x.shape[1:], x.dtype),
+            flat_abs)
+
+        def make_fn(c):
+            if arch in ("sasrec", "bert4rec"):
+                user_fn = _REC_USER[arch]
+
+                def one(params, sl):
+                    return rec_lib.retrieval_topk(
+                        user_fn(params, c, sl["hist"]),
+                        params["item_emb"], k=shp.get("topk", 100),
+                        batch_axes=c.batch_axes, tp_axis="")
+            elif arch == "dien":
+                def one(params, sl):
+                    return rec_lib.dien_forward(params, c, sl["hist"],
+                                                sl["target"])[0]
+            else:
+                def one(params, sl):
+                    return rec_lib.xdeepfm_logit(params, c, sl["sparse"])
+
+            def fn(params, inp):
+                if n_chunks == 1:
+                    return one(params, jax.tree.map(lambda x: x[0], inp))
+                return jax.lax.map(lambda sl: one(params, sl), inp)
+            return fn
+
+        fn = make_fn(cfg)
+        # out_abs via a constraint-free twin (eval_shape has no mesh)
+        cfg_plain = dataclasses.replace(cfg, batch_axes=(), tp_axis="")
+        out_abs = _abstract(make_fn(cfg_plain), p_abs, inp_abs)
+
+        def _chunk_spec(path, leaf, mesh):
+            from jax.sharding import PartitionSpec as P
+            dp = shard_lib._dp(mesh)
+            return P(None, dp, *([None] * (len(leaf.shape) - 2)))
+
+        def mk_sh(mesh):
+            return (shard_lib.named(p_abs, mesh,
+                                    shard_lib.recsys_serve_param_spec),
+                    shard_lib.named(inp_abs, mesh, _chunk_spec))
+
+        def mk_out(mesh):
+            return jax.tree.map(
+                lambda x: shard_lib.named_from_specs(
+                    _chunk_spec(None, x, mesh)
+                    if len(x.shape) >= 2 and n_chunks > 1
+                    else shard_lib.batch_spec(None, x, mesh), mesh),
+                out_abs)
+
+        retrieval_flops = (2.0 * b * rec_lib.padded_rows(cfg.n_items) *
+                           cfg.embed_dim
+                           if arch in ("sasrec", "bert4rec") else 0.0)
+        return Cell(arch_id, shape_id, "serve", fn, (p_abs, inp_abs), (),
+                    mk_sh,
+                    {"model_flops": 2.0 * _rec_dense_params(arch, cfg) * b
+                     + retrieval_flops,
+                     "n_params": n_total, "tokens": b}, mk_out)
+
+    # retrieval_cand: one query vs n_candidates (batched dot + top-k)
+    n_cand = rec_lib.padded_rows(shp["n_candidates"])
+    d = _rec_embed_dim(arch, cfg)
+    inp_abs = _rec_serve_inputs(arch, cfg, b)
+    cand_abs = sds((n_cand, d), jnp.float32)
+    user_fn = _REC_USER[arch]
+
+    def fn(params, inp, cand):
+        first = next(iter(inp.values()))
+        uv = user_fn(params, cfg, first) if arch in ("sasrec", "bert4rec") \
+            else (rec_lib.dien_user_vec(params, cfg, inp["hist"])
+                  if arch == "dien"
+                  else rec_lib.xdeepfm_user_vec(params, cfg, inp["sparse"]))
+        return rec_lib.retrieval_topk(uv, cand, k=shp.get("topk", 100),
+                                      batch_axes=cfg.batch_axes,
+                                      tp_axis=cfg.tp_axis)
+
+    def mk_sh(mesh):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        model = "model" if "model" in mesh.axis_names else None
+        return (shard_lib.named(p_abs, mesh,
+                                shard_lib.recsys_serve_param_spec),
+                shard_lib.named(inp_abs, mesh, shard_lib.batch_spec),
+                NamedSharding(mesh, P(model, None)))
+
+    return Cell(arch_id, shape_id, "retrieval", fn,
+                (p_abs, inp_abs, cand_abs), (), mk_sh,
+                {"model_flops": 2.0 * n_cand * d * b,
+                 "n_params": n_total, "tokens": b * n_cand})
+
+
+def _rec_dense_params(arch: str, cfg) -> int:
+    """Parameters touched per example (excludes embedding tables)."""
+    if arch == "sasrec":
+        return cfg.n_blocks * 6 * cfg.embed_dim ** 2 + \
+            cfg.seq_len * cfg.embed_dim
+    if arch == "bert4rec":
+        return cfg.n_blocks * 6 * cfg.embed_dim ** 2 + \
+            cfg.seq_len * cfg.embed_dim
+    if arch == "dien":
+        g, d = cfg.gru_dim, cfg.embed_dim
+        m = (g + 2 * d) * cfg.mlp_dims[0] + \
+            cfg.mlp_dims[0] * cfg.mlp_dims[1] + cfg.mlp_dims[1]
+        return 2 * 3 * (d * g + g * g) * cfg.seq_len // max(cfg.seq_len, 1) \
+            * cfg.seq_len + m
+    # xdeepfm: CIN + DNN
+    f, d = cfg.n_fields, cfg.embed_dim
+    h_prev, cin = f, 0
+    for hk in cfg.cin_layers:
+        cin += h_prev * f * hk * d
+        h_prev = hk
+    dnn = f * d * cfg.mlp_dims[0] + cfg.mlp_dims[0] * cfg.mlp_dims[1]
+    return cin // max(d, 1) + dnn

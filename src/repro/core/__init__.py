@@ -1,0 +1,10 @@
+"""Core: the paper's contribution — index storage layouts + query evaluation."""
+from repro.core.layouts import (  # noqa: F401
+    BLOCK, BlockedIndex, CompactCsrIndex, CooIndex, CsrIndex, DocTable,
+    PackedCsrIndex, PostingsHost, REPRESENTATIONS, build_blocked,
+    build_compact_csr, build_coo, build_csr, build_packed_csr,
+)
+from repro.core.build import TokenizedCorpus, add_documents, bulk_build, corpus_stats  # noqa: F401
+from repro.core.direct_index import DirectIndex, build_direct, expand_query  # noqa: F401
+from repro.core.query import QueryResult, make_scorer, score_queries, score_query  # noqa: F401
+from repro.core import size_model  # noqa: F401

@@ -1,0 +1,131 @@
+"""Index construction — the paper's §3.6 bulk "copy" pipeline.
+
+Pipeline (host-side, vectorized numpy — this is the data-ingest layer):
+
+  token streams -> (doc, term, count) triples -> lexsort by (term, doc)
+  -> df / offsets / CSR postings -> tf-idf document norms -> PostingsHost
+
+Two paths, mirroring §3.6:
+  * ``bulk_build``      — the COPY path: one big sort, no incremental
+                          maintenance, indices built once at the end.
+  * ``add_documents``   — incremental batch add: drop derived structures,
+                          merge-sort new postings in, rebuild metadata
+                          (drop-indices -> insert -> re-create, as §3.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.layouts import PostingsHost
+from repro.core.size_model import CorpusStats
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenizedCorpus:
+    """Per-document distinct terms + in-doc counts (already aggregated)."""
+    doc_term_ids: Sequence[np.ndarray]   # per-doc i64 distinct term ids
+    doc_counts: Sequence[np.ndarray]     # per-doc i64 counts (same shapes)
+    term_hashes: np.ndarray              # u32[W], id -> hash (bijective mix)
+    num_docs: int
+
+    @property
+    def num_terms(self) -> int:
+        return len(self.term_hashes)
+
+
+def _flatten(corpus: TokenizedCorpus):
+    lens = np.array([len(x) for x in corpus.doc_term_ids], dtype=np.int64)
+    doc_of = np.repeat(np.arange(corpus.num_docs, dtype=np.int64), lens)
+    terms = (np.concatenate(corpus.doc_term_ids) if len(lens) and lens.sum()
+             else np.zeros(0, np.int64))
+    counts = (np.concatenate(corpus.doc_counts) if len(lens) and lens.sum()
+              else np.zeros(0, np.int64))
+    return doc_of, terms, counts
+
+
+def _postings_from_triples(doc_of, terms, counts, num_terms, num_docs,
+                           term_hashes) -> PostingsHost:
+    order = np.lexsort((doc_of, terms))      # term-major, doc-sorted within
+    terms_s = terms[order]
+    docs_s = doc_of[order].astype(np.int32)
+    tf_s = counts[order].astype(np.float32)  # raw counts as tf (Mitos-style)
+    df = np.bincount(terms_s, minlength=num_terms).astype(np.int32)
+    offsets = np.zeros(num_terms + 1, dtype=np.int64)
+    np.cumsum(df, out=offsets[1:])
+    # tf-idf document norms (paper §3.6: computed after all docs indexed)
+    idf = np.log1p(num_docs / np.maximum(df, 1).astype(np.float64))
+    w = tf_s * idf[terms_s]
+    norm_sq = np.bincount(docs_s, weights=w * w, minlength=num_docs)
+    norm = np.sqrt(norm_sq).astype(np.float32)
+    norm[norm == 0] = 1e-12  # empty docs stay "live" but unreachable
+    rank = _pagerank_proxy(num_docs)
+    return PostingsHost(
+        term_hashes=term_hashes.astype(np.uint32), df=df,
+        offsets=offsets, doc_ids=docs_s, tfs=tf_s,
+        num_docs=num_docs, norm=norm, rank=rank,
+    )
+
+
+def _pagerank_proxy(num_docs: int, seed: int = 7) -> np.ndarray:
+    """Static-rank column (the paper stores PageRank; we store a fixed
+    pseudo-random static score so ranking paths are exercised)."""
+    rng = np.random.default_rng(seed)
+    return (rng.random(num_docs).astype(np.float32) * 1e-3)
+
+
+def bulk_build(corpus: TokenizedCorpus) -> PostingsHost:
+    """The §3.6 COPY path: one global sort, derived data computed once."""
+    doc_of, terms, counts = _flatten(corpus)
+    return _postings_from_triples(doc_of, terms, counts, corpus.num_terms,
+                                  corpus.num_docs, corpus.term_hashes)
+
+
+def add_documents(host: PostingsHost, new_corpus: TokenizedCorpus,
+                  doc_id_base: int | None = None) -> PostingsHost:
+    """Incremental batch add (drop-indices -> merge -> rebuild).
+
+    New docs get ids starting at ``doc_id_base`` (default: append).
+    Term id space must match (same term_hashes); new terms are appended.
+    """
+    base = host.num_docs if doc_id_base is None else doc_id_base
+    doc_of, terms, counts = _flatten(new_corpus)
+    doc_of = doc_of + base
+
+    # unify vocabularies: append genuinely new hashes
+    old_hash = host.term_hashes
+    new_hash = new_corpus.term_hashes
+    hash_to_old = {int(h): i for i, h in enumerate(old_hash)}
+    remap = np.empty(len(new_hash), dtype=np.int64)
+    extra = []
+    for i, h in enumerate(new_hash):
+        j = hash_to_old.get(int(h))
+        if j is None:
+            j = len(old_hash) + len(extra)
+            extra.append(h)
+        remap[i] = j
+    merged_hashes = (np.concatenate([old_hash,
+                                     np.array(extra, dtype=np.uint32)])
+                     if extra else old_hash)
+    terms = remap[terms]
+
+    # old postings back to triples, then one merged sort
+    old_terms = np.repeat(np.arange(host.num_terms, dtype=np.int64),
+                          np.diff(host.offsets))
+    all_docs = np.concatenate([host.doc_ids.astype(np.int64), doc_of])
+    all_terms = np.concatenate([old_terms, terms])
+    all_counts = np.concatenate([host.tfs.astype(np.float64),
+                                 counts.astype(np.float64)])
+    num_docs = max(host.num_docs, int(doc_of.max()) + 1 if len(doc_of) else 0,
+                   base + new_corpus.num_docs)
+    return _postings_from_triples(all_docs, all_terms, all_counts,
+                                  len(merged_hashes), num_docs,
+                                  merged_hashes)
+
+
+def corpus_stats(host: PostingsHost) -> CorpusStats:
+    return CorpusStats(D=host.num_docs, W=host.num_terms,
+                       N_d=host.num_postings,
+                       N=int(host.tfs.sum()))

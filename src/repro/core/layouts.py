@@ -1,0 +1,755 @@
+"""The paper's four index representations as TPU/HBM array layouts.
+
+Paper -> TPU mapping (see DESIGN.md §2):
+
+  PR   -> CooIndex        heap-of-tuples: postings stored in ARRIVAL (doc)
+                          order as three parallel columns, plus a B+tree
+                          analogue (a (term,doc)-sorted permutation with
+                          per-term starts).  A term's postings are scattered
+                          across the heap -> gathers are random-access, and
+                          the term-id column is stored per posting.  This is
+                          exactly why PR loses: redundant bytes + random I/O.
+
+  OR   -> CsrIndex        postings packed contiguously per term (the
+                          ARRAY-of-Point idea): offsets[W+1] + doc_ids[P] +
+                          tfs[P].  A separate word table (hash->id, df)
+                          remains, as in the paper's OR.
+
+  COR  -> CompactCsrIndex word table folded into the posting relation: the
+                          sorted term-hash array IS the lookup structure and
+                          df lives alongside.  One fewer lookup phase.
+
+  HOR  -> BlockedIndex    postings in fixed 128-lane blocks with per-block
+                          doc-id min/max summaries: the TPU analogue of
+                          hstore (keyed access within a term) + GIN (block
+                          skipping for document-based probes).
+
+  (beyond paper)
+       -> PackedCsrIndex  delta + bit-packed doc ids, fp16 tf — the "special
+                          number encodings" §3.1 says DBMSs lack.
+
+All device structures are frozen dataclass pytrees of int32/float32 arrays;
+builders are host-side numpy.  ``doc_ids`` within a term are always sorted
+ascending (as a DBMS clustered index and every IR system guarantees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segments
+
+Array = jax.Array
+
+BLOCK = 128  # posting block size: one VPU lane-width / VMEM-friendly tile
+
+
+def _register(cls):
+    names = [f.name for f in dataclasses.fields(cls)]
+    static = set(getattr(cls, "_static_fields", ()))
+    jax.tree_util.register_dataclass(
+        cls,
+        data_fields=[n for n in names if n not in static],
+        meta_fields=[n for n in names if n in static],
+    )
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# shared tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DocTable:
+    """Per-document metadata: the paper's ``document`` relation."""
+    _static_fields = ()
+    norm: Array   # f32[D]  vector norm under tf-idf (paper §3.6)
+    rank: Array   # f32[D]  PageRank-like static score
+
+    @property
+    def num_docs(self) -> int:
+        return self.norm.shape[0]
+
+    def nbytes(self) -> int:
+        return int(self.norm.nbytes + self.rank.nbytes)
+
+
+_register(DocTable)
+
+
+@dataclasses.dataclass(frozen=True)
+class SortedLookup:
+    """B+tree analogue: binary search over sorted term hashes."""
+    _static_fields = ()
+    sorted_hash: Array  # u32[W] ascending
+    perm: Array         # i32[W] sorted position -> term id
+
+    def lookup(self, hashes: Array) -> Array:
+        """u32[T] -> term ids i32[T], -1 where absent."""
+        pos = jnp.searchsorted(self.sorted_hash, hashes).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, self.sorted_hash.shape[0] - 1)
+        hit = self.sorted_hash[pos] == hashes
+        return jnp.where(hit, self.perm[pos], -1)
+
+    def nbytes(self) -> int:
+        return int(self.sorted_hash.nbytes + self.perm.nbytes)
+
+
+_register(SortedLookup)
+
+HASH_EMPTY = np.uint32(0xFFFFFFFF)
+MAX_PROBES = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class HashLookup:
+    """Open-addressed hash table analogue of a DBMS Hash index."""
+    _static_fields = ()
+    keys: Array   # u32[S], HASH_EMPTY where empty; S power of two
+    vals: Array   # i32[S]
+
+    def lookup(self, hashes: Array) -> Array:
+        size = self.keys.shape[0]
+        mask = jnp.uint32(size - 1)
+        base = (hashes * jnp.uint32(2654435761)) & mask
+        # vectorized probe: MAX_PROBES slots per query
+        probe = (base[:, None] + jnp.arange(MAX_PROBES, dtype=jnp.uint32)[None, :]) & mask
+        kk = self.keys[probe]                       # [T, MAX_PROBES]
+        hit = kk == hashes[:, None]
+        any_hit = jnp.any(hit, axis=1)
+        first = jnp.argmax(hit, axis=1)
+        slot = jnp.take_along_axis(probe, first[:, None], axis=1)[:, 0]
+        return jnp.where(any_hit, self.vals[slot], -1).astype(jnp.int32)
+
+    def nbytes(self) -> int:
+        return int(self.keys.nbytes + self.vals.nbytes)
+
+
+_register(HashLookup)
+
+
+def build_sorted_lookup(term_hashes: np.ndarray) -> SortedLookup:
+    order = np.argsort(term_hashes, kind="stable")
+    return SortedLookup(
+        sorted_hash=jnp.asarray(term_hashes[order].astype(np.uint32)),
+        perm=jnp.asarray(order.astype(np.int32)),
+    )
+
+
+def build_hash_lookup(term_hashes: np.ndarray) -> HashLookup:
+    w = len(term_hashes)
+    size = 1 << int(np.ceil(np.log2(max(4 * w, 16))))
+    while True:
+        keys = np.full(size, HASH_EMPTY, dtype=np.uint32)
+        vals = np.full(size, -1, dtype=np.int32)
+        ok = True
+        base = (term_hashes.astype(np.uint64) * 2654435761) % size
+        for tid, b in enumerate(base.astype(np.int64)):
+            placed = False
+            for p in range(MAX_PROBES):
+                s = (b + p) & (size - 1)
+                if keys[s] == HASH_EMPTY:
+                    keys[s] = term_hashes[tid]
+                    vals[s] = tid
+                    placed = True
+                    break
+            if not placed:
+                ok = False
+                break
+        if ok:
+            return HashLookup(keys=jnp.asarray(keys), vals=jnp.asarray(vals))
+        size *= 2  # grow until every key fits within MAX_PROBES
+
+
+# ---------------------------------------------------------------------------
+# Postings source-of-truth (host-side) used by all builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PostingsHost:
+    """Host (numpy) canonical postings: the logical index content."""
+    term_hashes: np.ndarray   # u32[W]  hash of each term (id == position)
+    df: np.ndarray            # i32[W]
+    # CSR over terms (term-major, doc-sorted within term):
+    offsets: np.ndarray       # i64[W+1]
+    doc_ids: np.ndarray       # i32[P]
+    tfs: np.ndarray           # f32[P]
+    num_docs: int
+    norm: np.ndarray          # f32[D]
+    rank: np.ndarray          # f32[D]
+
+    @property
+    def num_terms(self) -> int:
+        return len(self.term_hashes)
+
+    @property
+    def num_postings(self) -> int:
+        return len(self.doc_ids)
+
+    @property
+    def max_posting_len(self) -> int:
+        if self.num_terms == 0:
+            return 0
+        return int((self.offsets[1:] - self.offsets[:-1]).max())
+
+
+# ---------------------------------------------------------------------------
+# (PR) CooIndex
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CooIndex:
+    """Plain-Relational analogue: heap-of-tuples + B+tree permutation."""
+    _static_fields = ("max_posting_len",)
+    # heap columns, in arrival (doc-major) order — like tuples in a heap file
+    word_ids: Array   # i32[P]  <- the redundant column PR pays for
+    doc_ids: Array    # i32[P]
+    tfs: Array        # f32[P]
+    # "B+tree": (term,doc)-sorted permutation + per-term starts
+    perm: Array         # i32[P] sorted posting -> heap position
+    term_starts: Array  # i32[W+1]
+    df: Array           # i32[W]
+    lookup: SortedLookup | HashLookup
+    docs: DocTable
+    max_posting_len: int
+
+    @property
+    def num_terms(self) -> int:
+        return self.df.shape[0]
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        return self.lookup.lookup(hashes)
+
+    def term_df(self, term_ids: Array) -> Array:
+        safe = jnp.maximum(term_ids, 0)
+        return jnp.where(term_ids >= 0, self.df[safe], 0)
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        """q_occ for PR: read index leaves (perm) then RANDOM heap gathers."""
+        safe = jnp.maximum(term_ids, 0)
+
+        def one(tid):
+            idx, valid = segments.gather_segment(self.perm, self.term_starts,
+                                                 tid, cap)
+            d = jnp.take(self.doc_ids, idx, axis=0)
+            t = jnp.take(self.tfs, idx, axis=0)
+            # PR also streams the word_id column through the memory system;
+            # touch it so the cost is real, then mask it out.
+            w = jnp.take(self.word_ids, idx, axis=0)
+            t = t + 0.0 * w.astype(t.dtype)
+            d = jnp.where(valid, d, -1)
+            t = jnp.where(valid, t, 0.0)
+            return d, t, valid
+
+        d, t, v = jax.vmap(one)(safe)
+        present = (term_ids >= 0)[:, None]
+        return jnp.where(present, d, -1), jnp.where(present, t, 0.0), v & present
+
+    def nbytes(self) -> int:
+        n = sum(int(x.nbytes) for x in
+                (self.word_ids, self.doc_ids, self.tfs, self.perm,
+                 self.term_starts, self.df))
+        return n + self.lookup.nbytes() + self.docs.nbytes()
+
+    def posting_bytes(self) -> int:
+        return int(self.word_ids.nbytes + self.doc_ids.nbytes +
+                   self.tfs.nbytes + self.perm.nbytes)
+
+
+_register(CooIndex)
+
+
+def build_coo(h: PostingsHost, lookup: str = "btree") -> CooIndex:
+    P = h.num_postings
+    # heap order = arrival order = doc-major: sort canonical (term-major)
+    # postings by (doc, term) to synthesize the heap.
+    term_of = np.repeat(np.arange(h.num_terms, dtype=np.int64),
+                        np.diff(h.offsets))
+    heap_order = np.lexsort((term_of, h.doc_ids))      # doc-major heap
+    heap_word = term_of[heap_order].astype(np.int32)
+    heap_doc = h.doc_ids[heap_order].astype(np.int32)
+    heap_tf = h.tfs[heap_order].astype(np.float32)
+    # B+tree: sort heap positions by (term, doc)
+    perm = np.lexsort((heap_doc, heap_word)).astype(np.int32)
+    starts = np.searchsorted(heap_word[perm], np.arange(h.num_terms + 1))
+    lk = (build_sorted_lookup(h.term_hashes) if lookup == "btree"
+          else build_hash_lookup(h.term_hashes))
+    return CooIndex(
+        word_ids=jnp.asarray(heap_word), doc_ids=jnp.asarray(heap_doc),
+        tfs=jnp.asarray(heap_tf), perm=jnp.asarray(perm),
+        term_starts=jnp.asarray(starts.astype(np.int32)),
+        df=jnp.asarray(h.df.astype(np.int32)), lookup=lk,
+        docs=DocTable(norm=jnp.asarray(h.norm), rank=jnp.asarray(h.rank)),
+        max_posting_len=h.max_posting_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# (OR) CsrIndex
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CsrIndex:
+    """Object-Relational analogue: contiguous per-term posting slabs."""
+    _static_fields = ("max_posting_len",)
+    offsets: Array   # i32[W+1]
+    doc_ids: Array   # i32[P]
+    tfs: Array       # f32[P]
+    df: Array        # i32[W]   (separate word table, as in OR)
+    lookup: SortedLookup | HashLookup
+    docs: DocTable
+    max_posting_len: int
+
+    @property
+    def num_terms(self) -> int:
+        return self.df.shape[0]
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        return self.lookup.lookup(hashes)
+
+    def term_df(self, term_ids: Array) -> Array:
+        safe = jnp.maximum(term_ids, 0)
+        return jnp.where(term_ids >= 0, self.df[safe], 0)
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        """q_occ for ORIF: one contiguous slab DMA per term."""
+        safe = jnp.maximum(term_ids, 0)
+        d, v = segments.gather_segments(self.doc_ids, self.offsets, safe, cap,
+                                        fill=-1)
+        t, _ = segments.gather_segments(self.tfs, self.offsets, safe, cap,
+                                        fill=0.0)
+        present = (term_ids >= 0)[:, None]
+        return (jnp.where(present, d, -1), jnp.where(present, t, 0.0),
+                v & present)
+
+    def nbytes(self) -> int:
+        n = sum(int(x.nbytes) for x in
+                (self.offsets, self.doc_ids, self.tfs, self.df))
+        return n + self.lookup.nbytes() + self.docs.nbytes()
+
+    def posting_bytes(self) -> int:
+        return int(self.offsets.nbytes + self.doc_ids.nbytes + self.tfs.nbytes)
+
+
+_register(CsrIndex)
+
+
+def build_csr(h: PostingsHost, lookup: str = "btree") -> CsrIndex:
+    lk = (build_sorted_lookup(h.term_hashes) if lookup == "btree"
+          else build_hash_lookup(h.term_hashes))
+    return CsrIndex(
+        offsets=jnp.asarray(h.offsets.astype(np.int32)),
+        doc_ids=jnp.asarray(h.doc_ids.astype(np.int32)),
+        tfs=jnp.asarray(h.tfs.astype(np.float32)),
+        df=jnp.asarray(h.df.astype(np.int32)), lookup=lk,
+        docs=DocTable(norm=jnp.asarray(h.norm), rank=jnp.asarray(h.rank)),
+        max_posting_len=h.max_posting_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# (COR) CompactCsrIndex
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactCsrIndex:
+    """Compact OR: word table folded into the posting relation.
+
+    Terms are stored in HASH-SORTED order; the sorted hash array doubles as
+    the lookup structure (no separate word table), and df sits alongside.
+    q_word and q_occ fuse into a single phase — the paper's "one fewer
+    query".
+    """
+    _static_fields = ("max_posting_len",)
+    sorted_hash: Array  # u32[W]
+    df: Array           # i32[W]   (aligned with sorted_hash)
+    offsets: Array      # i32[W+1] (aligned with sorted_hash)
+    doc_ids: Array      # i32[P]
+    tfs: Array          # f32[P]
+    docs: DocTable
+    max_posting_len: int
+
+    @property
+    def num_terms(self) -> int:
+        return self.df.shape[0]
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        pos = jnp.searchsorted(self.sorted_hash, hashes).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, self.sorted_hash.shape[0] - 1)
+        hit = self.sorted_hash[pos] == hashes
+        return jnp.where(hit, pos, -1)
+
+    def term_df(self, term_ids: Array) -> Array:
+        safe = jnp.maximum(term_ids, 0)
+        return jnp.where(term_ids >= 0, self.df[safe], 0)
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        safe = jnp.maximum(term_ids, 0)
+        d, v = segments.gather_segments(self.doc_ids, self.offsets, safe, cap,
+                                        fill=-1)
+        t, _ = segments.gather_segments(self.tfs, self.offsets, safe, cap,
+                                        fill=0.0)
+        present = (term_ids >= 0)[:, None]
+        return (jnp.where(present, d, -1), jnp.where(present, t, 0.0),
+                v & present)
+
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in
+                   (self.sorted_hash, self.df, self.offsets, self.doc_ids,
+                    self.tfs)) + self.docs.nbytes()
+
+    def posting_bytes(self) -> int:
+        return int(self.offsets.nbytes + self.doc_ids.nbytes + self.tfs.nbytes)
+
+
+_register(CompactCsrIndex)
+
+
+def build_compact_csr(h: PostingsHost) -> CompactCsrIndex:
+    order = np.argsort(h.term_hashes, kind="stable")
+    lengths = np.diff(h.offsets)[order]
+    new_offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+    np.cumsum(lengths, out=new_offsets[1:])
+    P = h.num_postings
+    doc_ids = np.empty(P, dtype=np.int32)
+    tfs = np.empty(P, dtype=np.float32)
+    for newpos, old in enumerate(order):          # permute slabs
+        s, e = h.offsets[old], h.offsets[old + 1]
+        ns = new_offsets[newpos]
+        doc_ids[ns:ns + (e - s)] = h.doc_ids[s:e]
+        tfs[ns:ns + (e - s)] = h.tfs[s:e]
+    return CompactCsrIndex(
+        sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
+        df=jnp.asarray(h.df[order].astype(np.int32)),
+        offsets=jnp.asarray(new_offsets.astype(np.int32)),
+        doc_ids=jnp.asarray(doc_ids), tfs=jnp.asarray(tfs),
+        docs=DocTable(norm=jnp.asarray(h.norm), rank=jnp.asarray(h.rank)),
+        max_posting_len=h.max_posting_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# (HOR) BlockedIndex
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedIndex:
+    """hstore/GIN analogue: fixed-size posting blocks + per-block summaries.
+
+    Each term's postings are rounded up to multiples of BLOCK lanes
+    (padding doc_id = -1, tf = 0).  Per block we keep min/max doc id —
+    enabling (a) block-skipping doc-membership probes (document-based
+    access, paper §4.4 / GIN) and (b) aligned VMEM tiles for the Pallas
+    scoring kernel.
+    """
+    _static_fields = ("max_posting_len", "max_blocks_per_term", "block")
+    sorted_hash: Array    # u32[W]  (COR-style folded word table)
+    df: Array             # i32[W]
+    block_offsets: Array  # i32[W+1]  term -> block range
+    block_docs: Array     # i32[NB, BLOCK]  (-1 padding)
+    block_tfs: Array      # f32[NB, BLOCK]
+    block_min: Array      # i32[NB]
+    block_max: Array      # i32[NB]
+    docs: DocTable
+    max_posting_len: int
+    max_blocks_per_term: int
+    block: int = BLOCK
+
+    @property
+    def num_terms(self) -> int:
+        return self.df.shape[0]
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        pos = jnp.searchsorted(self.sorted_hash, hashes).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, self.sorted_hash.shape[0] - 1)
+        hit = self.sorted_hash[pos] == hashes
+        return jnp.where(hit, pos, -1)
+
+    def term_df(self, term_ids: Array) -> Array:
+        safe = jnp.maximum(term_ids, 0)
+        return jnp.where(term_ids >= 0, self.df[safe], 0)
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        nblk = -(-cap // self.block)
+        safe = jnp.maximum(term_ids, 0)
+
+        def one(tid):
+            start = self.block_offsets[tid]
+            nb = self.block_offsets[tid + 1] - start
+            bidx = start + jnp.arange(nblk, dtype=jnp.int32)
+            bvalid = jnp.arange(nblk, dtype=jnp.int32) < nb
+            bidx = jnp.where(bvalid, bidx, 0)
+            d = jnp.take(self.block_docs, bidx, axis=0)   # [nblk, BLOCK]
+            t = jnp.take(self.block_tfs, bidx, axis=0)
+            d = jnp.where(bvalid[:, None], d, -1).reshape(-1)
+            t = jnp.where(bvalid[:, None], t, 0.0).reshape(-1)
+            return d[:cap], t[:cap]
+
+        d, t = jax.vmap(one)(safe)
+        present = (term_ids >= 0)[:, None]
+        v = (d >= 0) & present
+        return jnp.where(present, d, -1), jnp.where(present, t, 0.0), v
+
+    def contains(self, term_ids: Array, doc_id: Array) -> Array:
+        """Doc-membership probe with block skipping (the GIN-style path)."""
+        safe = jnp.maximum(term_ids, 0)
+        nblk = self.max_blocks_per_term
+
+        def one(tid):
+            start = self.block_offsets[tid]
+            nb = self.block_offsets[tid + 1] - start
+            bidx = start + jnp.arange(nblk, dtype=jnp.int32)
+            bvalid = jnp.arange(nblk, dtype=jnp.int32) < nb
+            bidx = jnp.where(bvalid, bidx, 0)
+            hit_range = (self.block_min[bidx] <= doc_id) & \
+                        (self.block_max[bidx] >= doc_id) & bvalid
+            # only blocks whose [min,max] covers doc_id are inspected
+            d = jnp.take(self.block_docs, bidx, axis=0)
+            inblock = jnp.any(d == doc_id, axis=1)
+            return jnp.any(hit_range & inblock)
+
+        found = jax.vmap(one)(safe)
+        return found & (term_ids >= 0)
+
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in
+                   (self.sorted_hash, self.df, self.block_offsets,
+                    self.block_docs, self.block_tfs, self.block_min,
+                    self.block_max)) + self.docs.nbytes()
+
+    def posting_bytes(self) -> int:
+        return int(self.block_offsets.nbytes + self.block_docs.nbytes +
+                   self.block_tfs.nbytes + self.block_min.nbytes +
+                   self.block_max.nbytes)
+
+
+_register(BlockedIndex)
+
+
+def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
+    order = np.argsort(h.term_hashes, kind="stable")
+    lengths = np.diff(h.offsets)[order]
+    nblocks = -(-lengths // block)
+    nblocks = np.maximum(nblocks, (lengths > 0).astype(nblocks.dtype))
+    block_offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+    np.cumsum(nblocks, out=block_offsets[1:])
+    NB = int(block_offsets[-1])
+    bd = np.full((NB, block), -1, dtype=np.int32)
+    bt = np.zeros((NB, block), dtype=np.float32)
+    for newpos, old in enumerate(order):
+        s, e = h.offsets[old], h.offsets[old + 1]
+        n = e - s
+        b0 = block_offsets[newpos]
+        flat_d = bd[b0:block_offsets[newpos + 1]].reshape(-1)
+        flat_t = bt[b0:block_offsets[newpos + 1]].reshape(-1)
+        flat_d[:n] = h.doc_ids[s:e]
+        flat_t[:n] = h.tfs[s:e]
+    bmin = np.where((bd >= 0).any(axis=1),
+                    np.where(bd >= 0, bd, np.iinfo(np.int32).max).min(axis=1),
+                    0).astype(np.int32)
+    bmax = bd.max(axis=1).astype(np.int32)
+    return BlockedIndex(
+        sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
+        df=jnp.asarray(h.df[order].astype(np.int32)),
+        block_offsets=jnp.asarray(block_offsets.astype(np.int32)),
+        block_docs=jnp.asarray(bd), block_tfs=jnp.asarray(bt),
+        block_min=jnp.asarray(bmin), block_max=jnp.asarray(bmax),
+        docs=DocTable(norm=jnp.asarray(h.norm), rank=jnp.asarray(h.rank)),
+        max_posting_len=h.max_posting_len,
+        max_blocks_per_term=int(nblocks.max()) if len(nblocks) else 0,
+        block=block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# (beyond paper) PackedCsrIndex — delta + bit-packed postings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedCsrIndex:
+    """Delta+bit-packed doc ids per 128-posting block, fp16 tf.
+
+    The paper (§3.1) notes DBMSs cannot apply the number encodings that
+    make inverted files small.  On TPU we can: each block of 128 doc-id
+    deltas is packed at a per-block bit width into int32 words; a Pallas
+    kernel (kernels/packed_postings.py) unpacks blocks in VMEM.  First
+    entry of each block stores the absolute doc id's delta from
+    ``block_base``.
+    """
+    _static_fields = ("max_posting_len", "words_per_block", "block")
+    sorted_hash: Array    # u32[W]
+    df: Array             # i32[W]
+    block_offsets: Array  # i32[W+1]    term -> block range
+    block_bits: Array     # i32[NB]     bit width of this block
+    block_base: Array     # i32[NB]     absolute doc id before first entry
+    block_count: Array    # i32[NB]     valid postings in this block
+    packed: Array         # u32[NB, words_per_block]  (worst-case width)
+    block_tfs: Array      # f16[NB, BLOCK]
+    docs: DocTable
+    max_posting_len: int
+    words_per_block: int
+    block: int = BLOCK
+
+    @property
+    def num_terms(self) -> int:
+        return self.df.shape[0]
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        pos = jnp.searchsorted(self.sorted_hash, hashes).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, self.sorted_hash.shape[0] - 1)
+        hit = self.sorted_hash[pos] == hashes
+        return jnp.where(hit, pos, -1)
+
+    def term_df(self, term_ids: Array) -> Array:
+        safe = jnp.maximum(term_ids, 0)
+        return jnp.where(term_ids >= 0, self.df[safe], 0)
+
+    def unpack_block(self, b: Array) -> Tuple[Array, Array, Array]:
+        """Decode one block -> (doc_ids[BLOCK], tfs[BLOCK], valid[BLOCK])."""
+        bits = self.block_bits[b]
+        words = self.packed[b]                       # u32[words_per_block]
+        lane = jnp.arange(self.block, dtype=jnp.uint32)
+        bitpos = lane * bits.astype(jnp.uint32)
+        wi = (bitpos >> 5).astype(jnp.int32)
+        off = bitpos & jnp.uint32(31)
+        lo = words[wi] >> off
+        hi_valid = off > 0
+        hi = jnp.where(hi_valid,
+                       words[jnp.minimum(wi + 1, words.shape[0] - 1)]
+                       << (jnp.uint32(32) - off), jnp.uint32(0))
+        raw = lo | hi
+        mask = jnp.where(bits >= 32, jnp.uint32(0xFFFFFFFF),
+                         (jnp.uint32(1) << bits.astype(jnp.uint32)) - 1)
+        deltas = (raw & mask).astype(jnp.int32)
+        docs = self.block_base[b] + jnp.cumsum(deltas, dtype=jnp.int32)
+        valid = jnp.arange(self.block, dtype=jnp.int32) < self.block_count[b]
+        docs = jnp.where(valid, docs, -1)
+        tfs = jnp.where(valid, self.block_tfs[b].astype(jnp.float32), 0.0)
+        return docs, tfs, valid
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        nblk = -(-cap // self.block)
+        safe = jnp.maximum(term_ids, 0)
+
+        def one(tid):
+            start = self.block_offsets[tid]
+            nb = self.block_offsets[tid + 1] - start
+            bidx = start + jnp.arange(nblk, dtype=jnp.int32)
+            bvalid = jnp.arange(nblk, dtype=jnp.int32) < nb
+            bidx = jnp.where(bvalid, bidx, 0)
+            d, t, v = jax.vmap(self.unpack_block)(bidx)
+            d = jnp.where(bvalid[:, None], d, -1).reshape(-1)
+            t = jnp.where(bvalid[:, None], t, 0.0).reshape(-1)
+            v = (bvalid[:, None] & v).reshape(-1)
+            return d[:cap], t[:cap], v[:cap]
+
+        d, t, v = jax.vmap(one)(safe)
+        present = (term_ids >= 0)[:, None]
+        return (jnp.where(present, d, -1), jnp.where(present, t, 0.0),
+                v & present)
+
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in
+                   (self.sorted_hash, self.df, self.block_offsets,
+                    self.block_bits, self.block_base, self.block_count,
+                    self.packed, self.block_tfs)) + self.docs.nbytes()
+
+    def posting_bytes(self) -> int:
+        return int(self.block_offsets.nbytes + self.block_bits.nbytes +
+                   self.block_base.nbytes + self.block_count.nbytes +
+                   self.packed.nbytes + self.block_tfs.nbytes)
+
+
+_register(PackedCsrIndex)
+
+
+def _pack_block_np(deltas: np.ndarray, bits: int, block: int = BLOCK
+                   ) -> np.ndarray:
+    """Pack ``block`` deltas of ``bits`` width into u32 words."""
+    out = np.zeros((block * bits + 31) // 32, dtype=np.uint64)
+    for i, dv in enumerate(deltas.astype(np.uint64)):
+        bitpos = i * bits
+        wi, off = divmod(bitpos, 32)
+        out[wi] |= (dv << off) & 0xFFFFFFFF
+        spill = dv >> (32 - off) if off else 0
+        if spill and wi + 1 < len(out):
+            out[wi + 1] |= spill
+    return out.astype(np.uint32)
+
+
+def build_packed_csr(h: PostingsHost, max_bits: int = 32,
+                     block: int = BLOCK) -> PackedCsrIndex:
+    order = np.argsort(h.term_hashes, kind="stable")
+    lengths = np.diff(h.offsets)[order]
+    nblocks = np.maximum(-(-lengths // block), (lengths > 0).astype(np.int64))
+    block_offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+    np.cumsum(nblocks, out=block_offsets[1:])
+    NB = int(block_offsets[-1])
+    bits_arr = np.zeros(NB, dtype=np.int32)
+    base_arr = np.zeros(NB, dtype=np.int32)
+    count_arr = np.zeros(NB, dtype=np.int32)
+    tf_arr = np.zeros((NB, block), dtype=np.float16)
+    blocks_packed = []
+    for newpos, old in enumerate(order):
+        s, e = int(h.offsets[old]), int(h.offsets[old + 1])
+        docs = h.doc_ids[s:e].astype(np.int64)
+        tfs = h.tfs[s:e]
+        b0 = int(block_offsets[newpos])
+        for k in range(int(nblocks[newpos])):
+            lo, hi = k * block, min((k + 1) * block, len(docs))
+            blk = docs[lo:hi]
+            base = int(docs[lo - 1]) if lo > 0 else -1 if len(blk) else -1
+            prev = base if lo > 0 else -1
+            deltas = np.diff(np.concatenate([[prev], blk])).astype(np.int64)
+            width = max(1, int(deltas.max()).bit_length()) if len(deltas) else 1
+            width = min(width, max_bits)
+            padded = np.zeros(block, dtype=np.int64)
+            padded[:len(deltas)] = deltas
+            blocks_packed.append(_pack_block_np(padded, width, block))
+            bidx = b0 + k
+            bits_arr[bidx] = width
+            base_arr[bidx] = prev
+            count_arr[bidx] = len(blk)
+            tf_arr[bidx, :len(blk)] = tfs[lo:hi]
+    words_per_block = max((len(b) for b in blocks_packed), default=1)
+    packed = np.zeros((NB, words_per_block), dtype=np.uint32)
+    for i, b in enumerate(blocks_packed):
+        packed[i, :len(b)] = b
+    return PackedCsrIndex(
+        sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
+        df=jnp.asarray(h.df[order].astype(np.int32)),
+        block_offsets=jnp.asarray(block_offsets.astype(np.int32)),
+        block_bits=jnp.asarray(bits_arr), block_base=jnp.asarray(base_arr),
+        block_count=jnp.asarray(count_arr), packed=jnp.asarray(packed),
+        block_tfs=jnp.asarray(tf_arr),
+        docs=DocTable(norm=jnp.asarray(h.norm), rank=jnp.asarray(h.rank)),
+        max_posting_len=h.max_posting_len,
+        words_per_block=words_per_block,
+        block=block,
+    )
+
+
+REPRESENTATIONS = {
+    "pr": build_coo,            # Plain-Relational
+    "or": build_csr,            # Object-Relational
+    "cor": build_compact_csr,   # Compact Object-Relational
+    "hor": build_blocked,       # HStore Object-Relational
+    "packed": build_packed_csr,  # beyond-paper
+}

@@ -1,0 +1,131 @@
+"""Query evaluation — the paper's §3.7 elementary queries over any layout.
+
+The paper decomposes vector-space evaluation into three elementary
+queries (Table 3):
+
+  q_word : term name -> (term id, df)         [lookup phase]
+  q_occ  : term id   -> posting list (doc,tf) [gather phase]
+  q_doc  : doc ids   -> (norm, rank)          [doc-metadata phase]
+
+Every layout in ``core/layouts.py`` exposes ``lookup_terms`` /
+``term_df`` / ``gather_postings``; for COR/HOR/packed the lookup is fused
+into the occurrence structure (the paper's "one fewer query").  This
+module implements the shared scoring core (tf-idf cosine + static-rank
+blend), top-k, and batched evaluation.  It is also the pure-jnp oracle
+that the Pallas scoring kernel is validated against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class QueryResult(NamedTuple):
+    doc_ids: Array    # i32[k]   (-1 where fewer than k hits)
+    scores: Array     # f32[k]
+
+
+def idf(df: Array, num_docs: int) -> Array:
+    """idf = ln(1 + D/df); 0 where the term is absent (df == 0)."""
+    safe = jnp.maximum(df, 1)
+    return jnp.where(df > 0, jnp.log1p(num_docs / safe.astype(jnp.float32)),
+                     0.0)
+
+
+def accumulate_scores(doc_ids: Array, weights: Array, valid: Array,
+                      num_docs: int) -> Array:
+    """Scatter-add posting weights into a dense per-document accumulator.
+
+    doc_ids/weights/valid: [T, cap].  Invalid postings are routed to a
+    trash row (index num_docs).  Returns f32[num_docs].
+    """
+    flat_docs = jnp.where(valid, doc_ids, num_docs).reshape(-1)
+    flat_w = jnp.where(valid, weights, 0.0).reshape(-1)
+    acc = jnp.zeros((num_docs + 1,), jnp.float32)
+    acc = acc.at[flat_docs].add(flat_w, mode="drop")
+    return acc[:num_docs]
+
+
+def score_query(index: Any, query_hashes: Array, k: int, cap: int,
+                rank_blend: float = 0.0) -> QueryResult:
+    """Evaluate one query (padded term-hash vector; 0 = empty slot).
+
+    Implements the paper's three-phase evaluation: lookup -> gather ->
+    doc metadata; ranks by cosine(q, d) (+ optional static-rank blend).
+    """
+    present = query_hashes != 0
+    term_ids = index.lookup_terms(query_hashes)            # q_word
+    term_ids = jnp.where(present, term_ids, -1)
+    df = index.term_df(term_ids)
+    num_docs = index.docs.num_docs
+    idf_t = idf(df, num_docs)
+
+    d, tf, valid = index.gather_postings(term_ids, cap)    # q_occ
+    w = tf * idf_t[:, None]
+
+    scores = accumulate_scores(d, w, valid, num_docs)
+
+    # q_doc: norms + static rank for candidate docs (dense fetch here; the
+    # distributed engine fetches only per-shard candidates).
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t), 1e-12))
+    norm = index.docs.norm
+    live = norm > 0            # deleted docs have norm == 0
+    cosine = scores / (jnp.maximum(norm, 1e-12) * qnorm)
+    final = cosine + rank_blend * index.docs.rank
+    final = jnp.where(live & (scores > 0), final, -jnp.inf)
+
+    top_scores, top_docs = jax.lax.top_k(final, k)
+    hit = jnp.isfinite(top_scores)
+    return QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
+                       scores=jnp.where(hit, top_scores, 0.0))
+
+
+def score_queries(index: Any, query_hashes: Array, k: int, cap: int,
+                  rank_blend: float = 0.0) -> QueryResult:
+    """Batched evaluation: query_hashes u32[B, T]."""
+    fn = functools.partial(score_query, index, k=k, cap=cap,
+                           rank_blend=rank_blend)
+    return jax.vmap(lambda q: fn(query_hashes=q))(query_hashes)
+
+
+def make_scorer(index: Any, k: int, cap: int,
+                rank_blend: float = 0.0) -> Callable[[Array], QueryResult]:
+    """jit-compiled batched scorer with the index captured as constants."""
+    @jax.jit
+    def scorer(query_hashes: Array) -> QueryResult:
+        return score_queries(index, query_hashes, k=k, cap=cap,
+                             rank_blend=rank_blend)
+    return scorer
+
+
+# ---------------------------------------------------------------------------
+# Boolean / membership utilities (exercise document-based access paths)
+# ---------------------------------------------------------------------------
+
+
+def conjunctive_filter(index: Any, query_hashes: Array, k: int,
+                       cap: int) -> QueryResult:
+    """AND semantics: docs must contain every present query term."""
+    present = query_hashes != 0
+    term_ids = jnp.where(present, index.lookup_terms(query_hashes), -1)
+    df = index.term_df(term_ids)
+    num_docs = index.docs.num_docs
+    d, tf, valid = index.gather_postings(term_ids, cap)
+    idf_t = idf(df, num_docs)
+    w = tf * idf_t[:, None]
+    scores = accumulate_scores(d, w, valid, num_docs)
+    ones = jnp.where(valid, 1.0, 0.0)
+    counts = accumulate_scores(d, ones, valid, num_docs)
+    needed = jnp.sum(present.astype(jnp.float32))
+    ok = counts >= needed
+    final = jnp.where(ok & (index.docs.norm > 0),
+                      scores / jnp.maximum(index.docs.norm, 1e-12), -jnp.inf)
+    top_scores, top_docs = jax.lax.top_k(final, k)
+    hit = jnp.isfinite(top_scores)
+    return QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
+                       scores=jnp.where(hit, top_scores, 0.0))

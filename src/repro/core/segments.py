@@ -1,0 +1,204 @@
+"""Segment / ragged primitives shared across the framework.
+
+This module is the substrate for the paper's central idea: a ragged
+collection of variable-length lists (posting lists, adjacency lists,
+embedding bags, expert token groups) stored as ONE contiguous packed
+values array plus an ``offsets`` array — i.e. CSR.  Everything here is
+jit-compatible and static-shape friendly (TPU requires static shapes, so
+ragged structures carry a static capacity and explicit validity).
+
+Conventions
+-----------
+* ``offsets``: int32[num_segments + 1], monotonically non-decreasing,
+  ``offsets[0] == 0``, ``offsets[-1] == total valid entries``.
+* ``segment_ids``: int32[capacity] expansion of offsets; entries past the
+  valid range point at ``num_segments`` (a trash row).
+* All reductions use ``jax.ops.segment_*`` with ``indices_are_sorted`` when
+  the layout guarantees it (CSR does).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# offsets <-> segment ids
+# ---------------------------------------------------------------------------
+
+
+def lengths_to_offsets(lengths: Array) -> Array:
+    """int32[num_segments] -> int32[num_segments+1] exclusive prefix sum."""
+    lengths = lengths.astype(jnp.int32)
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(lengths, dtype=jnp.int32)]
+    )
+
+
+def offsets_to_lengths(offsets: Array) -> Array:
+    return (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+
+
+def offsets_to_segment_ids(offsets: Array, capacity: int) -> Array:
+    """Expand CSR offsets into a per-entry segment id vector.
+
+    Entries at positions >= offsets[-1] (padding) get id == num_segments,
+    which works as a trash row for ``segment_sum(..., num_segments + 1)``.
+    """
+    num_segments = offsets.shape[0] - 1
+    # searchsorted(side='right') - 1 maps position -> owning segment.
+    pos = jnp.arange(capacity, dtype=jnp.int32)
+    ids = jnp.searchsorted(offsets, pos, side="right").astype(jnp.int32) - 1
+    valid = pos < offsets[-1]
+    return jnp.where(valid, ids, num_segments)
+
+
+def segment_ids_to_offsets(segment_ids: Array, num_segments: int) -> Array:
+    """Inverse of the above for sorted segment_ids (padding id == num_segments)."""
+    counts = jnp.bincount(segment_ids, length=num_segments + 1)[:num_segments]
+    return lengths_to_offsets(counts)
+
+
+# ---------------------------------------------------------------------------
+# segment reductions
+# ---------------------------------------------------------------------------
+
+
+def segment_sum(data: Array, segment_ids: Array, num_segments: int,
+                sorted_ids: bool = True) -> Array:
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments,
+        indices_are_sorted=sorted_ids)
+
+
+def segment_max(data: Array, segment_ids: Array, num_segments: int,
+                sorted_ids: bool = True) -> Array:
+    return jax.ops.segment_max(
+        data, segment_ids, num_segments=num_segments,
+        indices_are_sorted=sorted_ids)
+
+
+def segment_min(data: Array, segment_ids: Array, num_segments: int,
+                sorted_ids: bool = True) -> Array:
+    return jax.ops.segment_min(
+        data, segment_ids, num_segments=num_segments,
+        indices_are_sorted=sorted_ids)
+
+
+def segment_mean(data: Array, segment_ids: Array, num_segments: int,
+                 sorted_ids: bool = True) -> Array:
+    total = segment_sum(data, segment_ids, num_segments, sorted_ids)
+    ones = jnp.ones(data.shape[:1], dtype=data.dtype)
+    count = segment_sum(ones, segment_ids, num_segments, sorted_ids)
+    count = jnp.maximum(count, 1)
+    if data.ndim > 1:
+        count = count.reshape((-1,) + (1,) * (data.ndim - 1))
+    return total / count
+
+
+def segment_std(data: Array, segment_ids: Array, num_segments: int,
+                sorted_ids: bool = True, eps: float = 1e-5) -> Array:
+    """Per-segment standard deviation (PNA 'std' aggregator)."""
+    mean = segment_mean(data, segment_ids, num_segments, sorted_ids)
+    mean_sq = segment_mean(data * data, segment_ids, num_segments, sorted_ids)
+    var = jnp.maximum(mean_sq - mean * mean, 0.0)
+    return jnp.sqrt(var + eps)
+
+
+def segment_softmax(logits: Array, segment_ids: Array, num_segments: int,
+                    sorted_ids: bool = True) -> Array:
+    """Softmax within each segment (GAT-style edge softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments, sorted_ids)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    denom = segment_sum(exp, segment_ids, num_segments, sorted_ids)
+    denom = jnp.maximum(denom, 1e-30)
+    return exp / denom[segment_ids]
+
+
+# ---------------------------------------------------------------------------
+# ragged gather: fetch one segment's slab (dynamic) into a fixed capacity
+# ---------------------------------------------------------------------------
+
+
+def gather_segment(values: Array, offsets: Array, segment: Array | int,
+                   capacity: int, fill=0) -> tuple[Array, Array]:
+    """Fetch segment ``segment``'s entries into a [capacity] buffer.
+
+    Returns (buffer, valid_mask).  This is the q_occ primitive: one
+    contiguous DMA slab in the CSR layout.
+    """
+    start = offsets[segment]
+    length = offsets[segment + 1] - start
+    idx = start + jnp.arange(capacity, dtype=jnp.int32)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < length
+    idx = jnp.where(valid, idx, 0)
+    buf = jnp.take(values, idx, axis=0)
+    if values.ndim == 1:
+        buf = jnp.where(valid, buf, fill)
+    else:
+        buf = jnp.where(valid[:, None], buf, fill)
+    return buf, valid
+
+
+def gather_segments(values: Array, offsets: Array, segments: Array,
+                    capacity: int, fill=0) -> tuple[Array, Array]:
+    """vmap'd gather_segment over a batch of segment ids."""
+    fn = functools.partial(gather_segment, capacity=capacity, fill=fill)
+    return jax.vmap(lambda s: fn(values, offsets, s))(segments)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag: the recsys primitive, same layout math as the paper
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table: Array, indices: Array, offsets: Array,
+                  mode: str = "sum", weights: Array | None = None) -> Array:
+    """EmbeddingBag via take + segment_sum (JAX has no native one).
+
+    ``indices`` int32[total] ragged bag members, ``offsets`` int32[bags+1].
+    This is precisely the paper's ORIF representation of a multi-valued
+    attribute: bags are packed contiguously; the bag id is never stored.
+    """
+    num_bags = offsets.shape[0] - 1
+    capacity = indices.shape[0]
+    seg = offsets_to_segment_ids(offsets, capacity)
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return segment_sum(rows, seg, num_bags)
+    if mode == "mean":
+        return segment_mean(rows, seg, num_bags)
+    if mode == "max":
+        out = segment_max(rows, seg, num_bags)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# host-side builders (numpy; used by index construction & data pipelines)
+# ---------------------------------------------------------------------------
+
+
+def pack_ragged_np(lists: Sequence[np.ndarray], pad_to: int | None = None,
+                   dtype=np.int32) -> tuple[np.ndarray, np.ndarray]:
+    """Pack a python list of 1-D arrays into (values, offsets)."""
+    lengths = np.array([len(x) for x in lists], dtype=np.int64)
+    offsets = np.zeros(len(lists) + 1, dtype=np.int64)
+    np.cumsum(lengths, out=offsets[1:])
+    total = int(offsets[-1])
+    cap = total if pad_to is None else int(pad_to)
+    if cap < total:
+        raise ValueError(f"pad_to={cap} < total={total}")
+    values = np.zeros(cap, dtype=dtype)
+    if lists:
+        values[:total] = np.concatenate(lists) if total else values[:0]
+    return values, offsets.astype(np.int32)

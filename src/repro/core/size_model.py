@@ -1,0 +1,99 @@
+"""Paper Table-4 analytic size model (§4.1).
+
+Notation (paper Table 4):
+  N    total word occurrences in the collection (with positions)
+  D    number of documents
+  N_d  sum over docs of #distinct words  (total postings)
+  W    number of distinct words (vocabulary size)
+  t    per-tuple DBMS overhead (paper: 40 bytes in PSQL)
+  f    field size (paper: 4 bytes for int4/float4)
+
+Formulas (paper §4.1):
+  PR   (no pos):  N_d * (3f + t)
+  PR   (pos):     N_d * (3f + t) + N * (3f + t)
+  ORIF (no pos):  W * (f + t) + 2 f N_d
+  ORIF (pos):     W * (f + t) + 2 f N_d + f N
+
+The inequality ORIF < PR reduces to W < N_d, always true (§4.1).
+This module reproduces those formulas exactly, plus the TPU-layout byte
+accounting used by benchmarks (true array bytes, no tuple overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PSQL_FIELD_BYTES = 4     # int4 / float4
+PSQL_TUPLE_OVERHEAD = 40  # paper §4.1
+PSQL_PAGE_BYTES = 8 * 1024
+PSQL_POINT_BYTES = 16     # paper footnote 8 (point = 2 float8)
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusStats:
+    D: int        # documents
+    W: int        # distinct words
+    N_d: int      # total postings (sum of per-doc distinct words)
+    N: int = 0    # total occurrences (only needed for position variants)
+
+    @property
+    def w_avg(self) -> float:
+        return self.N_d / max(self.D, 1)
+
+
+# Paper's own collection (§4): 1,004,721 docs, 216,449 terms, avg 239
+# distinct words per doc.
+PAPER_COLLECTION = CorpusStats(D=1_004_721, W=216_449,
+                               N_d=1_004_721 * 239, N=1_004_721 * 239 * 3)
+
+
+def pr_bytes(s: CorpusStats, positions: bool = False,
+             f: int = PSQL_FIELD_BYTES, t: int = PSQL_TUPLE_OVERHEAD) -> int:
+    base = s.N_d * (3 * f + t)
+    if positions:
+        base += s.N * (3 * f + t)
+    return base
+
+
+def orif_bytes(s: CorpusStats, positions: bool = False,
+               f: int = PSQL_FIELD_BYTES, t: int = PSQL_TUPLE_OVERHEAD) -> int:
+    base = s.W * (f + t) + 2 * f * s.N_d
+    if positions:
+        base += f * s.N
+    return base
+
+
+def pr_over_orif(s: CorpusStats, positions: bool = False) -> float:
+    return pr_bytes(s, positions) / orif_bytes(s, positions)
+
+
+def pages(nbytes: int, page: int = PSQL_PAGE_BYTES) -> int:
+    return -(-nbytes // page)
+
+
+# --- TPU-layout analytic sizes (true array bytes; see layouts.py) ---------
+
+def coo_layout_bytes(s: CorpusStats, id_bytes: int = 4, tf_bytes: int = 4) -> int:
+    """PR analogue: word_id + doc_id + tf columns, plus word & doc tables."""
+    postings = s.N_d * (2 * id_bytes + tf_bytes)
+    word_table = s.W * (id_bytes + id_bytes)          # hash, df
+    doc_table = s.D * (tf_bytes + tf_bytes)           # norm, rank
+    return postings + word_table + doc_table
+
+
+def csr_layout_bytes(s: CorpusStats, id_bytes: int = 4, tf_bytes: int = 4) -> int:
+    """OR/COR analogue: offsets + packed doc_id,tf; word_id column gone."""
+    postings = s.N_d * (id_bytes + tf_bytes)
+    offsets = (s.W + 1) * id_bytes
+    word_table = s.W * (id_bytes + id_bytes)          # hash, df
+    doc_table = s.D * (tf_bytes + tf_bytes)
+    return postings + offsets + word_table + doc_table
+
+
+def packed_csr_layout_bytes(s: CorpusStats, mean_bits: float = 12.0,
+                            tf_bytes: int = 2, id_bytes: int = 4) -> int:
+    """Beyond-paper: delta+bit-packed doc ids (mean_bits/posting) + fp16 tf."""
+    postings = int(s.N_d * mean_bits / 8) + s.N_d * tf_bytes
+    offsets = (s.W + 1) * id_bytes
+    word_table = s.W * (id_bytes + id_bytes)
+    doc_table = s.D * (2 * tf_bytes)
+    return postings + offsets + word_table + doc_table

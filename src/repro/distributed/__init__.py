@@ -1,0 +1,1 @@
+from repro.distributed import compress, decode_attn, retrieval, topk  # noqa: F401

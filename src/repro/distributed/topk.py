@@ -1,0 +1,57 @@
+"""Distributed top-k merge (document-partitioned retrieval).
+
+Each shard scores its local documents and keeps a local top-k; the
+global answer is the top-k of the all-gathered per-shard candidates —
+k·n_shards values instead of the full score vector, which is the
+standard scatter-gather trick every production search tier uses.
+
+Implemented with shard_map + jax.lax collectives, so it composes with
+the retrieval engine in distributed/retrieval.py and with the recsys
+``retrieval_cand`` cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Array = jax.Array
+
+
+def local_topk_merge(scores: Array, k: int, axis_name: str,
+                     shard_offset: Array) -> tuple[Array, Array]:
+    """Inside shard_map: scores f32[local_n] -> global (values, ids)[k].
+
+    ``shard_offset``: scalar global id of this shard's first row.
+    """
+    v, i = jax.lax.top_k(scores, k)
+    gids = i + shard_offset
+    all_v = jax.lax.all_gather(v, axis_name)         # [S, k]
+    all_g = jax.lax.all_gather(gids, axis_name)
+    flat_v = all_v.reshape(-1)
+    flat_g = all_g.reshape(-1)
+    vv, ii = jax.lax.top_k(flat_v, k)
+    return vv, flat_g[ii]
+
+
+def sharded_topk(mesh: Mesh, axis: str, scores_spec: P = None):
+    """Build a jit-able distributed top-k over a 1-D sharded score vector.
+
+    Returns fn(scores f32[N]) -> (values f32[k], global_ids i32[k]).
+    """
+    spec = scores_spec if scores_spec is not None else P(axis)
+
+    def make(k: int):
+        @functools.partial(
+            jax.shard_map, mesh=mesh, in_specs=(spec,),
+            out_specs=(P(), P()), check_vma=False)
+        def fn(scores):
+            local = scores.reshape(-1)
+            idx = jax.lax.axis_index(axis)
+            off = idx * local.shape[0]
+            return local_topk_merge(local, k, axis, off)
+        return fn
+
+    return make

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA).
+
+Online-softmax attention with VMEM-resident running (m, l, acc) carried
+across KV tiles — no S×S score matrix ever touches HBM.  Supports:
+  * causal masking,
+  * sliding windows (Mistral/Gemma local layers),
+  * GQA via the KV-head index map (no K/V repeat materialization).
+
+Block sizes are BlockSpec parameters; defaults (128, 128) match the MXU
+128×128 systolic tile.  Fully-masked KV tiles short-circuit via pl.when
+(their DMA is still issued by the pipeline — an acceptable cost at the
+window sizes used here; a production grid would prune them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, window: int,
+                  tq: int, tk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    kpos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = jnp.ones((tq, tk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+
+    # Skip tiles with no unmasked entry (beyond the causal/window frontier).
+    any_live = jnp.any(mask)
+
+    @pl.when(any_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # [tq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [tk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # [tq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, causal: bool = True,
+                           window: int = 0, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> Array:
+    """q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D]; Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    tq = min(block_q, s)
+    tk = min(block_k, s)
+    assert s % tq == 0 and s % tk == 0, (s, tq, tk)
+    nq, nk = s // tq, s // tk
+
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    def kv_map(bh, i, j):
+        return ((bh // hq) * hkv + (bh % hq) // group, j, 0)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, tq=tq, tk=tk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, tk, d), kv_map),
+            pl.BlockSpec((1, tk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, tq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,116 @@
+"""jit'd public wrappers around the Pallas kernels (+ XLA fallbacks).
+
+``backend`` selects: "pallas" (interpret=True on CPU — kernel-body
+semantics validated in Python), "pallas-tpu" (compiled, real hardware),
+or "xla" (the ref.py oracle path — also what the multi-pod dry-run
+lowers, so GSPMD sees plain HLO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layouts import BlockedIndex, PackedCsrIndex
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.packed_postings import unpack_blocks_pallas
+from repro.kernels.posting_score import TILE, build_pairs, posting_score_pallas
+from repro.kernels.segment_multi_agg import pna_multi_agg_pallas
+
+Array = jax.Array
+Backend = Literal["pallas", "pallas-tpu", "xla"]
+
+
+def _interp(backend: Backend) -> bool:
+    return backend != "pallas-tpu"
+
+
+# ---------------------------------------------------------------------------
+# posting-list scoring over a BlockedIndex (the paper's q_occ hot path)
+# ---------------------------------------------------------------------------
+
+
+def select_query_blocks(index: BlockedIndex, term_ids: Array, idf_w: Array,
+                        max_blocks_per_term: int):
+    """Selected (global block id, validity, per-block weight) for a query."""
+    safe = jnp.maximum(term_ids, 0)
+    start = index.block_offsets[safe]
+    nb = index.block_offsets[safe + 1] - start
+    k = jnp.arange(max_blocks_per_term, dtype=jnp.int32)
+    sel = (start[:, None] + k[None, :])
+    valid = (k[None, :] < nb[:, None]) & (term_ids >= 0)[:, None]
+    sel = jnp.where(valid, sel, 0)
+    w = jnp.broadcast_to(idf_w[:, None], sel.shape)
+    return sel.reshape(-1), valid.reshape(-1), w.reshape(-1)
+
+
+def blocked_query_scores(index: BlockedIndex, term_ids: Array, idf_w: Array,
+                         max_blocks_per_term: int, max_pairs: int,
+                         tile: int = TILE,
+                         backend: Backend = "pallas") -> Array:
+    """Dense per-doc scores for ONE query via the posting_score kernel."""
+    sel, valid, w = select_query_blocks(index, term_ids, idf_w,
+                                        max_blocks_per_term)
+    num_docs = index.docs.num_docs
+    if backend == "xla":
+        bd = jnp.where(valid[:, None], index.block_docs[sel], -1)
+        bt = jnp.where(valid[:, None], index.block_tfs[sel], 0.0)
+        return ref.ref_posting_score(bd, bt, w * valid, num_docs)
+    pb, pt, pw, _overflow = build_pairs(
+        sel, valid, w, index.block_min, index.block_max, num_docs,
+        max_pairs, tile)
+    return posting_score_pallas(index.block_docs, index.block_tfs,
+                                pb, pt, pw, num_docs, tile,
+                                interpret=_interp(backend))
+
+
+# ---------------------------------------------------------------------------
+# packed-posting decode
+# ---------------------------------------------------------------------------
+
+
+def unpack_postings(index: PackedCsrIndex,
+                    backend: Backend = "pallas") -> Array:
+    """Decode ALL blocks of a PackedCsrIndex -> doc ids i32[NB, block]."""
+    if backend == "xla":
+        return ref.ref_unpack_blocks(index.packed, index.block_bits,
+                                     index.block_base, index.block_count,
+                                     index.block)
+    return unpack_blocks_pallas(index.packed, index.block_bits,
+                                index.block_base, index.block_count,
+                                index.block, interpret=_interp(backend))
+
+
+# ---------------------------------------------------------------------------
+# embedding bag / PNA aggregation / attention
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table: Array, indices: Array, tile_b: int = 256,
+                  backend: Backend = "xla") -> Array:
+    if backend == "xla":
+        return ref.ref_embedding_bag(table, indices)
+    return embedding_bag_pallas(table, indices, tile_b=tile_b,
+                                interpret=_interp(backend))
+
+
+def pna_multi_agg(feats: Array, nbr: Array, tile_n: int = 128,
+                  backend: Backend = "xla") -> Array:
+    if backend == "xla":
+        return ref.ref_pna_multi_agg(feats, nbr)
+    return pna_multi_agg_pallas(feats, nbr, tile_n=tile_n,
+                                interpret=_interp(backend))
+
+
+def attention(q: Array, k: Array, v: Array, causal: bool = True,
+              window: int = 0, backend: Backend = "xla",
+              block_q: int = 128, block_k: int = 128) -> Array:
+    if backend == "xla":
+        return ref.ref_attention(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interp(backend))

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: decode delta+bit-packed posting blocks in VMEM.
+
+The beyond-paper layout (PackedCsrIndex) stores doc-id deltas bit-packed
+into u32 words — the "special number encodings" the paper says DBMSs
+lack (§3.1).  This kernel unpacks a batch of blocks: per-lane variable
+shifts (VPU) + an intra-block prefix sum.  HBM traffic per block drops
+from 512 B (int32 ids) to ``ceil(128·bits/8)`` bytes — e.g. 192 B at 12
+bits — directly attacking the memory roofline term of query evaluation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _unpack_kernel(words_ref, bits_ref, base_ref, count_ref, out_ref,
+                   *, block: int):
+    bits = bits_ref[0, 0].astype(jnp.uint32)
+    base = base_ref[0, 0]
+    count = count_ref[0, 0]
+    words = words_ref[0, :]                              # u32[Wpb]
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
+    bitpos = lane * bits
+    wi = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & jnp.uint32(31)
+    lo = words[wi] >> off
+    hi = jnp.where(off > 0,
+                   words[jnp.minimum(wi + 1, words.shape[0] - 1)]
+                   << (jnp.uint32(32) - off), jnp.uint32(0))
+    raw = lo | hi
+    mask = jnp.where(bits >= 32, jnp.uint32(0xFFFFFFFF),
+                     (jnp.uint32(1) << bits) - jnp.uint32(1))
+    deltas = (raw & mask).astype(jnp.int32)
+    docs = base + jnp.cumsum(deltas)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) < count
+    out_ref[0, :] = jnp.where(valid, docs, -1)
+
+
+def unpack_blocks_pallas(packed: Array, bits: Array, base: Array,
+                         count: Array, block: int,
+                         interpret: bool = True) -> Array:
+    """packed u32[NB, Wpb], bits/base/count i32[NB] -> doc ids i32[NB, block]."""
+    nb, wpb = packed.shape
+    kernel = functools.partial(_unpack_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.int32),
+        interpret=interpret,
+    )(packed, bits.reshape(-1, 1), base.reshape(-1, 1),
+      count.reshape(-1, 1))

@@ -1,0 +1,1 @@
+from repro.launch import hw, mesh, sharding  # noqa: F401

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes and record memory / cost / collective statistics.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+#       --shape train_4k --mesh single
+#
+# Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json and runs
+# are RESUMABLE: existing result files are skipped unless --force.  This
+# is deliverable (e): a sharding mismatch, compile-time OOM, or
+# unsupported collective here is a bug in the framework.
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    if tok_dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT-shape bytes per collective opcode (optimized HLO prints
+    operands without type annotations, so we use the lhs result shape —
+    equal to operand bytes for all-reduce / permute / all-to-all, and to
+    the gathered size for all-gather).  NOTE: ops inside while bodies are
+    counted ONCE here; benchmarks/roofline.py re-walks the saved HLO with
+    while-trip multiplication for the roofline collective term."""
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in COLLECTIVES:
+            if f" {c}(" in stripped and "=" in stripped:
+                lhs = stripped.split(f" {c}(", 1)[0]
+                for m in _SHAPE_RE.finditer(lhs):
+                    out[c] += _shape_bytes(m.group(1), m.group(2))
+                counts[c] += 1
+                break
+    out_total = sum(out.values())
+    return {"per_op_bytes": out, "counts": counts, "total_bytes": out_total}
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str,
+             out_dir: str, force: bool = False) -> dict:
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+
+    path = os.path.join(out_dir, mesh_kind, f"{arch_id}__{shape_id}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record = {"arch": arch_id, "shape": shape_id, "mesh": mesh_kind,
+              "mesh_shape": dict(zip(mesh.axis_names,
+                                     [int(mesh.shape[a])
+                                      for a in mesh.axis_names]))}
+    try:
+        cell = configs.get_arch(arch_id).cell(
+            shape_id, scale="full", mesh_axes=tuple(mesh.axis_names))
+        record["kind"] = cell.kind
+        record["meta"] = cell.meta
+        shardings = cell.make_shardings(mesh)
+        out_sh = (cell.make_out_shardings(mesh)
+                  if cell.make_out_shardings else None)
+        t0 = time.time()
+        jitted = jax.jit(cell.fn, in_shardings=shardings,
+                         out_shardings=out_sh,
+                         donate_argnums=cell.donate)
+        with mesh:
+            lowered = jitted.lower(*cell.abstract_args)
+            record["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = time.time() - t1
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        record["cost"] = {k: float(v) for k, v in dict(ca).items()
+                          if isinstance(v, (int, float, np.floating))
+                          and k in ("flops", "bytes accessed",
+                                    "transcendentals",
+                                    "utilization operand 0 {}",
+                                    "optimal_seconds")}
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes(hlo)
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+        record["ok"] = True
+    except Exception as e:                       # noqa: BLE001
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "OK" if record.get("ok") else "FAIL"
+    flops = record.get("cost", {}).get("flops", 0)
+    print(f"[{mesh_kind}] {arch_id:15s} {shape_id:14s} {status} "
+          f"lower={record.get('lower_s', 0):.1f}s "
+          f"compile={record.get('compile_s', 0):.1f}s "
+          f"flops={flops:.3g} "
+          f"coll={record.get('collectives', {}).get('total_bytes', 0):.3g}B",
+          flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro import configs
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = configs.list_cells()
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = ([args.shape] if args.shape else
+                  configs.get_arch(args.arch).shape_ids())
+        cells = [(args.arch, s) for s in shapes]
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch_id, shape_id in cells:
+            rec = run_cell(arch_id, shape_id, mesh_kind, args.out,
+                           force=args.force)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

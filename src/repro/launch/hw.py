@@ -1,0 +1,10 @@
+"""Target-hardware constants (TPU v5e-class) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per-axis usable)
+HBM_PER_CHIP = 16 * 2**30      # bytes
+VMEM_PER_CORE = 128 * 2**20    # ~VMEM budget used for BlockSpec sizing
+
+CHIPS_PER_POD = 256            # 16 x 16 single-pod mesh
+PODS = 2

@@ -1,0 +1,1 @@
+from repro.models import attention, gnn, layers, recsys, transformer  # noqa: F401

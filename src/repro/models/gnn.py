@@ -1,0 +1,146 @@
+"""PNA (Principal Neighbourhood Aggregation, arXiv:2004.05718) in JAX.
+
+Message passing runs on the paper's CSR insight (DESIGN.md §5): the
+adjacency IS a posting list — node -> sorted neighbor slab — and
+aggregation is the same gather + segment-reduce primitive as query
+evaluation.  Three execution regimes, one forward:
+
+  * full-batch (cora / ogb_products): edge-list segment reductions;
+    edges shard over the data axis under GSPMD (partial aggregates are
+    psum'd by XLA).
+  * sampled minibatch (reddit-scale): the host-side neighbor sampler
+    (train/data.py) emits a fixed-shape padded subgraph; same forward.
+  * batched small graphs (molecule): disjoint union + per-graph readout.
+
+Aggregators: mean/min/max/std (fused Pallas kernel available for the
+padded-degree regime); scalers: identity/amplification/attenuation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import segments
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PnaConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_feat: int = 1433
+    n_classes: int = 16
+    delta: float = 2.5          # avg log-degree normalizer (PNA eq. 5)
+    eps: float = 1e-5
+    # aggregators fixed: mean/min/max/std; scalers: id/amp/atten (x12)
+
+
+N_AGG = 4
+N_SCAL = 3
+
+
+def init_params(key, cfg: PnaConfig) -> dict:
+    keys = jax.random.split(key, 4)
+    d = cfg.d_hidden
+
+    def one_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            # message MLP on (h_src || h_dst)
+            "w_pre": dense_init(k1, 2 * d, d),
+            "b_pre": jnp.zeros((d,), jnp.float32),
+            # post-aggregation transform on (h || 12 aggregated channels)
+            "w_post": dense_init(k2, (N_AGG * N_SCAL + 1) * d, d),
+            "b_post": jnp.zeros((d,), jnp.float32),
+        }
+
+    return {
+        "enc": dense_init(keys[0], cfg.d_feat, d),
+        "layers": jax.vmap(one_layer)(jax.random.split(keys[1],
+                                                       cfg.n_layers)),
+        "out": dense_init(keys[2], d, cfg.n_classes),
+    }
+
+
+def _pna_layer(lp: dict, h: Array, src: Array, dst: Array, deg: Array,
+               num_nodes: int, delta: float, eps: float) -> Array:
+    """One PNA layer over an edge list (padding edges: src == dst == N)."""
+    m_in = jnp.concatenate([h[src], h[dst]], axis=-1)
+    m = jax.nn.relu(m_in @ lp["w_pre"] + lp["b_pre"])          # [E, d]
+
+    mean = segments.segment_mean(m, dst, num_nodes, sorted_ids=False)
+    mn = segments.segment_min(m, dst, num_nodes, sorted_ids=False)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    mx = segments.segment_max(m, dst, num_nodes, sorted_ids=False)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    std = segments.segment_std(m, dst, num_nodes, sorted_ids=False, eps=eps)
+    agg = jnp.concatenate([mean, mn, mx, std], axis=-1)        # [N, 4d]
+
+    logd = jnp.log1p(deg)[:, None]
+    s_amp = logd / delta
+    s_att = delta / jnp.maximum(logd, 1e-3)
+    scaled = jnp.concatenate([agg, agg * s_amp, agg * s_att], axis=-1)
+
+    upd = jnp.concatenate([h, scaled], axis=-1) @ lp["w_post"] + lp["b_post"]
+    return h + jax.nn.relu(upd)                                # residual
+
+
+def forward(params: dict, cfg: PnaConfig, feats: Array, src: Array,
+            dst: Array, num_nodes: int) -> Array:
+    """feats [N, F], edge lists [E] (pad edges point at node N) -> [N, d]."""
+    h = feats @ params["enc"]
+    # degree (in-), computed once; padding edges (dst == N) are dropped.
+    ones = jnp.ones(dst.shape[:1], jnp.float32)
+    deg = segments.segment_sum(ones, dst, num_nodes, sorted_ids=False)
+
+    # layers are stacked but few (4) and cheap: fori over stacked params
+    # via scan keeps compile size O(1) in depth.
+    def body(h, lp):
+        return _pna_layer(lp, h, src, dst, deg, num_nodes, cfg.delta,
+                          cfg.eps), None
+
+    # remat: edge-message intermediates ([E, d] x several aggregators)
+    # dominate memory at ogb_products scale; recompute them in backward.
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, params["layers"])
+    return h
+
+
+def node_logits(params: dict, cfg: PnaConfig, feats: Array, src: Array,
+                dst: Array, num_nodes: int) -> Array:
+    return forward(params, cfg, feats, src, dst, num_nodes) @ params["out"]
+
+
+def node_loss(params: dict, cfg: PnaConfig, batch: dict) -> Array:
+    """Node classification CE over ``mask``-ed nodes.
+
+    batch: feats [N,F], src/dst [E], labels i32[N], mask bool[N].
+    """
+    n = batch["feats"].shape[0]
+    logits = node_logits(params, cfg, batch["feats"], batch["src"],
+                         batch["dst"], n)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    gold = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    m = batch["mask"].astype(jnp.float32)
+    return -(gold * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def graph_loss(params: dict, cfg: PnaConfig, batch: dict) -> Array:
+    """Batched small graphs: mean-readout per graph + CE.
+
+    batch: feats [N,F], src/dst [E], graph_ids i32[N], g_labels i32[G].
+    """
+    n = batch["feats"].shape[0]
+    g = batch["g_labels"].shape[0]
+    h = forward(params, cfg, batch["feats"], batch["src"], batch["dst"], n)
+    pooled = segments.segment_mean(h, batch["graph_ids"], g,
+                                   sorted_ids=True)
+    logits = pooled @ params["out"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    gold = jnp.take_along_axis(logp, batch["g_labels"][:, None],
+                               axis=-1)[:, 0]
+    return -gold.mean()

@@ -1,0 +1,165 @@
+"""Shared neural building blocks (pure-JAX, pytree params, no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``init_*`` builds them from a
+    jax.random key, ``apply``-style functions are pure.
+  * master params are fp32; matmuls run in ``compute_dtype`` (bf16 on
+    TPU) via ``cast`` at use sites.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32) -> Array:
+    s = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), dtype) * s
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def cast(x: Array, dtype) -> Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array,
+               eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, base: float) -> Array:
+    exps = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exps)                     # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, base: float = 10_000.0) -> Array:
+    """x [..., S, D] (D even), positions [..., S] -> rotated x."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, base)                     # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu(params: dict, x: Array, dtype=jnp.bfloat16) -> Array:
+    xg = cast(x, dtype)
+    g = xg @ cast(params["w_gate"], dtype)
+    u = xg @ cast(params["w_up"], dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return (h @ cast(params["w_down"], dtype)).astype(x.dtype)
+
+
+def init_mlp(key, sizes: Sequence[int], bias: bool = True) -> dict:
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        layer = {"w": dense_init(k, sizes[i], sizes[i + 1])}
+        if bias:
+            layer["b"] = jnp.zeros((sizes[i + 1],), jnp.float32)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def mlp(params: dict, x: Array, act=jax.nn.relu, final_act: bool = False,
+        dtype=jnp.float32) -> Array:
+    n = len(params["layers"])
+    h = cast(x, dtype)
+    for i, layer in enumerate(params["layers"]):
+        h = h @ cast(layer["w"], dtype)
+        if "b" in layer:
+            h = h + cast(layer["b"], dtype)
+        if i < n - 1 or final_act:
+            h = act(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GRU / AUGRU (DIEN)
+# ---------------------------------------------------------------------------
+
+
+def init_gru(key, d_in: int, d_hidden: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_x": dense_init(k1, d_in, 3 * d_hidden),
+        "w_h": dense_init(k2, d_hidden, 3 * d_hidden),
+        "b": jnp.zeros((3 * d_hidden,), jnp.float32),
+    }
+
+
+def gru_cell(params: dict, h: Array, x: Array,
+             att: Array | None = None) -> Array:
+    """One GRU step; ``att`` (AUGRU) scales the update gate (DIEN §4.3)."""
+    d = h.shape[-1]
+    gates = x @ params["w_x"][:, :2 * d] + h @ params["w_h"][:, :2 * d] + \
+        params["b"][:2 * d]
+    r, z = jnp.split(gates, 2, axis=-1)
+    r = jax.nn.sigmoid(r)
+    z = jax.nn.sigmoid(z)
+    # candidate: n = tanh(W_nx x + (r * h) W_nh + b_n)
+    n = jnp.tanh(x @ params["w_x"][:, 2 * d:] +
+                 (r * h) @ params["w_h"][:, 2 * d:] + params["b"][2 * d:])
+    if att is not None:
+        z = z * att[..., None]
+    return (1.0 - z) * n + z * h
+
+
+def gru_scan(params: dict, xs: Array, h0: Array,
+             atts: Array | None = None) -> tuple[Array, Array]:
+    """xs [B, S, d_in] -> (final h [B, d], all h [B, S, d])."""
+    def step(h, inp):
+        if atts is None:
+            x = inp
+            h2 = gru_cell(params, h, x)
+        else:
+            x, a = inp
+            h2 = gru_cell(params, h, x, a)
+        return h2, h2
+    xs_t = jnp.swapaxes(xs, 0, 1)                   # [S, B, d]
+    inputs = xs_t if atts is None else (xs_t, jnp.swapaxes(atts, 0, 1))
+    hT, hs = jax.lax.scan(step, h0, inputs)
+    return hT, jnp.swapaxes(hs, 0, 1)

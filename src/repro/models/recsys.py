@@ -1,0 +1,519 @@
+"""Recsys architectures: SASRec, BERT4Rec, DIEN, xDeepFM.
+
+The embedding layer is where the paper's layout insight lands (DESIGN.md
+§5): item-history / multi-hot lookups are ragged bags over huge tables —
+EmbeddingBag implemented as take + segment_sum (core/segments.py) with a
+fused Pallas kernel (kernels/embedding_bag.py); this is the exact
+W(f+t)+2f·N_d vs N_d(3f+t) storage math from the paper applied to
+feature tables.
+
+Four shapes per arch (configs/): train_batch (training loss),
+serve_p99 / serve_bulk (full-model scoring), retrieval_cand (two-tower
+dot scoring of 1M candidates + top-k — the batched-dot regime, never a
+loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import segments
+from repro.models.layers import (cast, dense_init, embed_init, gru_scan,
+                                 init_gru, init_mlp, layer_norm, mlp)
+
+Array = jax.Array
+
+ROW_PAD = 512    # embedding tables pad to lane multiples so the row dim
+                 # shards evenly over any production mesh axis product
+
+
+def padded_rows(n: int) -> int:
+    return -(-n // ROW_PAD) * ROW_PAD
+
+
+# ---------------------------------------------------------------------------
+# shared: sampled softmax + two-tower retrieval scoring
+# ---------------------------------------------------------------------------
+
+
+def _sampled_softmax_chunk(user_vec, pos_ids, neg_ids, table, valid):
+    pos_e = table[pos_ids]                              # [..., d]
+    neg_e = table[neg_ids]                              # [..., K, d]
+    pos_l = (user_vec * pos_e).sum(-1, keepdims=True)   # [..., 1]
+    neg_l = jnp.einsum("...d,...kd->...k", user_vec, neg_e)
+    logits = jnp.concatenate([pos_l, neg_l], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -logp[..., 0]
+    w = valid.astype(jnp.float32)
+    return (loss * w).sum(), w.sum()
+
+
+def sampled_softmax_loss(user_vec: Array, pos_ids: Array, neg_ids: Array,
+                         table: Array, valid: Array | None = None,
+                         seq_chunk: int = 8) -> Array:
+    """CE against [pos | sampled negs].  user_vec [B,d] (or [B,S,d]),
+    pos_ids [B]([B,S]), neg_ids [B,K]([B,S,K]).
+
+    Sequence inputs are scanned in ``seq_chunk`` slices so the [B,S,K,d]
+    negative-embedding gather is never materialized (it was 26 GiB per
+    device at the bert4rec train_batch shape).
+    """
+    if valid is None:
+        valid = jnp.ones(pos_ids.shape, bool)
+    if pos_ids.ndim == 1:
+        num, den = _sampled_softmax_chunk(user_vec, pos_ids, neg_ids, table,
+                                          valid)
+        return num / jnp.maximum(den, 1.0)
+    s = pos_ids.shape[1]
+    chunk = min(seq_chunk, s)
+    if s % chunk:
+        import math
+        chunk = math.gcd(chunk, s)
+    n = s // chunk
+
+    @jax.checkpoint
+    def one(args):
+        uv, po, ne, va = args
+        return _sampled_softmax_chunk(uv, po, ne, table, va)
+
+    def body(carry, i):
+        num, den = carry
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 1)
+        dn, dd = one((sl(user_vec), sl(pos_ids), sl(neg_ids), sl(valid)))
+        return (num + dn, den + dd), None
+
+    (num, den), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 jnp.arange(n, dtype=jnp.int32))
+    return num / jnp.maximum(den, 1.0)
+
+
+def _constrain(x, batch_axes, *rest):
+    if not batch_axes and not any(rest):
+        return x
+    from jax.sharding import PartitionSpec
+    spec = [batch_axes if batch_axes else None] + \
+        [r if r else None for r in rest]
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def iterative_topk(scores: Array, k: int):
+    """Exact top-k WITHOUT sort: k rounds of (max, argmax, mask).
+
+    XLA's SPMD partitioner all-gathers the batch dimension for Sort/TopK
+    (measured: a 7.8 GiB gather at serve_bulk scale), but max/argmax/
+    where are batch-parallel — so for k << M this is the partition-safe
+    form.  cost: k * O(M) reductions.
+    """
+    m = scores.shape[-1]
+    iota = jnp.arange(m, dtype=jnp.int32)
+
+    def body(sc, _):
+        v = sc.max(axis=-1)
+        a = sc.argmax(axis=-1).astype(jnp.int32)
+        sc = jnp.where(iota == a[..., None], -jnp.inf, sc)
+        return sc, (v, a)
+
+    _, (vals, ids) = jax.lax.scan(body, scores, None, length=k)
+    return (jnp.moveaxis(vals, 0, -1), jnp.moveaxis(ids, 0, -1))
+
+
+def retrieval_topk(user_vec: Array, cand_table: Array, k: int = 100,
+                   chunk: int = 8192, batch_axes: tuple = (),
+                   tp_axis: str = ""):
+    """Score [B] queries against C candidate rows: batched dot + top-k.
+
+    Small tables: one dot + exact top-k.  Large tables (sharded serving):
+    a SORT-FREE two-phase pipeline --
+      1. scan candidate slabs (table viewed [n_chunks, chunk, d]; for a
+         row-sharded table this is a relabeling, not a reshuffle) and
+         keep k BUCKET MAXIMA per chunk -- reductions only, so every step
+         stays batch-sharded (lax.top_k here would all-gather the whole
+         [B, chunk] score matrix: 7.8 GiB/step measured on serve_bulk);
+      2. one iterative exact top-k over the n_chunks*k bucket maxima.
+    Result is bucketed-approximate overall (one winner per bucket --
+    the same scheme as TPU approx_max_k); recall@k is tested in
+    tests/test_models.py.
+    """
+    c = cand_table.shape[0]
+    if c <= chunk:
+        scores = _constrain((user_vec @ cand_table.T).astype(jnp.float32),
+                            batch_axes, None)
+        if batch_axes:
+            return iterative_topk(scores, k)
+        return jax.lax.top_k(scores, k)
+    n = -(-c // chunk)
+    chunk = c // n
+    while c % chunk:
+        n += 1
+        chunk = c // n
+    n = c // chunk
+    kb = min(k, chunk)
+    width = -(-chunk // kb)
+    pad = kb * width - chunk
+    slabs = cand_table.reshape(n, chunk, cand_table.shape[-1])
+    slabs = _constrain(slabs, None, tp_axis, None)
+
+    def body(_, xs):
+        ci, tc = xs                                     # tc [chunk, d]
+        sc = (user_vec @ tc.T).astype(jnp.float32)      # [..., chunk]
+        sc = _constrain(sc, batch_axes, None)
+        scp = jnp.pad(sc, [(0, 0)] * (sc.ndim - 1) + [(0, pad)],
+                      constant_values=-jnp.inf)
+        b = scp.reshape(sc.shape[:-1] + (kb, width))
+        v = b.max(axis=-1)                              # [..., kb]
+        a = b.argmax(axis=-1).astype(jnp.int32)
+        ids = ci * chunk + jnp.arange(kb, dtype=jnp.int32) * width + a
+        return None, (v, ids)
+
+    _, (vs, ids) = jax.lax.scan(
+        body, None, (jnp.arange(n, dtype=jnp.int32), slabs))
+    # [n, ..., kb] -> [..., n*kb]
+    flat_v = jnp.moveaxis(vs, 0, -2).reshape(vs.shape[1:-1] + (n * kb,))
+    flat_i = jnp.moveaxis(ids, 0, -2).reshape(ids.shape[1:-1] + (n * kb,))
+    flat_v = _constrain(flat_v, batch_axes, None)
+    topv, sel = iterative_topk(flat_v, k)
+    topi = jnp.take_along_axis(flat_i, sel, axis=-1)
+    return topv, topi
+
+
+# ---------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SasRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_negatives: int = 128
+    dtype: Any = jnp.float32
+    # GSPMD activation annotations (set by the cell builder on a mesh)
+    batch_axes: tuple = ()
+    tp_axis: str = ""
+
+
+def init_sasrec(key, cfg: SasRecConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.embed_dim
+
+    def one_block(k):
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        return {
+            "wq": dense_init(k1, d, d), "wk": dense_init(k2, d, d),
+            "wv": dense_init(k3, d, d), "wo": dense_init(k4, d, d),
+            "w1": dense_init(k5, d, d), "w2": dense_init(k6, d, d),
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+        }
+
+    return {
+        "item_emb": embed_init(ks[0], padded_rows(cfg.n_items), d),
+        "pos_emb": embed_init(ks[1], cfg.seq_len, d),
+        "blocks": jax.vmap(one_block)(jax.random.split(ks[2], cfg.n_blocks)),
+    }
+
+
+def _causal_attn(q, k, v, n_heads):
+    b, s, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / (hd ** 0.5)
+    m = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(m, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def sasrec_hidden(params: dict, cfg: SasRecConfig, hist: Array) -> Array:
+    """hist i32[B,S] (0 = padding item) -> hidden [B,S,d]."""
+    b, s = hist.shape
+    h = params["item_emb"][hist] + params["pos_emb"][None, :s]
+    pad = (hist == 0)[..., None]
+    h = jnp.where(pad, 0.0, h)
+
+    def body(h, blk):
+        hn = layer_norm(h, blk["ln1_g"], blk["ln1_b"])
+        a = _causal_attn(hn @ blk["wq"], hn @ blk["wk"], hn @ blk["wv"],
+                         cfg.n_heads) @ blk["wo"]
+        h = h + a
+        hn = layer_norm(h, blk["ln2_g"], blk["ln2_b"])
+        h = h + jax.nn.relu(hn @ blk["w1"]) @ blk["w2"]
+        h = jnp.where(pad, 0.0, h)
+        return h, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, params["blocks"])
+    return h
+
+
+def sasrec_loss(params: dict, cfg: SasRecConfig, batch: dict) -> Array:
+    """batch: hist [B,S], pos [B,S] (next item), neg [B,S,K]."""
+    h = sasrec_hidden(params, cfg, batch["hist"])
+    valid = batch["pos"] != 0
+    return sampled_softmax_loss(h, batch["pos"], batch["neg"],
+                                params["item_emb"], valid)
+
+
+def sasrec_user_vec(params: dict, cfg: SasRecConfig, hist: Array) -> Array:
+    return sasrec_hidden(params, cfg, hist)[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_negatives: int = 128
+    dtype: Any = jnp.float32
+    # GSPMD activation annotations (set by the cell builder on a mesh)
+    batch_axes: tuple = ()
+    tp_axis: str = ""
+
+
+def init_bert4rec(key, cfg: Bert4RecConfig) -> dict:
+    sas = SasRecConfig(n_items=cfg.n_items + 1,  # +1: [MASK] token
+                       embed_dim=cfg.embed_dim, n_blocks=cfg.n_blocks,
+                       n_heads=cfg.n_heads, seq_len=cfg.seq_len)
+    return init_sasrec(key, sas)    # init pads rows (padded_rows)
+
+
+def bert4rec_hidden(params: dict, cfg: Bert4RecConfig, hist: Array) -> Array:
+    """Bidirectional encoder (no causal mask)."""
+    b, s = hist.shape
+    h = params["item_emb"][hist] + params["pos_emb"][None, :s]
+    pad = (hist == 0)[..., None]
+    h = jnp.where(pad, 0.0, h)
+    d = cfg.embed_dim
+
+    def body(h, blk):
+        hn = layer_norm(h, blk["ln1_g"], blk["ln1_b"])
+        q, k, v = hn @ blk["wq"], hn @ blk["wk"], hn @ blk["wv"]
+        hd = d // cfg.n_heads
+        qh = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        sc = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / (hd ** 0.5)
+        sc = jnp.where(pad[:, None, None, :, 0], -1e30, sc)  # mask pad keys
+        p = jax.nn.softmax(sc, axis=-1)
+        a = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        a = a.transpose(0, 2, 1, 3).reshape(b, s, d) @ blk["wo"]
+        h = h + a
+        hn = layer_norm(h, blk["ln2_g"], blk["ln2_b"])
+        h = h + jax.nn.gelu(hn @ blk["w1"]) @ blk["w2"]
+        return h, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, params["blocks"])
+    return h
+
+
+def bert4rec_loss(params: dict, cfg: Bert4RecConfig, batch: dict) -> Array:
+    """Cloze objective: batch hist has [MASK]=n_items at masked slots;
+    targets [B,S] hold the true item there (0 elsewhere); neg [B,S,K]."""
+    h = bert4rec_hidden(params, cfg, batch["hist"])
+    valid = batch["targets"] != 0
+    return sampled_softmax_loss(h, batch["targets"], batch["neg"],
+                                params["item_emb"], valid)
+
+
+def bert4rec_user_vec(params: dict, cfg: Bert4RecConfig,
+                      hist: Array) -> Array:
+    """Serve path: [MASK] appended at the last position scores next item."""
+    return bert4rec_hidden(params, cfg, hist)[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# DIEN (arXiv:1809.03672)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DienConfig:
+    name: str = "dien"
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple = (200, 80)
+    n_negatives: int = 8
+    use_aux_loss: bool = True
+    dtype: Any = jnp.float32
+    # GSPMD activation annotations (set by the cell builder on a mesh)
+    batch_axes: tuple = ()
+    tp_axis: str = ""
+
+
+def init_dien(key, cfg: DienConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    return {
+        "item_emb": embed_init(ks[0], padded_rows(cfg.n_items), d),
+        "gru1": init_gru(ks[1], d, g),
+        "gru2": init_gru(ks[2], g, g),           # AUGRU (att-gated)
+        "att_w": dense_init(ks[3], g + d, 1),
+        "aux_w": dense_init(ks[4], g, d),
+        "mlp": init_mlp(ks[5], (g + 2 * d,) + tuple(cfg.mlp_dims) + (1,)),
+    }
+
+
+def dien_forward(params: dict, cfg: DienConfig, hist: Array,
+                 target: Array):
+    """hist i32[B,S], target i32[B] -> (logit [B], interest states)."""
+    b, s = hist.shape
+    e = params["item_emb"][hist]                           # [B,S,d]
+    t_e = params["item_emb"][target]                       # [B,d]
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    _, states = gru_scan(params["gru1"], e, h0)            # [B,S,g]
+
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(t_e[:, None], (b, s, cfg.embed_dim))],
+        axis=-1)
+    att = jax.nn.softmax(
+        (att_in @ params["att_w"])[..., 0] +
+        jnp.where(hist == 0, -1e30, 0.0), axis=-1)         # [B,S]
+    final, _ = gru_scan(params["gru2"], states, h0, atts=att)
+
+    feats = jnp.concatenate([final, t_e, (e * att[..., None]).sum(1)],
+                            axis=-1)
+    logit = mlp(params["mlp"], feats)[:, 0]
+    return logit, states, e
+
+
+def dien_loss(params: dict, cfg: DienConfig, batch: dict) -> Array:
+    """batch: hist [B,S], target [B], label f32[B], aux_neg [B,S]."""
+    logit, states, e = dien_forward(params, cfg, batch["hist"],
+                                    batch["target"])
+    loss = _bce(logit, batch["label"])
+    if cfg.use_aux_loss and "aux_neg" in batch:
+        # auxiliary loss (DIEN §4.2): h_t should predict e_{t+1} vs a neg
+        h_proj = states[:, :-1] @ params["aux_w"]          # [B,S-1,d]
+        pos_e = e[:, 1:]
+        neg_e = params["item_emb"][batch["aux_neg"][:, 1:]]
+        valid = (batch["hist"][:, 1:] != 0).astype(jnp.float32)
+        pos_l = jax.nn.log_sigmoid((h_proj * pos_e).sum(-1))
+        neg_l = jax.nn.log_sigmoid(-(h_proj * neg_e).sum(-1))
+        aux = -((pos_l + neg_l) * valid).sum() / jnp.maximum(valid.sum(), 1.)
+        loss = loss + aux
+    return loss
+
+
+def dien_user_vec(params: dict, cfg: DienConfig, hist: Array) -> Array:
+    b, s = hist.shape
+    e = params["item_emb"][hist]
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    _, states = gru_scan(params["gru1"], e, h0)
+    return states[:, -1] @ params["aux_w"]                 # project to d
+
+
+def _bce(logit: Array, label: Array) -> Array:
+    return -(label * jax.nn.log_sigmoid(logit) +
+             (1 - label) * jax.nn.log_sigmoid(-logit)).mean()
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (arXiv:1803.05170)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFmConfig:
+    name: str = "xdeepfm"
+    n_fields: int = 39
+    field_vocab: int = 1_000_000
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_dims: tuple = (400, 400)
+    n_hot: int = 1              # multi-hot arity (>1 -> EmbeddingBag path)
+    dtype: Any = jnp.float32
+    # GSPMD activation annotations (set by the cell builder on a mesh)
+    batch_axes: tuple = ()
+    tp_axis: str = ""
+
+
+def init_xdeepfm(key, cfg: XDeepFmConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    f, v, d = cfg.n_fields, cfg.field_vocab, cfg.embed_dim
+    cin_ws = []
+    h_prev = f
+    kcin = jax.random.split(ks[1], len(cfg.cin_layers))
+    for hk, k in zip(cfg.cin_layers, kcin):
+        cin_ws.append(dense_init(k, h_prev * f, hk))       # [Hk-1*F, Hk]
+        h_prev = hk
+    rows = padded_rows(f * v)
+    return {
+        "tables": embed_init(ks[0], rows, d),              # [F*V, d] fused
+        "linear": jnp.zeros((rows,), jnp.float32),         # 1st-order term
+        "cin": cin_ws,
+        "mlp": init_mlp(ks[2], (f * d,) + tuple(cfg.mlp_dims) + (1,)),
+        "cin_out": dense_init(ks[3], sum(cfg.cin_layers), 1),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def _xdeepfm_embed(params: dict, cfg: XDeepFmConfig, sparse: Array) -> tuple:
+    """sparse i32[B, F] (or [B, F, H] multi-hot) -> e [B,F,d], linear [B]."""
+    f, v = cfg.n_fields, cfg.field_vocab
+    field_off = (jnp.arange(f, dtype=jnp.int32) * v)
+    if sparse.ndim == 2:
+        ids = sparse + field_off[None, :]
+        e = params["tables"][ids]                          # [B,F,d]
+        lin = params["linear"][ids].sum(-1)                # [B]
+    else:                                                  # multi-hot bags
+        ids = sparse + field_off[None, :, None]
+        b, ff, hh = ids.shape
+        flat = ids.reshape(b * ff, hh)
+        bag = segments.embedding_bag(
+            params["tables"], flat.reshape(-1),
+            jnp.arange(0, b * ff * hh + 1, hh, dtype=jnp.int32))
+        e = bag.reshape(b, ff, -1)
+        lin = params["linear"][ids].sum((-1, -2))
+    return e, lin
+
+
+def xdeepfm_logit(params: dict, cfg: XDeepFmConfig, sparse: Array) -> Array:
+    e, lin = _xdeepfm_embed(params, cfg, sparse)           # [B,F,d]
+    b, f, d = e.shape
+
+    # CIN: x^{k+1}_h = sum_ij W^k_{ij,h} (x^k_i * x^0_j)
+    xk = e
+    pooled = []
+    for w in params["cin"]:
+        z = jnp.einsum("bid,bjd->bijd", xk, e)             # [B,Hk,F,d]
+        z = z.reshape(b, -1, d)                            # [B,Hk*F,d]
+        xk = jnp.einsum("bpd,ph->bhd", z, w)               # [B,Hk+1,d]
+        pooled.append(xk.sum(-1))                          # [B,Hk+1]
+    cin_feat = jnp.concatenate(pooled, axis=-1)
+    cin_term = (cin_feat @ params["cin_out"])[:, 0]
+
+    dnn_term = mlp(params["mlp"], e.reshape(b, f * d))[:, 0]
+    return lin + cin_term + dnn_term + params["bias"]
+
+
+def xdeepfm_loss(params: dict, cfg: XDeepFmConfig, batch: dict) -> Array:
+    logit = xdeepfm_logit(params, cfg, batch["sparse"])
+    return _bce(logit, batch["label"])
+
+
+def xdeepfm_user_vec(params: dict, cfg: XDeepFmConfig,
+                     sparse: Array) -> Array:
+    """Two-tower retrieval head: mean field embedding as the user vector."""
+    e, _ = _xdeepfm_embed(params, cfg, sparse)
+    return e.mean(axis=1)

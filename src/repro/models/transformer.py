@@ -1,0 +1,619 @@
+"""Unified decoder-only transformer covering the five assigned LM archs.
+
+One config-driven implementation provides:
+  * GQA attention (+ optional per-head qk RMS-norm)      — qwen3, gemma3
+  * interleaved local(sliding-window):global layers       — gemma3 (5:1),
+    with per-layer RoPE bases (10k local / 1M global)       mixtral (SWA)
+  * MLA latent attention (expanded prefill, absorbed decode) — minicpm3
+  * mixture-of-experts SwiGLU FFN (top-2, capacity + drop) — mixtral
+  * scan-over-layers with stacked params (compile-time O(1) in depth),
+    chunked attention and chunked softmax-CE loss so no S×S score matrix
+    or [B,S,V] logits tensor is ever materialized.
+
+Three entry points per model, matching the dry-run cells:
+  ``loss_fn``     (train_*):   tokens+labels -> scalar CE loss
+  ``prefill``     (prefill_*): tokens -> last-position logits + KV cache
+  ``decode_step`` (decode_* / long_*): one token vs a seq-len cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.models import attention as attn_lib
+from repro.models.attention import MlaDims
+from repro.models.layers import (apply_rope, cast, dense_init, embed_init,
+                                 rms_norm)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # GShard-style dispatch groups == data shards: every dispatch op
+    # (one-hot, cumsum ranks, scatter, gather) stays LOCAL to its group,
+    # so the MoE layer partitions with zero dispatch collectives.  The
+    # cell builder sets this to the mesh's dp size.
+    groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"                 # "gqa" | "mla"
+    mla: MlaDims | None = None
+    qk_norm: bool = False
+    rope_base: float = 10_000.0
+    rope_base_local: float | None = None   # local layers (gemma3: 10k)
+    window: int = 0                   # sliding window (0 = full attention)
+    global_every: int = 0             # every Nth layer is global (gemma3: 6)
+    moe: MoeConfig | None = None
+    post_norm: bool = False           # sandwich norms (gemma3)
+    embed_scale: float | None = None  # sqrt(d) for gemma, 12 for minicpm3
+    residual_scale: float = 1.0       # minicpm3 depth-scaled residuals
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    chunk_q: int = 512
+    loss_chunk: int = 2048
+    remat: bool = True
+    # ring (window-sized) decode cache: valid when EVERY layer is
+    # windowed (mixtral SWA).  Slot order is irrelevant — RoPE is baked
+    # into K at write time — so `slot = pos % window` needs no remapping
+    # and the cache shrinks seq_len/window (8x at decode_32k, 128x at
+    # long_500k).  The paper's thesis, applied to attention state.
+    ring_cache: bool = False
+    # unroll the decode layer loop: avoids XLA's widen-and-hoist of
+    # per-layer bf16->f32 operand converts (a CPU-backend pessimization
+    # that also bloats the while state); trades compile time.
+    decode_unroll: bool = False
+    # GSPMD activation-sharding annotations (set by the cell builder when
+    # lowering on a production mesh; empty = no constraints, e.g. tests).
+    batch_axes: tuple = ()
+    tp_axis: str = ""
+    # residual-stream dtype: f32 is the conservative default; bf16 halves
+    # every TP activation all-reduce/-gather and the saved SP residuals
+    # (hillclimb (a): turns qwen3 train_4k from collective- to
+    # compute-bound).  Master weights/optimizer stay f32 either way.
+    residual_dtype: Any = jnp.float32
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def layer_is_global(self) -> jnp.ndarray:
+        """bool[L]: which layers use full (global) attention."""
+        if self.window <= 0:
+            return jnp.ones((self.n_layers,), jnp.bool_)
+        if self.global_every <= 0:
+            return jnp.zeros((self.n_layers,), jnp.bool_)   # all windowed
+        idx = jnp.arange(self.n_layers)
+        return (idx + 1) % self.global_every == 0
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            return 0
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def _constrain(x, cfg: "TransformerConfig", *spec):
+    """with_sharding_constraint if the config names mesh axes.
+
+    ``spec`` entries: "batch" -> cfg.batch_axes, "tp" -> cfg.tp_axis,
+    None -> unsharded.
+    """
+    if not cfg.batch_axes and not cfg.tp_axis:
+        return x
+    parts = []
+    for e in spec:
+        if e == "batch":
+            parts.append(cfg.batch_axes if cfg.batch_axes else None)
+        elif e == "tp":
+            parts.append(cfg.tp_axis if cfg.tp_axis else None)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*parts))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model)}
+
+    if cfg.attn == "mla":
+        assert cfg.mla is not None
+        p["attn"] = _stack(keys[1], cfg.n_layers,
+                           lambda k: attn_lib.init_mla(k, cfg.d_model, cfg.mla))
+    else:
+        def one_attn(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            d, hd = cfg.d_model, cfg.head_dim
+            prm = {
+                "wq": dense_init(k1, d, cfg.n_heads * hd),
+                "wk": dense_init(k2, d, cfg.n_kv_heads * hd),
+                "wv": dense_init(k3, d, cfg.n_kv_heads * hd),
+                "wo": dense_init(k4, cfg.n_heads * hd, d),
+            }
+            if cfg.qk_norm:
+                prm["q_gamma"] = jnp.zeros((hd,), jnp.float32)
+                prm["k_gamma"] = jnp.zeros((hd,), jnp.float32)
+            return prm
+        p["attn"] = _stack(keys[1], cfg.n_layers, one_attn)
+
+    if cfg.moe is None:
+        def one_mlp(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"w_gate": dense_init(k1, cfg.d_model, cfg.d_ff),
+                    "w_up": dense_init(k2, cfg.d_model, cfg.d_ff),
+                    "w_down": dense_init(k3, cfg.d_ff, cfg.d_model)}
+    else:
+        E = cfg.moe.n_experts
+
+        def one_mlp(k):
+            k0, k1, k2, k3 = jax.random.split(k, 4)
+            return {
+                "router": dense_init(k0, cfg.d_model, E),
+                "w_gate": jax.vmap(lambda kk: dense_init(
+                    kk, cfg.d_model, cfg.d_ff))(jax.random.split(k1, E)),
+                "w_up": jax.vmap(lambda kk: dense_init(
+                    kk, cfg.d_model, cfg.d_ff))(jax.random.split(k2, E)),
+                "w_down": jax.vmap(lambda kk: dense_init(
+                    kk, cfg.d_ff, cfg.d_model))(jax.random.split(k3, E)),
+            }
+    p["mlp"] = _stack(keys[2], cfg.n_layers, one_mlp)
+
+    p["pre_attn_norm"] = jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32)
+    p["pre_mlp_norm"] = jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32)
+    if cfg.post_norm:
+        p["post_attn_norm"] = jnp.zeros((cfg.n_layers, cfg.d_model),
+                                        jnp.float32)
+        p["post_mlp_norm"] = jnp.zeros((cfg.n_layers, cfg.d_model),
+                                       jnp.float32)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[3], cfg.d_model, cfg.vocab)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _gqa_qkv(prm: dict, x: Array, positions: Array, rope_base: Array,
+             cfg: TransformerConfig):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    xg = cast(x, cfg.dtype)
+    q = (xg @ cast(prm["wq"], cfg.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (xg @ cast(prm["wk"], cfg.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (xg @ cast(prm["wv"], cfg.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, prm["q_gamma"])
+        k = rms_norm(k, prm["k_gamma"])
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions[:, None, :], rope_base)
+    k = apply_rope(k, positions[:, None, :], rope_base)
+    q = _constrain(q, cfg, "batch", "tp", None, None)
+    k = _constrain(k, cfg, "batch", "tp", None, None)
+    v = _constrain(v, cfg, "batch", "tp", None, None)
+    return q, k, v
+
+
+def _moe_ffn(prm: dict, x: Array, moe: MoeConfig, dtype,
+             cfg: "TransformerConfig | None" = None,
+             dropless: bool = False) -> Array:
+    """Capacity-based top-k MoE with GROUPED (GShard) dispatch.
+
+    x [N, d] tokens, reshaped [G, N/G, d] with G == data shards so the
+    group dim inherits the batch sharding: one-hot gating, cumsum ranks,
+    the capacity-slot scatter, and the combine gather are all LOCAL to a
+    group — no dispatch collectives.  Capacity is per group (exactly how
+    GShard/MaxText define it).  Expert weights stay FSDP-sharded; XLA
+    all-gathers them per layer (ZeRO-3 style).
+    """
+    n, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    g = moe.groups if moe.groups > 0 and n % max(moe.groups, 1) == 0 else 1
+    ng = n // g
+    # dropless (decode): every expert can hold every token — decode
+    # batches are tiny and production decoders never drop tokens.
+    cap = ng if dropless else max(int(moe.capacity_factor * ng * k / e), 1)
+    xg = cast(x, dtype).reshape(g, ng, d)
+    if cfg is not None:
+        xg = _constrain(xg, cfg, "batch", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xg,
+                        cast(prm["router"], dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, k)                 # [G, ng, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # per-(group, expert) ranks via slot-sequential cumsum (no sort)
+    prev = jnp.zeros((g, 1, e), jnp.float32)
+    ranks = []
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_e[..., j], e, dtype=jnp.float32)
+        pos = jnp.cumsum(oh, axis=1) - oh + prev             # [G, ng, e]
+        ranks.append(jnp.sum(oh * pos, axis=-1))             # [G, ng]
+        prev = prev + jnp.sum(oh, axis=1, keepdims=True)
+    rank = jnp.stack(ranks, axis=-1).astype(jnp.int32)       # [G, ng, k]
+
+    keep = rank < cap
+    slot = jnp.where(keep, gate_e * cap + rank, e * cap)     # [G, ng, k]
+
+    buf = jnp.zeros((g, e * cap + 1, d), dtype)
+    updates = xg[:, :, None, :] * keep[..., None].astype(dtype)
+    if cfg is not None:
+        updates = _constrain(updates, cfg, "batch", None, None, None)
+    # vmap over the group dim -> a scatter with operand BATCH dims, which
+    # GSPMD keeps local per shard.  (The broadcast-iota [g,1,1] indexing
+    # form was NOT pattern-matched: it replicated + all-reduced the full
+    # dispatch buffer — ~4 GiB/layer of wire on mixtral-8x22b.)
+    buf = jax.vmap(lambda bg, sg, ug: bg.at[sg].add(ug, mode="drop"))(
+        buf, slot, updates)
+    buf = buf[:, :e * cap].reshape(g, e, cap, d)
+    if cfg is not None:
+        buf = _constrain(buf, cfg, "batch", None, None, None)
+
+    gg = jnp.einsum("gecd,edf->gecf", buf, cast(prm["w_gate"], dtype))
+    uu = jnp.einsum("gecd,edf->gecf", buf, cast(prm["w_up"], dtype))
+    hh = jax.nn.silu(gg.astype(jnp.float32)).astype(dtype) * uu
+    out = jnp.einsum("gecf,efd->gecd", hh, cast(prm["w_down"], dtype))
+    out = out.reshape(g, e * cap, d)
+    if cfg is not None:
+        out = _constrain(out, cfg, "batch", None, None)
+
+    safe = jnp.minimum(slot, e * cap - 1)
+    gathered = jax.vmap(lambda og, sg: og[sg])(out, safe)    # [G, ng, k, d]
+    gathered = gathered * keep[..., None]
+    combined = (gathered * gate_w[..., None].astype(dtype)).sum(axis=2)
+    return combined.reshape(n, d).astype(x.dtype)
+
+
+def _dense_ffn(prm: dict, x: Array, dtype) -> Array:
+    xg = cast(x, dtype)
+    g = xg @ cast(prm["w_gate"], dtype)
+    u = xg @ cast(prm["w_up"], dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return (h @ cast(prm["w_down"], dtype)).astype(x.dtype)
+
+
+def _layer_fwd(cfg: TransformerConfig, x: Array, layer_params: dict,
+               is_global: Array, positions: Array, want_cache: bool):
+    """One transformer block (shared by train/prefill).  x [B,S,d].
+
+    Sequence parallelism: the layer carry arrives SEQ-SHARDED over the
+    tensor axis (saved activations / remat residuals are 1/|model| the
+    size — Megatron-SP); it is gathered here and re-scattered at the
+    end, which GSPMD lowers to the all-gather / reduce-scatter pair.
+    """
+    x = _constrain(x, cfg, "batch", None, None)     # gather seq
+    b, s, d = x.shape
+    rope_base = jnp.where(
+        is_global, cfg.rope_base,
+        cfg.rope_base_local if cfg.rope_base_local else cfg.rope_base)
+    window = jnp.where(is_global, 0, cfg.window)
+
+    h = rms_norm(x, layer_params["pre_attn_norm"])
+    cache = None
+    if cfg.attn == "mla":
+        q, kk, vv, c_kv, k_rope = attn_lib.mla_qkv(
+            layer_params["attn"], h, positions, cfg.mla, cfg.rope_base,
+            cfg.dtype)
+        o = attn_lib.chunked_attention(q, kk, vv, causal=True,
+                                       window=0, chunk=cfg.chunk_q,
+                                       remat=cfg.remat)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        o = (cast(o, cfg.dtype) @
+             cast(layer_params["attn"]["w_o"], cfg.dtype)).astype(x.dtype)
+        if want_cache:
+            cache = (c_kv.astype(cfg.dtype), k_rope.astype(cfg.dtype))
+    else:
+        q, kk, vv = _gqa_qkv(layer_params["attn"], h, positions, rope_base,
+                             cfg)
+        o = attn_lib.chunked_attention(q, kk, vv, causal=True, window=window,
+                                       chunk=cfg.chunk_q, remat=cfg.remat)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        o = (cast(o, cfg.dtype) @
+             cast(layer_params["attn"]["wo"], cfg.dtype)).astype(x.dtype)
+        if want_cache:
+            cache = (kk.astype(cfg.dtype), vv.astype(cfg.dtype))
+    if cfg.post_norm:
+        o = rms_norm(o, layer_params["post_attn_norm"])
+    x = x + cfg.residual_scale * o
+
+    h = rms_norm(x, layer_params["pre_mlp_norm"])
+    if cfg.moe is not None:
+        f = _moe_ffn(layer_params["mlp"], h.reshape(b * s, d), cfg.moe,
+                     cfg.dtype, cfg).reshape(b, s, d)
+    else:
+        f = _dense_ffn(layer_params["mlp"], h, cfg.dtype)
+    if cfg.post_norm:
+        f = rms_norm(f, layer_params["post_mlp_norm"])
+    x = x + cfg.residual_scale * f
+    x = _constrain(x, cfg, "batch", "tp", None)     # re-scatter seq (SP)
+    return x, cache
+
+
+def _split_layer_params(params: dict, cfg: TransformerConfig):
+    """Stacked per-layer params fed to lax.scan as xs."""
+    out = {"attn": params["attn"], "mlp": params["mlp"],
+           "pre_attn_norm": params["pre_attn_norm"],
+           "pre_mlp_norm": params["pre_mlp_norm"]}
+    if cfg.post_norm:
+        out["post_attn_norm"] = params["post_attn_norm"]
+        out["post_mlp_norm"] = params["post_mlp_norm"]
+    return out
+
+
+def backbone(params: dict, cfg: TransformerConfig, tokens: Array,
+             want_cache: bool = False):
+    """tokens i32[B,S] -> hidden [B,S,d] (+ stacked cache if requested)."""
+    b, s = tokens.shape
+    # cast the table BEFORE the row gather: XLA otherwise all-gathers the
+    # f32 master table (594 MiB on qwen3) instead of the bf16 copy.
+    x = cast(params["embed"], cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.embed_scale, cfg.dtype)
+    x = x.astype(cfg.residual_dtype)
+    # seq-sharded (SP) between layers: the scan's saved residuals are
+    # 1/|model| the size; each layer gathers at entry, scatters at exit.
+    x = _constrain(x, cfg, "batch", "tp", None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    is_global = cfg.layer_is_global()
+
+    layer_xs = (_split_layer_params(params, cfg), is_global)
+
+    def body(carry, xs):
+        # anchor the loop-carried (and remat-saved) residual to the
+        # seq-sharded SP layout — without this the [L,B,S,d] saved stack
+        # materializes seq-unsharded (measured 24 GiB/device on 8x22b).
+        carry = _constrain(carry, cfg, "batch", "tp", None)
+        lp, ig = xs
+        y, cache = _layer_fwd(cfg, carry, lp, ig, positions, want_cache)
+        return y, cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, layer_xs)
+    x = rms_norm(x, params["final_norm"])
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# losses / entry points
+# ---------------------------------------------------------------------------
+
+
+def _logits_matrix(params: dict, cfg: TransformerConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_xent(h: Array, w_out: Array, targets: Array, chunk: int,
+                 dtype, cfg: "TransformerConfig | None" = None) -> Array:
+    """Mean CE without materializing [B,S,V]: scan over seq chunks."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        import math
+        chunk = math.gcd(chunk, s)   # fallback for odd test lengths
+    n = s // chunk
+
+    w_cast = cast(w_out, dtype)   # hoisted: one bf16 copy, gathered once
+
+    def one(hc, tc):
+        logits = (cast(hc, dtype) @ w_cast).astype(jnp.float32)
+        if cfg is not None:
+            # pin [B(batch), chunk, V(tp)] — without this GSPMD resolves
+            # the tied-embedding grad by replicating the batch (~19 GiB
+            # f32 logits buffers per device; measured on qwen3 train_4k).
+            logits = _constrain(logits, cfg, "batch", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    one = jax.checkpoint(one)
+
+    def scan_body(tot, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        return tot + one(hc, tc), None
+
+    tot, _ = jax.lax.scan(scan_body, jnp.zeros((), jnp.float32),
+                          jnp.arange(n, dtype=jnp.int32))
+    return tot / (b * s)
+
+
+def loss_fn(params: dict, cfg: TransformerConfig, batch: dict) -> Array:
+    """batch: tokens i32[B,S], labels i32[B,S] -> scalar CE."""
+    h, _ = backbone(params, cfg, batch["tokens"], want_cache=False)
+    return chunked_xent(h, _logits_matrix(params, cfg), batch["labels"],
+                        cfg.loss_chunk, cfg.dtype, cfg)
+
+
+class PrefillResult(NamedTuple):
+    logits: Array       # [B, V] at the last position
+    cache: Any          # stacked per-layer cache
+    cache_len: Array    # i32[B]
+
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: Array
+            ) -> PrefillResult:
+    h, caches = backbone(params, cfg, tokens, want_cache=True)
+    last = h[:, -1, :]
+    logits = (cast(last, cfg.dtype) @
+              cast(_logits_matrix(params, cfg), cfg.dtype)
+              ).astype(jnp.float32)
+    b, s = tokens.shape
+    # next write position is s: pad the cache (pad_cache) before decoding.
+    cache_len = jnp.full((b,), s, jnp.int32)
+    return PrefillResult(logits=logits, cache=caches, cache_len=cache_len)
+
+
+def pad_cache(cache, max_len: int, cfg: TransformerConfig):
+    """Grow a prefill cache [L,B,...,S,...] to ``max_len`` slots for decode."""
+    def grow(x, axis):
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, max_len - x.shape[axis])
+        return jnp.pad(x, pad)
+    if cfg.attn == "mla":
+        c, kr = cache
+        # prefill emits [L,B,S,dim]
+        return (grow(c, 2), grow(kr, 2))
+    k, v = cache
+    # prefill emits [L,B,Hkv,S,hd]
+    return (grow(k, 3), grow(v, 3))
+
+
+def cache_slots(cfg: TransformerConfig, seq: int) -> int:
+    if cfg.ring_cache and cfg.window > 0 and cfg.global_every == 0:
+        return min(seq, cfg.window)
+    return seq
+
+
+def init_cache(cfg: TransformerConfig, batch: int, seq: int) -> Any:
+    """Zeroed decode cache (stacked over layers)."""
+    seq = cache_slots(cfg, seq)
+    if cfg.attn == "mla":
+        c = jnp.zeros((cfg.n_layers, batch, seq, cfg.mla.kv_lora), cfg.dtype)
+        kr = jnp.zeros((cfg.n_layers, batch, seq, cfg.mla.rope), cfg.dtype)
+        return (c, kr)
+    k = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.head_dim),
+                  cfg.dtype)
+    v = jnp.zeros_like(k)
+    return (k, v)
+
+
+def decode_step(params: dict, cfg: TransformerConfig, cache: Any,
+                tokens: Array, cache_len: Array):
+    """One decode step.  tokens i32[B,1]; cache holds ``seq`` slots;
+    the new token's K/V is written at position ``cache_len``.
+
+    Returns (logits [B,V], new_cache, new_cache_len).
+    """
+    b = tokens.shape[0]
+    x = cast(params["embed"], cfg.dtype)[tokens[:, 0]][:, None, :]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.embed_scale, cfg.dtype)
+    x = x.astype(cfg.residual_dtype)
+    is_global = cfg.layer_is_global()
+    positions = cache_len[:, None]                        # [B,1]
+
+    layer_xs = (_split_layer_params(params, cfg), is_global, cache)
+
+    def body(carry, xs):
+        lp, ig, layer_cache = xs
+        y, new_cache = _decode_layer(cfg, carry, lp, ig, layer_cache,
+                                     cache_len)
+        return y, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, layer_xs,
+                                unroll=cfg.n_layers if cfg.decode_unroll
+                                else 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = (cast(x[:, 0], cfg.dtype) @
+              cast(_logits_matrix(params, cfg), cfg.dtype)
+              ).astype(jnp.float32)
+    return logits, new_cache, cache_len + 1
+
+
+def _decode_layer(cfg: TransformerConfig, x: Array, lp: dict,
+                  is_global: Array, layer_cache, cache_len: Array):
+    b = x.shape[0]
+    window = jnp.where(is_global, 0, cfg.window)
+    rope_base = jnp.where(
+        is_global, cfg.rope_base,
+        cfg.rope_base_local if cfg.rope_base_local else cfg.rope_base)
+
+    h = rms_norm(x, lp["pre_attn_norm"])
+    if cfg.attn == "mla":
+        c_cache, kr_cache = layer_cache
+        xg = cast(h[:, 0:1, :], cfg.dtype)
+        c_new = rms_norm(xg @ cast(lp["attn"]["w_dkv"], cfg.dtype),
+                         lp["attn"]["kv_norm"])
+        kr_new = apply_rope((xg @ cast(lp["attn"]["w_kr"], cfg.dtype)),
+                            cache_len[:, None], cfg.rope_base)
+        bidx = jnp.arange(b)
+        c_cache = c_cache.at[bidx, cache_len].set(
+            c_new[:, 0].astype(c_cache.dtype))
+        kr_cache = kr_cache.at[bidx, cache_len].set(
+            kr_new[:, 0].astype(kr_cache.dtype))
+        o = attn_lib.mla_decode(lp["attn"], h, c_cache, kr_cache, cache_len,
+                                cfg.mla, cfg.rope_base, cfg.dtype)
+        new_cache = (c_cache, kr_cache)
+    else:
+        k_cache, v_cache = layer_cache                    # [B,Hkv,S,hd]
+        n_slots = k_cache.shape[2]
+        ring = cfg.ring_cache and cfg.window > 0 and cfg.global_every == 0
+        hd = cfg.head_dim
+        xg = cast(h, cfg.dtype)
+        q = (xg @ cast(lp["attn"]["wq"], cfg.dtype)
+             ).reshape(b, 1, cfg.n_heads, hd)
+        kk = (xg @ cast(lp["attn"]["wk"], cfg.dtype)
+              ).reshape(b, 1, cfg.n_kv_heads, hd)
+        vv = (xg @ cast(lp["attn"]["wv"], cfg.dtype)
+              ).reshape(b, 1, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["attn"]["q_gamma"])
+            kk = rms_norm(kk, lp["attn"]["k_gamma"])
+        q = apply_rope(q.transpose(0, 2, 1, 3), cache_len[:, None, None],
+                       rope_base)
+        kk = apply_rope(kk.transpose(0, 2, 1, 3), cache_len[:, None, None],
+                        rope_base)
+        vv = vv.transpose(0, 2, 1, 3)
+        bidx = jnp.arange(b)
+        slot = cache_len % n_slots if ring else cache_len
+        k_cache = k_cache.at[bidx, :, slot, :].set(
+            kk[:, :, 0, :].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, :, slot, :].set(
+            vv[:, :, 0, :].astype(v_cache.dtype))
+        # ring cache holds exactly the window -> plain validity masking
+        # (slots <= tokens seen); non-ring uses the positional window.
+        o = attn_lib.decode_attention(q, k_cache, v_cache, cache_len,
+                                      window=0 if ring else window)
+        o = o.reshape(b, 1, -1)
+        o = (cast(o, cfg.dtype) @ cast(lp["attn"]["wo"], cfg.dtype)
+             ).astype(x.dtype)
+        new_cache = (k_cache, v_cache)
+    if cfg.post_norm:
+        o = rms_norm(o, lp["post_attn_norm"])
+    x = x + cfg.residual_scale * o
+
+    h = rms_norm(x, lp["pre_mlp_norm"])
+    if cfg.moe is not None:
+        f = _moe_ffn(lp["mlp"], h.reshape(b, -1), cfg.moe, cfg.dtype,
+                     None, dropless=True).reshape(b, 1, -1)
+    else:
+        f = _dense_ffn(lp["mlp"], h, cfg.dtype)
+    if cfg.post_norm:
+        f = rms_norm(f, lp["post_mlp_norm"])
+    x = x + cfg.residual_scale * f
+    return x, new_cache

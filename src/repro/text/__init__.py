@@ -1,0 +1,2 @@
+from repro.text.corpus import CorpusSpec, PAPER_SPEC, generate, sample_query_terms  # noqa: F401
+from repro.text.tokenizer import tokenize, stem, fnv1a, hash_terms, mix32  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.train import checkpoint, data, elastic, loop, optimizer  # noqa: F401

@@ -1,0 +1,126 @@
+"""Atomic, versioned, mesh-elastic checkpointing (no orbax).
+
+Layout on disk:
+  <dir>/step_<N>/arrays.npz      flattened pytree leaves by index
+  <dir>/step_<N>/manifest.json   treedef repr, shapes/dtypes, metadata
+  <dir>/step_<N>/.complete       commit marker (written LAST)
+
+Guarantees:
+  * atomic: a checkpoint is only considered valid once ``.complete``
+    exists; interrupted writes are garbage-collected on the next save.
+  * elastic restore: leaves are restored host-side then ``device_put``
+    with whatever sharding the CURRENT mesh prescribes — a job restarted
+    on a different device count re-shards transparently (train/elastic).
+  * keep_last trimming for bounded disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPLETE = ".complete"
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def save(ckpt_dir: str, step: int, tree: Any, metadata: dict | None = None,
+         keep_last: int = 3) -> str:
+    """Write one checkpoint atomically; returns the committed path."""
+    leaves, treedef = jax.tree.flatten(tree)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = _step_dir(ckpt_dir, step)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "shapes": [list(np.shape(x)) for x in leaves],
+            "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, COMPLETE), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(_step_dir(ckpt_dir, s), ignore_errors=True)
+    # remove orphaned tmp dirs from crashed saves
+    for name in os.listdir(ckpt_dir):
+        if name.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(ckpt_dir, name, COMPLETE)):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree template).
+
+    ``shardings``: optional pytree of NamedSharding matching ``like`` —
+    leaves are placed directly onto the current mesh (elastic restore).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = _step_dir(ckpt_dir, step)
+    if not os.path.exists(os.path.join(d, COMPLETE)):
+        raise FileNotFoundError(f"checkpoint {d} incomplete")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    _, treedef = jax.tree.flatten(like)
+    like_leaves = jax.tree.leaves(like)
+    assert len(leaves) == len(like_leaves), \
+        f"leaf count mismatch: {len(leaves)} vs {len(like_leaves)}"
+    cast = [np.asarray(a).astype(np.asarray(b).dtype if hasattr(b, 'dtype')
+                                 else a.dtype)
+            for a, b in zip(leaves, like_leaves)]
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        placed = [jax.device_put(a, s) for a, s in zip(cast, sh_leaves)]
+    else:
+        placed = [jnp.asarray(a) for a in cast]
+    return treedef.unflatten(placed), step
+
+
+def read_metadata(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(_step_dir(ckpt_dir, step), "manifest.json")) as f:
+        return json.load(f)["metadata"]

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# src/ layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_host():
+    """A small synthetic corpus + canonical postings, shared per session."""
+    from repro.core import build
+    from repro.text import corpus
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=400, vocab=900,
+                                           avg_distinct=30, seed=11))
+    return build.bulk_build(tc)
+
+
+@pytest.fixture(scope="session")
+def query_hashes(small_host):
+    from repro.text import corpus
+    return corpus.sample_query_terms(small_host.df, small_host.term_hashes,
+                                     6, 4, num_docs=small_host.num_docs,
+                                     seed=3)

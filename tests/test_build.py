@@ -1,0 +1,63 @@
+"""Index construction: bulk vs incremental; direct index; expansion."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build, direct_index, layouts, query
+from repro.text import corpus
+
+
+def test_bulk_equals_incremental():
+    """§3.6: building in two batches == building in one pass."""
+    spec = corpus.CorpusSpec(num_docs=120, vocab=300, avg_distinct=20,
+                             seed=5)
+    tc = corpus.generate(spec)
+    full = build.bulk_build(tc)
+
+    half = 60
+    tc1 = build.TokenizedCorpus(tc.doc_term_ids[:half], tc.doc_counts[:half],
+                                tc.term_hashes, half)
+    tc2 = build.TokenizedCorpus(tc.doc_term_ids[half:], tc.doc_counts[half:],
+                                tc.term_hashes, tc.num_docs - half)
+    part = build.bulk_build(tc1)
+    merged = build.add_documents(part, tc2)
+    assert merged.num_postings == full.num_postings
+    np.testing.assert_array_equal(merged.df, full.df)
+    np.testing.assert_array_equal(merged.doc_ids, full.doc_ids)
+    np.testing.assert_allclose(merged.norm, full.norm, rtol=1e-6)
+
+
+def test_corpus_stats(small_host):
+    st = build.corpus_stats(small_host)
+    assert st.D == small_host.num_docs
+    assert st.W == small_host.num_terms
+    assert st.N_d == small_host.num_postings
+    assert st.N_d >= st.W     # the paper's key inequality premise
+
+
+def test_direct_vs_scan_expansion(small_host, query_hashes):
+    """§4.4: direct-index expansion == full-scan expansion (fast vs slow)."""
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    r = query.score_query(ix, jnp.asarray(query_hashes[0]), k=5, cap=cap)
+    di = direct_index.build_direct(small_host)
+    fast = direct_index.expand_query(di, r.doc_ids, small_host.num_terms,
+                                     cap=di.max_doc_len)
+    slow = direct_index.expand_query_scan(ix, r.doc_ids,
+                                          small_host.num_terms)
+    np.testing.assert_allclose(np.asarray(fast.weights),
+                               np.asarray(slow.weights), rtol=1e-5)
+    assert np.asarray(fast.term_ids).tolist() == \
+        np.asarray(slow.term_ids).tolist()
+
+
+def test_relevance_feedback(small_host, query_hashes):
+    di = direct_index.build_direct(small_host)
+    ix = layouts.build_csr(small_host)
+    q = jnp.asarray(query_hashes[0])
+    tids = ix.lookup_terms(q)
+    r = query.score_query(ix, q, k=3, cap=small_host.max_posting_len)
+    fb = direct_index.relevance_feedback(di, r.doc_ids, tids,
+                                         small_host.num_terms,
+                                         cap=di.max_doc_len)
+    assert (np.asarray(fb.weights) >= 0).all()
+    assert (np.asarray(fb.term_ids) >= -1).all()

@@ -1,0 +1,128 @@
+"""Distributed engine tests — run in a subprocess with 8 host devices
+(XLA_FLAGS must be set before jax initializes; the main test process
+must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.text import corpus
+from repro.core import build, layouts, query
+from repro.distributed import retrieval, compress, decode_attn, topk
+
+mesh = jax.make_mesh((8,), ("data",))
+
+tc = corpus.generate(corpus.CorpusSpec(num_docs=640, vocab=500,
+                                       avg_distinct=30, seed=9))
+host = build.bulk_build(tc)
+ref_ix = layouts.build_csr(host)
+qh = corpus.sample_query_terms(host.df, host.term_hashes, 3, 3,
+                               num_docs=host.num_docs)
+
+# 1) document-partitioned == single-node (scores AND doc sets)
+ds = retrieval.build_doc_sharded(host, 8)
+scorer = retrieval.make_doc_sharded_scorer(ds, mesh, "data", k=10)
+for q in qh:
+    vv, ids = scorer(jnp.asarray(q))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(vv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(np.asarray(ids).tolist()) == \
+        set(np.asarray(ref.doc_ids).tolist())
+
+# 2) term-partitioned == single-node
+ts = retrieval.build_term_sharded(host, 8)
+tscorer = retrieval.make_term_sharded_scorer(ts, mesh, "data", k=10)
+for q in qh:
+    tv, ti = tscorer(jnp.asarray(q))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(ref.scores),
+                               rtol=1e-5)
+
+# 3) distributed top-k over a sharded score vector
+fn = topk.sharded_topk(mesh, "data")(5)
+scores = jnp.arange(64, dtype=jnp.float32)
+v, i = fn(scores)
+assert np.asarray(i).tolist() == [63, 62, 61, 60, 59]
+
+# 4) int8 compressed grad mean ~ identity within quantization error
+x = jnp.asarray(np.random.default_rng(0).normal(size=(128,))
+                .astype(np.float32))
+cm = jax.jit(jax.shard_map(
+    lambda v: compress.quantized_psum_mean(v, "data", 8),
+    mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False))
+np.testing.assert_allclose(np.asarray(cm(x)), np.asarray(x), rtol=0.1,
+                           atol=0.05)
+
+# 5) split-K decode attention == single-device oracle
+from repro.models.attention import decode_attention
+rng = np.random.default_rng(1)
+q = jnp.asarray(rng.normal(size=(2, 4, 1, 16)).astype(np.float32))
+kc = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
+vc = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
+cl = jnp.asarray([50, 63], jnp.int32)
+sk = decode_attn.splitk_decode_attention(mesh, "data")
+for w in (0, 16):
+    got = sk(q, kc, vc, cl, window=w)
+    want = decode_attention(q, kc, vc, cl, window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+# 6) GSPMD decode attention with seq-sharded cache == oracle (the
+#    long_500k cell's partitioning, small scale)
+from jax.sharding import NamedSharding
+kc_sh = jax.device_put(kc, NamedSharding(mesh, P(None, None, "data", None)))
+vc_sh = jax.device_put(vc, NamedSharding(mesh, P(None, None, "data", None)))
+got = jax.jit(decode_attention)(q, kc_sh, vc_sh, cl)
+want = decode_attention(q, kc, vc, cl)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                           atol=1e-5)
+print("DISTRIBUTED_ALL_OK")
+"""
+
+
+@pytest.mark.parametrize("n_dev", [8])
+def test_distributed_suite(n_dev):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=500)
+    assert "DISTRIBUTED_ALL_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_smoke_cell_dryrun_on_host_mesh():
+    """Lower+compile a smoke cell on a tiny 4-device mesh end to end —
+    the same machinery the production dry-run uses."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    script = r"""
+import jax
+from repro import configs
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+for arch_id, shape_id in [("qwen3-0.6b", "train_4k"),
+                          ("mixtral-8x7b", "decode_32k"),
+                          ("pna", "full_graph_sm"),
+                          ("xdeepfm", "serve_bulk")]:
+    cell = configs.get_arch(arch_id).cell(shape_id, scale="smoke",
+                                          mesh_axes=("data", "model"))
+    sh = cell.make_shardings(mesh)
+    with mesh:
+        c = jax.jit(cell.fn, in_shardings=sh,
+                    donate_argnums=cell.donate).lower(
+            *cell.abstract_args).compile()
+    assert c.memory_analysis() is not None
+print("SMOKE_DRYRUN_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=500)
+    assert "SMOKE_DRYRUN_OK" in out.stdout, out.stderr[-3000:]

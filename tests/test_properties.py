@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build, layouts, query
+from repro.core.layouts import _pack_block_np
+from repro.kernels import ref
+from repro.text import corpus
+
+
+@st.composite
+def corpora(draw):
+    docs = draw(st.integers(20, 120))
+    vocab = draw(st.integers(20, 200))
+    avg = draw(st.integers(3, 20))
+    seed = draw(st.integers(0, 10_000))
+    return corpus.CorpusSpec(num_docs=docs, vocab=vocab, avg_distinct=avg,
+                             seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(spec=corpora(), qseed=st.integers(0, 100))
+def test_all_layouts_rank_identically(spec, qseed):
+    """INVARIANT: the four representations + packed return the same
+    ranked results for any corpus and any query (paper Table 3)."""
+    host = build.bulk_build(corpus.generate(spec))
+    if host.num_postings == 0:
+        return
+    qh = corpus.sample_query_terms(host.df, host.term_hashes, 1, 3,
+                                   num_docs=host.num_docs, seed=qseed)[0]
+    cap = max(host.max_posting_len, 1)
+    results = {}
+    for name, bld in [("pr", layouts.build_coo),
+                      ("or", layouts.build_csr),
+                      ("cor", layouts.build_compact_csr),
+                      ("hor", lambda h: layouts.build_blocked(h, block=16)),
+                      ("packed",
+                       lambda h: layouts.build_packed_csr(h, block=16))]:
+        r = query.score_query(bld(host), jnp.asarray(qh), k=5, cap=cap)
+        results[name] = np.asarray(r.scores)
+    for name, sc in results.items():
+        np.testing.assert_allclose(sc, results["or"], rtol=3e-3, atol=1e-5,
+                                   err_msg=name)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=64),
+       st.integers(0, 2**16))
+def test_pack_unpack_roundtrip(deltas, base):
+    """bit-pack -> unpack is the identity for any delta list."""
+    deltas = np.array(deltas, np.int64)
+    deltas[0] = max(int(deltas[0]), 1)      # first delta >= 1 (doc > base)
+    block = 64
+    deltas = deltas[:block]
+    width = max(1, int(deltas.max()).bit_length())
+    padded = np.zeros(block, np.int64)
+    padded[:len(deltas)] = deltas
+    words = _pack_block_np(padded, width, block)
+    docs = ref.ref_unpack_block(
+        jnp.asarray(words), jnp.int32(width), jnp.int32(base - 1),
+        jnp.int32(len(deltas)), block)
+    expect = (base - 1) + np.cumsum(deltas)
+    np.testing.assert_array_equal(np.asarray(docs)[:len(deltas)], expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=corpora())
+def test_incremental_build_invariant(spec):
+    """Splitting the corpus at any point yields the identical index."""
+    tc = corpus.generate(spec)
+    full = build.bulk_build(tc)
+    cut = max(1, spec.num_docs // 3)
+    a = build.TokenizedCorpus(tc.doc_term_ids[:cut], tc.doc_counts[:cut],
+                              tc.term_hashes, cut)
+    b = build.TokenizedCorpus(tc.doc_term_ids[cut:], tc.doc_counts[cut:],
+                              tc.term_hashes, tc.num_docs - cut)
+    merged = build.add_documents(build.bulk_build(a), b)
+    np.testing.assert_array_equal(merged.doc_ids, full.doc_ids)
+    np.testing.assert_array_equal(merged.df, full.df)
+    np.testing.assert_allclose(merged.norm, full.norm, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 50))
+def test_scores_bounded_by_cosine(d, seed):
+    """Scores are cosine similarities -> bounded by ~1 + rank blend."""
+    spec = corpus.CorpusSpec(num_docs=max(d, 20), vocab=60, avg_distinct=8,
+                             seed=seed)
+    host = build.bulk_build(corpus.generate(spec))
+    ix = layouts.build_csr(host)
+    qh = corpus.sample_query_terms(host.df, host.term_hashes, 1, 2,
+                                   num_docs=host.num_docs, seed=seed)[0]
+    r = query.score_query(ix, jnp.asarray(qh), k=5,
+                          cap=max(host.max_posting_len, 1))
+    sc = np.asarray(r.scores)
+    assert (sc[np.isfinite(sc)] <= 1.0 + 1e-5).all()

@@ -1,0 +1,58 @@
+"""Query evaluation vs a brute-force numpy oracle."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layouts, query
+
+
+def brute_force_scores(host, hashes):
+    """Direct tf-idf cosine from the canonical postings."""
+    h2t = {int(h): i for i, h in enumerate(host.term_hashes)}
+    scores = np.zeros(host.num_docs)
+    idf = {}
+    w2 = 0.0
+    for h in hashes:
+        t = h2t.get(int(h))
+        if t is None or h == 0:
+            continue
+        idf_t = np.log1p(host.num_docs / max(host.df[t], 1))
+        idf[t] = idf_t
+        w2 += idf_t ** 2
+        s, e = host.offsets[t], host.offsets[t + 1]
+        scores[host.doc_ids[s:e]] += host.tfs[s:e] * idf_t
+    qnorm = np.sqrt(max(w2, 1e-12))
+    return scores / (np.maximum(host.norm, 1e-12) * qnorm)
+
+
+def test_matches_brute_force(small_host, query_hashes):
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    for q in query_hashes[:3]:
+        r = query.score_query(ix, jnp.asarray(q), k=10, cap=cap)
+        ref = brute_force_scores(small_host, q)
+        order = np.argsort(ref)[::-1][:10]
+        np.testing.assert_allclose(np.asarray(r.scores), ref[order],
+                                   rtol=1e-5)
+
+
+def test_conjunctive_is_subset_of_disjunctive(small_host, query_hashes):
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    q = jnp.asarray(query_hashes[0][:2])
+    conj = query.conjunctive_filter(ix, q, k=50, cap=cap)
+    h2t = {int(h): i for i, h in enumerate(small_host.term_hashes)}
+    for d in np.asarray(conj.doc_ids):
+        if d < 0:
+            continue
+        for h in np.asarray(q):
+            t = h2t[int(h)]
+            s, e = small_host.offsets[t], small_host.offsets[t + 1]
+            assert d in small_host.doc_ids[s:e]
+
+
+def test_absent_and_empty_terms(small_host):
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    q = jnp.asarray([0, 0, 0, 0], dtype=jnp.uint32)      # empty query
+    r = query.score_query(ix, q, k=5, cap=cap)
+    assert (np.asarray(r.doc_ids) == -1).all()

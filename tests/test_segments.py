@@ -1,0 +1,82 @@
+"""Segment/ragged primitives vs numpy (+ hypothesis roundtrips)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segments
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=20))
+def test_offsets_segment_ids_roundtrip(lengths):
+    lengths = np.array(lengths, np.int32)
+    offs = segments.lengths_to_offsets(jnp.asarray(lengths))
+    assert (np.asarray(segments.offsets_to_lengths(offs)) == lengths).all()
+    cap = int(lengths.sum()) + 3
+    ids = segments.offsets_to_segment_ids(offs, cap)
+    back = segments.segment_ids_to_offsets(ids, len(lengths))
+    assert (np.asarray(back) == np.asarray(offs)).all()
+
+
+def test_segment_reductions_vs_numpy():
+    rng = np.random.default_rng(0)
+    ids = np.sort(rng.integers(0, 10, 100)).astype(np.int32)
+    x = rng.normal(size=(100, 4)).astype(np.float32)
+    for name, fn, npfn in [
+        ("sum", segments.segment_sum, np.sum),
+        ("max", segments.segment_max, np.max),
+        ("min", segments.segment_min, np.min),
+        ("mean", segments.segment_mean, np.mean),
+    ]:
+        out = np.asarray(fn(jnp.asarray(x), jnp.asarray(ids), 10))
+        for s in range(10):
+            rows = x[ids == s]
+            if len(rows):
+                np.testing.assert_allclose(out[s], npfn(rows, axis=0),
+                                           rtol=1e-5, err_msg=name)
+
+
+def test_segment_std_and_softmax():
+    rng = np.random.default_rng(1)
+    ids = np.sort(rng.integers(0, 5, 50)).astype(np.int32)
+    x = rng.normal(size=(50,)).astype(np.float32)
+    std = np.asarray(segments.segment_std(jnp.asarray(x), jnp.asarray(ids),
+                                          5, eps=0.0))
+    for s in range(5):
+        rows = x[ids == s]
+        if len(rows):
+            np.testing.assert_allclose(std[s], rows.std(), rtol=1e-4,
+                                       atol=1e-5)
+    sm = np.asarray(segments.segment_softmax(jnp.asarray(x),
+                                             jnp.asarray(ids), 5))
+    for s in range(5):
+        if (ids == s).any():
+            np.testing.assert_allclose(sm[ids == s].sum(), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_embedding_bag_property(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    v, d, bags = 20, 3, data.draw(st.integers(1, 6))
+    lengths = data.draw(st.lists(st.integers(0, 5), min_size=bags,
+                                 max_size=bags))
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    idx = rng.integers(0, v, sum(lengths)).astype(np.int32)
+    offs = np.zeros(bags + 1, np.int32)
+    np.cumsum(lengths, out=offs[1:])
+    out = np.asarray(segments.embedding_bag(
+        jnp.asarray(table), jnp.asarray(idx), jnp.asarray(offs)))
+    for b in range(bags):
+        ref = table[idx[offs[b]:offs[b + 1]]].sum(axis=0) if lengths[b] \
+            else np.zeros(d)
+        np.testing.assert_allclose(out[b], ref, rtol=1e-5, atol=1e-6)
+
+
+def test_gather_segment():
+    vals = jnp.arange(10, dtype=jnp.int32)
+    offs = jnp.asarray([0, 3, 3, 10], jnp.int32)
+    buf, valid = segments.gather_segment(vals, offs, 0, capacity=5, fill=-1)
+    assert np.asarray(buf).tolist() == [0, 1, 2, -1, -1]
+    buf, valid = segments.gather_segment(vals, offs, 1, capacity=5, fill=-1)
+    assert not np.asarray(valid).any()

@@ -1,0 +1,56 @@
+"""Paper Table 4 analytic size model (+ hypothesis properties)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import size_model as sm
+
+
+def test_paper_collection_ratio():
+    """Paper Table 4/5 reproduction, claim by claim.
+
+    * analytic Table-4 model (f=4, t=40): PR/ORIF ~ 6.5x — tuple-overhead
+      elimination alone;
+    * the paper's MEASURED 20x (Table 5) additionally includes PSQL
+      TOAST/LZ compression of the packed point arrays (240.8M 16-byte
+      points stored in 28,577 8KB pages = ~1 B/point).  Our beyond-paper
+      PackedCsrIndex (delta+bitpack) is the explicit analogue: packed vs
+      PR reaches the measured order of magnitude.
+    """
+    s = sm.PAPER_COLLECTION
+    assert sm.pr_over_orif(s) > 5.0                    # analytic claim
+    # absolute numbers in the right regime (PR ~10.7GB measured)
+    assert 8e9 < sm.pr_bytes(s) < 14e9
+    # compression-equivalent claim: packed layout vs PR > 10x
+    ratio = sm.pr_bytes(s) / sm.packed_csr_layout_bytes(s)
+    assert ratio > 10.0
+    # PR per-tuple bytes match Table 5: 10.7GB / 240.8M tuples ~ 44 B
+    measured_pr = 1_301_657 * 8192 / 240_806_511
+    analytic_pr = sm.pr_bytes(s) / s.N_d
+    assert abs(measured_pr - analytic_pr) / analytic_pr < 0.25
+
+
+@settings(max_examples=200, deadline=None)
+@given(d=st.integers(1, 10**7), w_avg=st.integers(1, 5000),
+       vocab=st.integers(1, 10**6))
+def test_orif_always_smaller(d, w_avg, vocab):
+    """The paper's inequality: ORIF < PR  <=>  W < N_d (always true)."""
+    n_d = d * w_avg
+    w = min(vocab, n_d)   # every term appears at least once
+    s = sm.CorpusStats(D=d, W=w, N_d=n_d, N=3 * n_d)
+    assert sm.orif_bytes(s) <= sm.pr_bytes(s)
+    assert sm.orif_bytes(s, positions=True) <= sm.pr_bytes(s, positions=True)
+
+
+@settings(max_examples=100, deadline=None)
+@given(d=st.integers(1, 10**6), w_avg=st.integers(1, 500))
+def test_positions_monotone(d, w_avg):
+    s = sm.CorpusStats(D=d, W=min(10**5, d * w_avg), N_d=d * w_avg,
+                       N=3 * d * w_avg)
+    assert sm.pr_bytes(s, positions=True) >= sm.pr_bytes(s)
+    assert sm.orif_bytes(s, positions=True) >= sm.orif_bytes(s)
+
+
+def test_layout_bytes_ordering():
+    s = sm.PAPER_COLLECTION
+    assert sm.packed_csr_layout_bytes(s) < sm.csr_layout_bytes(s) \
+        < sm.coo_layout_bytes(s)
