@@ -17,10 +17,26 @@ from repro.text import corpus
 BENCH_SPEC = corpus.CorpusSpec(num_docs=20_000, vocab=2_000,
                                avg_distinct=60, seed=42)
 
+# CI-sized tier: exercises every suite's plumbing in seconds
+SMOKE_SPEC = corpus.CorpusSpec(num_docs=1_500, vocab=600,
+                               avg_distinct=25, seed=42)
+
 _HOST_CACHE = {}
+_ACTIVE_SPEC = BENCH_SPEC
 
 
-def bench_host(spec: corpus.CorpusSpec = BENCH_SPEC):
+def set_smoke() -> None:
+    """Switch every suite to the smoke-sized corpus (``run.py --smoke``)."""
+    global _ACTIVE_SPEC
+    _ACTIVE_SPEC = SMOKE_SPEC
+
+
+def is_smoke() -> bool:
+    return _ACTIVE_SPEC is SMOKE_SPEC
+
+
+def bench_host(spec: corpus.CorpusSpec | None = None):
+    spec = spec or _ACTIVE_SPEC
     key = (spec.num_docs, spec.vocab, spec.avg_distinct, spec.seed)
     if key not in _HOST_CACHE:
         tc = corpus.generate(spec)

@@ -14,8 +14,9 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, is_smoke
 
+# corpus/query sizing is injected so --smoke reaches the subprocess too
 SCRIPT = r"""
 import time
 import jax, jax.numpy as jnp, numpy as np
@@ -24,10 +25,10 @@ from repro.core import build
 from repro.distributed import retrieval
 
 mesh = jax.make_mesh((8,), ("data",))
-tc = corpus.generate(corpus.CorpusSpec(num_docs=8000, vocab=2000,
-                                       avg_distinct=60, seed=4))
+tc = corpus.generate(corpus.CorpusSpec(num_docs={docs}, vocab={vocab},
+                                       avg_distinct={avg}, seed=4))
 host = build.bulk_build(tc)
-qh = corpus.sample_query_terms(host.df, host.term_hashes, 32, 3,
+qh = corpus.sample_query_terms(host.df, host.term_hashes, {queries}, 3,
                                num_docs=host.num_docs, seed=5)
 
 for name, builder, mk in [
@@ -52,8 +53,14 @@ def main() -> None:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=520)
+    sizing = (dict(docs=1_500, vocab=600, avg=25, queries=8) if is_smoke()
+              else dict(docs=8000, vocab=2000, avg=60, queries=32))
+    script = SCRIPT
+    for key, val in sizing.items():   # not .format(): SCRIPT has f-strings
+        script = script.replace("{%s}" % key, str(val))
+    out = subprocess.run([sys.executable, "-c", script],
+                         env=env, capture_output=True, text=True,
+                         timeout=520)
     for line in out.stdout.splitlines():
         if line.startswith("RESULT"):
             _, name, us = line.split()

@@ -175,8 +175,51 @@ def analyze_cell(path: str) -> dict | None:
     }
 
 
+def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4) -> None:
+    """Measured posting-HBM bytes per query for the fused read path.
+
+    Counts the payload bytes the fused decode-and-score engine streams
+    for a sampled batch: each unique posting block touched by the batch
+    is read ONCE (cross-query dedup).  HOR streams raw int32 doc ids +
+    f32 tfs (8 B/posting); Packed streams the bit-packed words + f16 tfs
+    (+12 B of per-block decode scalars) — the paper's §4.3 I/O argument,
+    measured.  The packed/HOR ratio should be <= ~0.5.
+    """
+    from benchmarks.common import bench_host, emit
+    from repro.core import layouts
+    from repro.text import corpus
+
+    _, host = bench_host()
+    hor = layouts.build_blocked(host)
+    packed = layouts.build_packed_csr(host)
+    qh = corpus.sample_query_terms(host.df, host.term_hashes, n_queries,
+                                   n_terms, num_docs=host.num_docs, seed=7)
+    sorted_hash = np.asarray(hor.sorted_hash)
+    offsets = np.asarray(hor.block_offsets)
+    blocks = set()
+    for q in qh:
+        for h in q:
+            pos = int(np.searchsorted(sorted_hash, h))
+            if pos < len(sorted_hash) and sorted_hash[pos] == h:
+                blocks.update(range(offsets[pos], offsets[pos + 1]))
+    blocks = np.array(sorted(blocks), dtype=np.int64)
+    block = hor.block
+    hor_bytes = len(blocks) * (block * 4 + block * 4)
+    bits = np.asarray(packed.block_bits)[blocks]
+    packed_bytes = int(np.sum((block * bits + 31) // 32 * 4)
+                       + len(blocks) * (block * 2 + 12))
+    ratio = packed_bytes / max(hor_bytes, 1)
+    emit("roofline/query_bytes/hor", 0.0,
+         f"bytes_per_query={hor_bytes / n_queries:.0f};"
+         f"blocks={len(blocks)}")
+    emit("roofline/query_bytes/packed", 0.0,
+         f"bytes_per_query={packed_bytes / n_queries:.0f};"
+         f"ratio_vs_hor={ratio:.3f}")
+
+
 def main(out_dir: str = "experiments/dryrun",
          csv_path: str = "experiments/roofline.csv") -> None:
+    query_hbm_bytes()
     rows = []
     for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
         r = analyze_cell(path)

@@ -6,6 +6,9 @@
   table7   paper Table 7 (query evaluation, 1-4 terms)
   expansion  paper §4.4 (document-based access)
   roofline   §Roofline terms from the dry-run artifacts (if present)
+
+``--smoke`` runs every suite on a CI-sized corpus (plumbing check, not
+representative numbers).
 """
 from __future__ import annotations
 
@@ -14,13 +17,17 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import expansion, partitioned, roofline, table5_size, \
-        table6_index, table7_query
+    from benchmarks import common, expansion, partitioned, roofline, \
+        table5_size, table6_index, table7_query
     suites = [("table5", table5_size.main), ("table6", table6_index.main),
               ("table7", table7_query.main), ("expansion", expansion.main),
               ("partitioned", partitioned.main),
               ("roofline", roofline.main)]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:]]
+    if "--smoke" in args:
+        args.remove("--smoke")
+        common.set_smoke()
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:

@@ -55,7 +55,7 @@ def main():
         out = scorer(qb)
         jax.tree.map(lambda x: x.block_until_ready(), out)
         lat.append((time.time() - t0) / qb.shape[0] * 1e6)
-    lat = np.array(lat[1:])
+    lat = np.array(lat[1:] if len(lat) > 1 else lat)  # drop warmup batch
     print(f"{args.requests} requests: p50={np.percentile(lat, 50):.0f}us "
           f"p95={np.percentile(lat, 95):.0f}us per query")
 

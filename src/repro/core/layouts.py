@@ -47,6 +47,28 @@ from repro.core import segments
 Array = jax.Array
 
 BLOCK = 128  # posting block size: one VPU lane-width / VMEM-friendly tile
+ROUTE_TILE = 512  # doc-tile width the scoring kernels route against
+
+
+def _block_tile_routing(block_min: np.ndarray, block_max: np.ndarray,
+                        num_docs: int, tile: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side pair-routing cache: per-block doc-tile span.
+
+    The fused scoring kernel walks (block, tile) pairs; a block overlaps
+    the contiguous tile range [min//tile, max//tile].  This was computed
+    per query inside ``build_pairs`` — it is a pure function of the
+    (immutable) index, so it is built ONCE here and stored on the index.
+    Returns (tile_first i32[NB], tile_count i32[NB]); empty blocks
+    (max < 0) get count 0.
+    """
+    n_tiles = max(-(-num_docs // tile), 1)
+    has = block_max >= 0
+    t0 = np.clip(block_min // tile, 0, n_tiles - 1)
+    t1 = np.clip(block_max // tile, 0, n_tiles - 1)
+    first = np.where(has, t0, 0).astype(np.int32)
+    count = np.where(has, t1 - t0 + 1, 0).astype(np.int32)
+    return first, count
 
 
 def _register(cls):
@@ -456,7 +478,8 @@ class BlockedIndex:
     access, paper §4.4 / GIN) and (b) aligned VMEM tiles for the Pallas
     scoring kernel.
     """
-    _static_fields = ("max_posting_len", "max_blocks_per_term", "block")
+    _static_fields = ("max_posting_len", "max_blocks_per_term", "block",
+                      "route_tile", "route_pairs_max", "route_span_max")
     sorted_hash: Array    # u32[W]  (COR-style folded word table)
     df: Array             # i32[W]
     block_offsets: Array  # i32[W+1]  term -> block range
@@ -468,6 +491,12 @@ class BlockedIndex:
     max_posting_len: int
     max_blocks_per_term: int
     block: int = BLOCK
+    # pair-routing cache (block -> doc-tile span at route_tile width)
+    tile_first: Array | None = None   # i32[NB]
+    tile_count: Array | None = None   # i32[NB]
+    route_tile: int = ROUTE_TILE
+    route_pairs_max: int = 0   # sum(tile_count): dedup upper bound on pairs
+    route_span_max: int = 0    # max(tile_count): worst span of one block
 
     @property
     def num_terms(self) -> int:
@@ -563,6 +592,7 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
                     np.where(bd >= 0, bd, np.iinfo(np.int32).max).min(axis=1),
                     0).astype(np.int32)
     bmax = bd.max(axis=1).astype(np.int32)
+    tfirst, tcount = _block_tile_routing(bmin, bmax, h.num_docs, ROUTE_TILE)
     return BlockedIndex(
         sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
         df=jnp.asarray(h.df[order].astype(np.int32)),
@@ -573,6 +603,10 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
         max_posting_len=h.max_posting_len,
         max_blocks_per_term=int(nblocks.max()) if len(nblocks) else 0,
         block=block,
+        tile_first=jnp.asarray(tfirst), tile_count=jnp.asarray(tcount),
+        route_tile=ROUTE_TILE,
+        route_pairs_max=int(tcount.sum()),
+        route_span_max=int(tcount.max()) if len(tcount) else 0,
     )
 
 
@@ -592,7 +626,8 @@ class PackedCsrIndex:
     entry of each block stores the absolute doc id's delta from
     ``block_base``.
     """
-    _static_fields = ("max_posting_len", "words_per_block", "block")
+    _static_fields = ("max_posting_len", "words_per_block", "block",
+                      "route_tile", "route_pairs_max", "route_span_max")
     sorted_hash: Array    # u32[W]
     df: Array             # i32[W]
     block_offsets: Array  # i32[W+1]    term -> block range
@@ -605,6 +640,16 @@ class PackedCsrIndex:
     max_posting_len: int
     words_per_block: int
     block: int = BLOCK
+    # per-block doc-id summaries + pair-routing cache (as in BlockedIndex;
+    # for packed blocks these are only recoverable by decoding, so they
+    # MUST be captured at build time)
+    block_min: Array | None = None    # i32[NB]
+    block_max: Array | None = None    # i32[NB]
+    tile_first: Array | None = None   # i32[NB]
+    tile_count: Array | None = None   # i32[NB]
+    route_tile: int = ROUTE_TILE
+    route_pairs_max: int = 0
+    route_span_max: int = 0
 
     @property
     def num_terms(self) -> int:
@@ -705,6 +750,8 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
     bits_arr = np.zeros(NB, dtype=np.int32)
     base_arr = np.zeros(NB, dtype=np.int32)
     count_arr = np.zeros(NB, dtype=np.int32)
+    min_arr = np.zeros(NB, dtype=np.int32)
+    max_arr = np.full(NB, -1, dtype=np.int32)
     tf_arr = np.zeros((NB, block), dtype=np.float16)
     blocks_packed = []
     for newpos, old in enumerate(order):
@@ -727,11 +774,16 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
             bits_arr[bidx] = width
             base_arr[bidx] = prev
             count_arr[bidx] = len(blk)
+            if len(blk):
+                min_arr[bidx] = int(blk[0])
+                max_arr[bidx] = int(blk[-1])
             tf_arr[bidx, :len(blk)] = tfs[lo:hi]
     words_per_block = max((len(b) for b in blocks_packed), default=1)
     packed = np.zeros((NB, words_per_block), dtype=np.uint32)
     for i, b in enumerate(blocks_packed):
         packed[i, :len(b)] = b
+    tfirst, tcount = _block_tile_routing(min_arr, max_arr, h.num_docs,
+                                         ROUTE_TILE)
     return PackedCsrIndex(
         sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
         df=jnp.asarray(h.df[order].astype(np.int32)),
@@ -743,6 +795,11 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
         max_posting_len=h.max_posting_len,
         words_per_block=words_per_block,
         block=block,
+        block_min=jnp.asarray(min_arr), block_max=jnp.asarray(max_arr),
+        tile_first=jnp.asarray(tfirst), tile_count=jnp.asarray(tcount),
+        route_tile=ROUTE_TILE,
+        route_pairs_max=int(tcount.sum()),
+        route_span_max=int(tcount.max()) if len(tcount) else 0,
     )
 
 

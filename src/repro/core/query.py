@@ -51,6 +51,20 @@ def accumulate_scores(doc_ids: Array, weights: Array, valid: Array,
     return acc[:num_docs]
 
 
+def accumulate_counts(doc_ids: Array, valid: Array, num_docs: int) -> Array:
+    """Exact per-document membership counts (int32 accumulator).
+
+    AND-filtering must COUNT postings, and float32 accumulation loses
+    integer exactness past 2**24 — membership counts are integers, so
+    they are accumulated as integers.  Returns i32[num_docs].
+    """
+    flat_docs = jnp.where(valid, doc_ids, num_docs).reshape(-1)
+    ones = jnp.where(valid, 1, 0).reshape(-1).astype(jnp.int32)
+    acc = jnp.zeros((num_docs + 1,), jnp.int32)
+    acc = acc.at[flat_docs].add(ones, mode="drop")
+    return acc[:num_docs]
+
+
 def score_query(index: Any, query_hashes: Array, k: int, cap: int,
                 rank_blend: float = 0.0) -> QueryResult:
     """Evaluate one query (padded term-hash vector; 0 = empty slot).
@@ -93,13 +107,77 @@ def score_queries(index: Any, query_hashes: Array, k: int, cap: int,
     return jax.vmap(lambda q: fn(query_hashes=q))(query_hashes)
 
 
-def make_scorer(index: Any, k: int, cap: int,
-                rank_blend: float = 0.0) -> Callable[[Array], QueryResult]:
-    """jit-compiled batched scorer with the index captured as constants."""
+def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
+                        rank_blend: float = 0.0,
+                        max_pairs: int | None = None,
+                        backend: str = "pallas"):
+    """Batched evaluation through the fused decode-and-score Pallas
+    engine (one HBM pass over the shared posting blocks for the whole
+    batch).  Requires a BlockedIndex or PackedCsrIndex.
+
+    Returns (QueryResult, stats) where stats carries the routing
+    ``pair_overflow`` counter — nonzero means postings were DROPPED
+    because ``max_pairs`` was undersized, never silently.
+    """
+    from repro.kernels import ops   # engine dispatch (avoids import cycle)
+
+    present = query_hashes != 0                            # [B, T]
+    term_ids = jnp.where(present, index.lookup_terms(query_hashes), -1)
+    df = index.term_df(term_ids)
+    num_docs = index.docs.num_docs
+    idf_t = idf(df, num_docs)
+
+    scores, overflow = ops.fused_batched_scores(
+        index, term_ids, idf_t, cap, max_pairs=max_pairs, backend=backend)
+    ops.warn_on_overflow(overflow, "fused engine")
+
+    # identical scoring tail to score_query (the parity oracle)
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t, axis=1), 1e-12))
+    norm = index.docs.norm
+    live = norm > 0
+    cosine = scores / (jnp.maximum(norm, 1e-12)[None, :] * qnorm[:, None])
+    final = cosine + rank_blend * index.docs.rank[None, :]
+    final = jnp.where(live[None, :] & (scores > 0), final, -jnp.inf)
+    top_scores, top_docs = jax.lax.top_k(final, k)
+    hit = jnp.isfinite(top_scores)
+    result = QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
+                         scores=jnp.where(hit, top_scores, 0.0))
+    return result, {"pair_overflow": overflow}
+
+
+def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
+                engine: str = "jnp", max_pairs: int | None = None,
+                backend: str = "pallas", return_stats: bool = False
+                ) -> Callable[[Array], QueryResult]:
+    """jit-compiled batched scorer with the index captured as constants.
+
+    ``engine="jnp"`` is the dense pure-jnp oracle; ``engine="pallas"``
+    dispatches the fused batched decode-and-score kernel (BlockedIndex /
+    PackedCsrIndex only) — same ranked results, one HBM pass.
+    ``backend`` tunes the fused engine's lowering ("pallas" auto /
+    "pallas-tpu" / "xla" plain-HLO with the same block dedup).  With
+    ``return_stats=True`` the scorer returns (QueryResult, stats).
+    """
+    if engine not in ("jnp", "pallas"):
+        raise ValueError(f"unknown engine: {engine!r}")
+    if engine == "pallas":
+        from repro.core.layouts import BlockedIndex, PackedCsrIndex
+        if not isinstance(index, (BlockedIndex, PackedCsrIndex)):
+            raise TypeError(
+                f"engine='pallas' needs a BlockedIndex or PackedCsrIndex, "
+                f"got {type(index).__name__}")
+
     @jax.jit
-    def scorer(query_hashes: Array) -> QueryResult:
-        return score_queries(index, query_hashes, k=k, cap=cap,
-                             rank_blend=rank_blend)
+    def scorer(query_hashes: Array):
+        if engine == "pallas":
+            result, stats = fused_score_queries(
+                index, query_hashes, k=k, cap=cap, rank_blend=rank_blend,
+                max_pairs=max_pairs, backend=backend)
+        else:
+            result = score_queries(index, query_hashes, k=k, cap=cap,
+                                   rank_blend=rank_blend)
+            stats = {"pair_overflow": jnp.int32(0)}
+        return (result, stats) if return_stats else result
     return scorer
 
 
@@ -119,9 +197,8 @@ def conjunctive_filter(index: Any, query_hashes: Array, k: int,
     idf_t = idf(df, num_docs)
     w = tf * idf_t[:, None]
     scores = accumulate_scores(d, w, valid, num_docs)
-    ones = jnp.where(valid, 1.0, 0.0)
-    counts = accumulate_scores(d, ones, valid, num_docs)
-    needed = jnp.sum(present.astype(jnp.float32))
+    counts = accumulate_counts(d, valid, num_docs)
+    needed = jnp.sum(present.astype(jnp.int32))
     ok = counts >= needed
     final = jnp.where(ok & (index.docs.norm > 0),
                       scores / jnp.maximum(index.docs.norm, 1e-12), -jnp.inf)

@@ -33,10 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import segments
+from repro.core import layouts, segments
 from repro.core.layouts import PostingsHost
 from repro.core.query import idf as idf_fn
 from repro.distributed.topk import local_topk_merge
+from repro.distributed.shmap import shard_map
 
 Array = jax.Array
 
@@ -141,7 +142,7 @@ def make_doc_sharded_scorer(index: DocShardedIndex, mesh: Mesh, axis: str,
                 "doc_ids", "tfs", "norm", "doc_base")}
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
     def score(ix, qh):
         sq = {n: v[0] for n, v in ix.items()}    # drop shard dim
@@ -250,7 +251,7 @@ def make_term_sharded_scorer(index: TermShardedIndex, mesh: Mesh, axis: str,
     sharded["norm"] = P()
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
     def score(ix, qh):
         sq = {n: (v[0] if n != "norm" else v) for n, v in ix.items()}
@@ -281,5 +282,172 @@ def make_term_sharded_scorer(index: TermShardedIndex, mesh: Mesh, axis: str,
                           -jnp.inf)
         vv, ii = jax.lax.top_k(final, k)
         return vv, ii
+
+    return jax.jit(lambda qh: score(arrs, qh))
+
+
+# ---------------------------------------------------------------------------
+# document-partitioned, fused Pallas engine (HOR blocks per shard)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockedDocShardedIndex:
+    """Stacked per-shard HOR/BlockedIndex arrays for the fused engine.
+
+    Each shard re-packs its document slice into 128-lane posting blocks
+    with the build-time (block -> doc-tile) routing cache, so the
+    shard_map program can call the fused decode-and-score kernel locally
+    and merge per-shard top-k — the distributed version of the one-HBM-
+    pass read path.
+    """
+    sorted_hash: np.ndarray    # u32[S, W]
+    df_global: np.ndarray      # i32[S, W]
+    block_offsets: np.ndarray  # i32[S, W+1]
+    block_docs: np.ndarray     # i32[S, NBmax, BLOCK]  LOCAL doc ids
+    block_tfs: np.ndarray      # f32[S, NBmax, BLOCK]
+    tile_first: np.ndarray     # i32[S, NBmax]
+    tile_count: np.ndarray     # i32[S, NBmax]
+    norm: np.ndarray           # f32[S, Dmax]
+    doc_base: np.ndarray       # i32[S]
+    n_shards: int
+    num_docs: int              # global
+    dmax: int                  # max local docs per shard
+    tile: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        # NOT dataclasses.asdict: that deep-copies every (stacked, large)
+        # numpy array on the host before the device transfer
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def build_doc_sharded_blocked(host: PostingsHost, n_shards: int,
+                              tile: int | None = None
+                              ) -> BlockedDocShardedIndex:
+    tile = tile or layouts.ROUTE_TILE
+    bounds = np.linspace(0, host.num_docs, n_shards + 1).astype(np.int64)
+    dmax = int(np.max(np.diff(bounds)))
+    W = host.num_terms
+    term_of = np.repeat(np.arange(W, dtype=np.int64), np.diff(host.offsets))
+
+    shards = []
+    for s in range(n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        m = (host.doc_ids >= lo) & (host.doc_ids < hi)
+        order = np.lexsort((host.doc_ids[m], term_of[m]))
+        docs = (host.doc_ids[m][order] - lo).astype(np.int32)
+        tfs = host.tfs[m][order].astype(np.float32)
+        df_l = np.bincount(term_of[m], minlength=W).astype(np.int32)
+        offs = np.zeros(W + 1, dtype=np.int64)
+        np.cumsum(df_l, out=offs[1:])
+        sub = PostingsHost(term_hashes=host.term_hashes, df=df_l,
+                           offsets=offs, doc_ids=docs, tfs=tfs,
+                           num_docs=int(hi - lo),
+                           norm=host.norm[lo:hi], rank=host.rank[lo:hi])
+        shards.append(layouts.build_blocked(sub))
+
+    block = shards[0].block
+    nbmax = max(int(ix.block_docs.shape[0]) for ix in shards)
+    S = n_shards
+    bd = np.full((S, nbmax, block), -1, dtype=np.int32)
+    bt = np.zeros((S, nbmax, block), dtype=np.float32)
+    tf_arr = np.zeros((S, nbmax), dtype=np.int32)
+    tc_arr = np.zeros((S, nbmax), dtype=np.int32)
+    offs_a = np.zeros((S, W + 1), dtype=np.int32)
+    norm_a = np.zeros((S, dmax), dtype=np.float32)
+    for s, ix in enumerate(shards):
+        nb = int(ix.block_docs.shape[0])
+        bd[s, :nb] = np.asarray(ix.block_docs)
+        bt[s, :nb] = np.asarray(ix.block_tfs)
+        # routing spans vs the PADDED local doc space (uniform across
+        # shards) so every shard's kernel sees the same tile grid
+        tf_s, tc_s = layouts._block_tile_routing(
+            np.asarray(ix.block_min), np.asarray(ix.block_max), dmax, tile)
+        tf_arr[s, :nb] = tf_s
+        tc_arr[s, :nb] = tc_s
+        offs_a[s] = np.asarray(ix.block_offsets)
+        lo, hi = bounds[s], bounds[s + 1]
+        norm_a[s, :hi - lo] = host.norm[lo:hi]
+    order = np.argsort(host.term_hashes, kind="stable")
+    return BlockedDocShardedIndex(
+        sorted_hash=np.broadcast_to(
+            host.term_hashes[order][None, :], (S, W)).copy(),
+        df_global=np.broadcast_to(
+            host.df[order].astype(np.int32)[None, :], (S, W)).copy(),
+        block_offsets=offs_a, block_docs=bd, block_tfs=bt,
+        tile_first=tf_arr, tile_count=tc_arr, norm=norm_a,
+        doc_base=bounds[:-1].astype(np.int32), n_shards=S,
+        num_docs=host.num_docs, dmax=dmax, tile=tile,
+        max_blocks_per_term=max(ix.max_blocks_per_term for ix in shards),
+        route_span_max=max(int(np.max(tc_arr[s])) if nbmax else 0
+                           for s in range(S)),
+        route_pairs_max=max(int(np.sum(tc_arr[s])) for s in range(S)),
+    )
+
+
+def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
+                                  axis: str, k: int = 10):
+    """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
+
+    Same contract as ``make_doc_sharded_scorer`` but every shard runs the
+    fused decode-and-score Pallas kernel over its local posting blocks
+    instead of the dense scatter-add."""
+    from repro.kernels.fused_decode_score import (
+        Q_PAD, build_batched_pairs, fused_score_blocked_pallas)
+    from repro.kernels.ops import (expand_block_candidates,
+                                    warn_on_overflow)
+
+    arrs = index.device_arrays()
+    dmax, tile = index.dmax, index.tile
+    n_tiles = max(-(-dmax // tile), 1)
+    num_docs = index.num_docs
+    m_blocks = max(index.max_blocks_per_term, 1)
+
+    sharded = {n: P(axis) for n in
+               ("sorted_hash", "df_global", "block_offsets", "block_docs",
+                "block_tfs", "tile_first", "tile_count", "norm", "doc_base")}
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
+    def score(ix, qh):
+        sq = {n: v[0] for n, v in ix.items()}    # drop shard dim
+        t = qh.shape[0]
+        pos = jnp.searchsorted(sq["sorted_hash"], qh).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
+        hit = (sq["sorted_hash"][pos] == qh) & (qh != 0)
+        tid = jnp.where(hit, pos, -1)
+        # idf uses GLOBAL df — scoring must match the single-node engine
+        w = idf_fn(jnp.where(hit, sq["df_global"][pos], 0), num_docs)
+
+        cand_block, cand_valid, cand_q, cand_w, _ = \
+            expand_block_candidates(sq["block_offsets"], tid[None],
+                                    w[None], m_blocks,
+                                    sq["block_docs"].shape[-1])
+        max_pairs = max(min(index.route_pairs_max,
+                            t * m_blocks * max(index.route_span_max, 1)), 8)
+        pb, pt, pqw, pcap, ovf = build_batched_pairs(
+            cand_block, cand_valid, cand_q, cand_w,
+            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs)
+        # budget above is exact, so this won't fire unless the budget
+        # formula is ever loosened
+        warn_on_overflow(ovf, "doc-sharded fused engine")
+        pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+        scores = fused_score_blocked_pallas(
+            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
+            dmax, tile)[0]
+
+        qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
+        live = sq["norm"] > 0
+        final = jnp.where(live & (scores > 0),
+                          scores / (jnp.maximum(sq["norm"], 1e-12) * qnorm),
+                          -jnp.inf)
+        vv, ids = local_topk_merge(final, k, axis, sq["doc_base"])
+        return vv, ids
 
     return jax.jit(lambda qh: score(arrs, qh))

@@ -1,0 +1,19 @@
+"""shard_map compatibility shim.
+
+``jax.shard_map`` (with ``check_vma``) only exists in newer jax; older
+releases ship ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``).  Every shard_map in this package routes through here so
+the distributed engine runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

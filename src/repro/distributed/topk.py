@@ -15,6 +15,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.shmap import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 Array = jax.Array
@@ -45,7 +47,7 @@ def sharded_topk(mesh: Mesh, axis: str, scores_spec: P = None):
 
     def make(k: int):
         @functools.partial(
-            jax.shard_map, mesh=mesh, in_specs=(spec,),
+            shard_map, mesh=mesh, in_specs=(spec,),
             out_specs=(P(), P()), check_vma=False)
         def fn(scores):
             local = scores.reshape(-1)

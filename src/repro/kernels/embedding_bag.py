@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 
@@ -42,7 +44,7 @@ def _bag_kernel(idx_ref, table_ref, out_ref, *, hot: int, bsz: int):
 
 
 def embedding_bag_pallas(table: Array, indices: Array, tile_b: int = 256,
-                         interpret: bool = True) -> Array:
+                         interpret: bool | None = None) -> Array:
     """table f32[V, D], indices i32[B, H] (-1 pads) -> f32[B, D] (sum)."""
     v, d = table.shape
     bsz, hot = indices.shape
@@ -58,5 +60,5 @@ def embedding_bag_pallas(table: Array, indices: Array, tile_b: int = 256,
             out_specs=pl.BlockSpec((tile_b, d), lambda i, idx: (i, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(indices, table)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -76,7 +78,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_attention_pallas(q: Array, k: Array, v: Array, causal: bool = True,
                            window: int = 0, scale: float | None = None,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True) -> Array:
+                           interpret: bool | None = None) -> Array:
     """q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D]; Hq % Hkv == 0."""
     b, hq, s, d = q.shape
     hkv = k.shape[1]
@@ -112,6 +114,6 @@ def flash_attention_pallas(q: Array, k: Array, v: Array, causal: bool = True,
             pltpu.VMEM((tq, 1), jnp.float32),
             pltpu.VMEM((tq, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qf, kf, vf)
     return out.reshape(b, hq, s, d)

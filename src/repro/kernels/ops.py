@@ -1,9 +1,15 @@
 """jit'd public wrappers around the Pallas kernels (+ XLA fallbacks).
 
-``backend`` selects: "pallas" (interpret=True on CPU — kernel-body
-semantics validated in Python), "pallas-tpu" (compiled, real hardware),
-or "xla" (the ref.py oracle path — also what the multi-pod dry-run
-lowers, so GSPMD sees plain HLO).
+``backend`` selects: "pallas" (auto: compiled on TPU, interpret-mode
+elsewhere — keyed on ``jax.default_backend()``), "pallas-tpu" (force
+compiled), or "xla" (the ref.py oracle path — also what the multi-pod
+dry-run lowers, so GSPMD sees plain HLO).
+
+This module is also the engine layer for query evaluation: the fused
+batched decode-and-score path (``fused_batched_scores``) routes a whole
+query batch through ONE Pallas kernel launch — packed posting blocks are
+decoded in VMEM and scored against a ``[Q, tile]`` accumulator, so the
+compressed bytes are the only posting bytes that cross HBM.
 """
 from __future__ import annotations
 
@@ -17,6 +23,9 @@ from repro.core.layouts import BlockedIndex, PackedCsrIndex
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_decode_score import (
+    Q_PAD, build_batched_pairs, fused_score_blocked_pallas,
+    fused_score_packed_pallas)
 from repro.kernels.packed_postings import unpack_blocks_pallas
 from repro.kernels.posting_score import TILE, build_pairs, posting_score_pallas
 from repro.kernels.segment_multi_agg import pna_multi_agg_pallas
@@ -25,13 +34,43 @@ Array = jax.Array
 Backend = Literal["pallas", "pallas-tpu", "xla"]
 
 
-def _interp(backend: Backend) -> bool:
-    return backend != "pallas-tpu"
+def _interp(backend: Backend) -> bool | None:
+    """None -> auto (compiled iff jax.default_backend() == "tpu")."""
+    return None if backend == "pallas" else False
+
+
+def warn_on_overflow(overflow: Array, label: str) -> None:
+    """Routing overflow is surfaced, never silent — shared by every
+    engine entry point so the contract can't drift between them."""
+    jax.lax.cond(
+        overflow > 0,
+        lambda o: jax.debug.print(
+            label + ": routing overflow dropped {o} (block, tile) "
+            "pairs — raise max_pairs", o=o),
+        lambda o: None, overflow)
 
 
 # ---------------------------------------------------------------------------
 # posting-list scoring over a BlockedIndex (the paper's q_occ hot path)
 # ---------------------------------------------------------------------------
+
+
+def routing_spans(index: BlockedIndex | PackedCsrIndex, tile: int):
+    """(tile_first, tile_count, n_tiles) for ``tile``-wide doc tiles.
+
+    Uses the index's build-time pair-routing cache when ``tile`` matches
+    its ``route_tile``; otherwise derives spans from the per-block
+    min/max summaries (cheap, but per-trace instead of per-build).
+    """
+    num_docs = index.docs.num_docs
+    n_tiles = max(-(-num_docs // tile), 1)
+    if tile == index.route_tile and index.tile_first is not None:
+        return index.tile_first, index.tile_count, n_tiles
+    has = index.block_max >= 0
+    t0 = jnp.clip(index.block_min // tile, 0, n_tiles - 1)
+    t1 = jnp.clip(index.block_max // tile, 0, n_tiles - 1)
+    return (jnp.where(has, t0, 0).astype(jnp.int32),
+            jnp.where(has, t1 - t0 + 1, 0).astype(jnp.int32), n_tiles)
 
 
 def select_query_blocks(index: BlockedIndex, term_ids: Array, idf_w: Array,
@@ -60,12 +99,153 @@ def blocked_query_scores(index: BlockedIndex, term_ids: Array, idf_w: Array,
         bd = jnp.where(valid[:, None], index.block_docs[sel], -1)
         bt = jnp.where(valid[:, None], index.block_tfs[sel], 0.0)
         return ref.ref_posting_score(bd, bt, w * valid, num_docs)
-    pb, pt, pw, _overflow = build_pairs(
-        sel, valid, w, index.block_min, index.block_max, num_docs,
-        max_pairs, tile)
+    tfirst, tcount, n_tiles = routing_spans(index, tile)
+    pb, pt, pw, _overflow = build_pairs(sel, valid, w, tfirst, tcount,
+                                        n_tiles, max_pairs)
     return posting_score_pallas(index.block_docs, index.block_tfs,
                                 pb, pt, pw, num_docs, tile,
                                 interpret=_interp(backend))
+
+
+# ---------------------------------------------------------------------------
+# fused batched decode-and-score (the engine hot path)
+# ---------------------------------------------------------------------------
+
+
+def default_max_pairs(index: BlockedIndex | PackedCsrIndex, num_queries: int,
+                      num_terms: int, cap: int, tile: int = TILE) -> int:
+    """Static routing-pair budget for a batch.
+
+    After cross-query dedup, pairs are unique (block, tile) — bounded
+    both by the whole index's span sum (``route_pairs_max``) and by
+    candidate-count x worst single-block span.  Both bounds are exact
+    for ``tile == route_tile``, so overflow is impossible at the default
+    tile; for other widths the span scales by ``route_tile / tile``.
+    """
+    m = max(-(-min(cap, max(index.max_posting_len, 1)) // index.block), 1)
+    cands = num_queries * num_terms * m
+    span = index.route_span_max
+    pairs_max = index.route_pairs_max
+    if tile != index.route_tile:
+        scale = max(-(-index.route_tile // tile), 1)
+        nb = (index.packed.shape[0] if isinstance(index, PackedCsrIndex)
+              else index.block_docs.shape[0])
+        span = span * scale + 1
+        pairs_max = pairs_max * scale + nb
+    return max(min(pairs_max, cands * max(span, 1)), 8)
+
+
+def expand_block_candidates(block_offsets: Array, term_ids: Array,
+                            idf_w: Array, m: int, block: int,
+                            cap: int | None = None):
+    """Flat candidate (query, term, block) triples for a term batch.
+
+    term_ids i32[B, T] (-1 absent), idf_w f32[B, T].  Shared by the
+    single-node fused engine and the doc-sharded shard_map scorer so cap
+    handling stays in lockstep.  Returns
+    (cand_block, cand_valid, cand_q, cand_w, cand_cap) flattened to
+    [B*T*m]; cand_cap is None when ``cap`` is None (read whole blocks).
+    """
+    b, t = term_ids.shape
+    safe = jnp.maximum(term_ids, 0)
+    start = block_offsets[safe]
+    nb = block_offsets[safe + 1] - start
+    k = jnp.arange(m, dtype=jnp.int32)
+    cand_block = (start[..., None] + k).reshape(-1)
+    cand_valid = ((k < jnp.minimum(nb, m)[..., None]) &
+                  (term_ids >= 0)[..., None]).reshape(-1)
+    cand_q = jnp.broadcast_to(
+        jnp.arange(b, dtype=jnp.int32)[:, None, None], (b, t, m)).reshape(-1)
+    cand_w = jnp.broadcast_to(idf_w[..., None], (b, t, m)).reshape(-1)
+    cand_cap = None
+    if cap is not None:
+        # lanes of the k-th block the posting cap still permits — a cap
+        # cutting mid-block truncates the last block, like the oracle
+        cand_cap = jnp.broadcast_to(
+            jnp.clip(cap - k * block, 0, block)[None, None, :],
+            (b, t, m)).reshape(-1)
+    return cand_block, cand_valid, cand_q, cand_w, cand_cap
+
+
+def fused_batched_scores(index: BlockedIndex | PackedCsrIndex,
+                         term_ids: Array, idf_w: Array, cap: int,
+                         max_pairs: int | None = None, tile: int = TILE,
+                         backend: Backend = "pallas"):
+    """Dense scores f32[B, num_docs] for a BATCH of queries in one fused
+    kernel launch, plus the routing-overflow counter.
+
+    term_ids i32[B, T] (-1 absent), idf_w f32[B, T] per-slot weights.
+    ``cap`` bounds postings read per term at POSTING granularity (the
+    last selected block is lane-masked), matching the jnp oracle's
+    gather cap exactly.
+    """
+    b, t = term_ids.shape
+    block = index.block
+    num_docs = index.docs.num_docs
+    m = max(-(-min(cap, max(index.max_posting_len, 1)) // block), 1)
+    if isinstance(index, BlockedIndex):
+        m = min(m, max(index.max_blocks_per_term, 1))
+    if max_pairs is None:
+        max_pairs = default_max_pairs(index, b, t, cap, tile)
+
+    cand_block, cand_valid, cand_q, cand_w, cand_cap = \
+        expand_block_candidates(index.block_offsets, term_ids, idf_w,
+                                m, block, cap)
+
+    if backend == "xla":
+        # same cross-query block dedup, lowered as plain HLO: each unique
+        # block is read once and scatter-adds a [B]-wide row per posting
+        # (ONE scatter for the whole batch, not one per query)
+        nb_total = (index.packed.shape[0]
+                    if isinstance(index, PackedCsrIndex)
+                    else index.block_docs.shape[0])
+        # block-level dedup only: one pair per unique block, so the
+        # candidate count itself is an exact pair bound
+        max_pairs = min(max_pairs, cand_block.shape[0])
+        pb, _, pqw, pcap, overflow = build_batched_pairs(
+            cand_block, cand_valid, cand_q, cand_w.astype(jnp.float32),
+            jnp.zeros((nb_total,), jnp.int32),
+            jnp.ones((nb_total,), jnp.int32), 1, b, max_pairs=max_pairs,
+            cand_cap=cand_cap)
+        if isinstance(index, PackedCsrIndex):
+            docs = ref.ref_unpack_blocks(
+                index.packed[pb], index.block_bits[pb],
+                index.block_base[pb], index.block_count[pb], block)
+            tfs = index.block_tfs[pb].astype(jnp.float32)
+        else:
+            docs = index.block_docs[pb]
+            tfs = index.block_tfs[pb]
+        lane_ok = (docs >= 0) & (jnp.arange(block, dtype=jnp.int32)[None, :]
+                                 < pcap[:, None])
+        flat_doc = jnp.where(lane_ok, docs, num_docs).reshape(-1)
+        rows = (jnp.where(lane_ok, tfs, 0.0)[:, :, None] *
+                pqw[:, None, :]).reshape(-1, pqw.shape[1])
+        acc = jnp.zeros((num_docs + 1, pqw.shape[1]), jnp.float32)
+        acc = acc.at[flat_doc].add(rows, mode="drop")
+        return acc[:num_docs].T[:b], overflow
+
+    tfirst, tcount, n_tiles = routing_spans(index, tile)
+    pb, pt, pqw, pcap, overflow = build_batched_pairs(
+        cand_block, cand_valid, cand_q,
+        cand_w.astype(jnp.float32), tfirst, tcount, n_tiles, b, max_pairs,
+        cand_cap=cand_cap)
+
+    # pad the query batch to the accumulator quantum
+    bp = -(-b // Q_PAD) * Q_PAD
+    if bp != b:
+        pqw = jnp.pad(pqw, ((0, 0), (0, bp - b)))
+
+    if isinstance(index, PackedCsrIndex):
+        scores = fused_score_packed_pallas(
+            index.packed, index.block_tfs, pb, pt, pqw, pcap,
+            index.block_bits[pb], index.block_base[pb],
+            index.block_count[pb], num_docs, block, tile,
+            interpret=_interp(backend))
+    else:
+        scores = fused_score_blocked_pallas(
+            index.block_docs, index.block_tfs, pb, pt, pqw, pcap,
+            num_docs, tile, interpret=_interp(backend))
+    return scores[:b], overflow
 
 
 # ---------------------------------------------------------------------------

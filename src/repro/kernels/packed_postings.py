@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 
@@ -43,7 +45,7 @@ def _unpack_kernel(words_ref, bits_ref, base_ref, count_ref, out_ref,
 
 def unpack_blocks_pallas(packed: Array, bits: Array, base: Array,
                          count: Array, block: int,
-                         interpret: bool = True) -> Array:
+                         interpret: bool | None = None) -> Array:
     """packed u32[NB, Wpb], bits/base/count i32[NB] -> doc ids i32[NB, block]."""
     nb, wpb = packed.shape
     kernel = functools.partial(_unpack_kernel, block=block)
@@ -58,6 +60,6 @@ def unpack_blocks_pallas(packed: Array, bits: Array, base: Array,
         ],
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(packed, bits.reshape(-1, 1), base.reshape(-1, 1),
       count.reshape(-1, 1))

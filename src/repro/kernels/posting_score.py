@@ -19,6 +19,29 @@ HBM traffic: each selected posting block is read exactly once per tile it
 overlaps (high-df terms overlap ~1 tile per block); the PR/COO layout by
 contrast must gather scattered heap tuples.  This kernel is the TPU
 restatement of the paper's claim that layout determines I/O.
+
+Fused-engine design (see ``kernels/fused_decode_score.py``, the batched
+successor of this kernel):
+
+  * PAIR ROUTING — the (block, tile) expansion used to be derived from
+    ``block_min``/``block_max`` per query inside ``build_pairs``; the
+    span table is a pure function of the immutable index, so it is now a
+    BUILD-TIME cache (``tile_first``/``tile_count`` on BlockedIndex and
+    PackedCsrIndex, plus static ``route_pairs_max``/``route_span_max``
+    pair budgets).  ``build_pairs`` only does the per-query cumsum /
+    searchsorted expansion over those cached spans.
+  * BATCH TILING — the fused kernel widens this kernel's ``[1, tile]``
+    accumulator to ``[Q, tile]``: routing pairs are deduplicated across a
+    batch of queries and carry a per-query weight ROW, so a hot posting
+    block is DMA'd once and a rank-1 MXU update serves every query that
+    touches it.
+  * HBM-BYTES ACCOUNTING — per batch, posting bytes =
+    sum over unique (block, tile) pairs of the block payload:
+    ``4*ceil(128*bits/32) + 2*128`` B packed vs ``8*128`` B unpacked HOR,
+    i.e. the compressed layout streams <= 0.5x the bytes (measured per
+    query by ``benchmarks/roofline.py``).  The fused kernel never writes
+    decompressed postings back to HBM — decode happens in VMEM inside
+    the scoring step.
 """
 from __future__ import annotations
 
@@ -28,6 +51,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 Array = jax.Array
 
@@ -62,7 +87,7 @@ def _score_kernel(pair_block, pair_tile, pair_w, pair_first,  # prefetch (SMEM)
 def posting_score_pallas(block_docs: Array, block_tfs: Array,
                          pair_block: Array, pair_tile: Array, pair_w: Array,
                          num_docs: int, tile: int = TILE,
-                         interpret: bool = True) -> Array:
+                         interpret: bool | None = None) -> Array:
     """Run the scoring kernel.
 
     block_docs i32[NB, B], block_tfs f32[NB, B]: the index's posting blocks
@@ -90,7 +115,7 @@ def posting_score_pallas(block_docs: Array, block_tfs: Array,
         functools.partial(_score_kernel, tile=tile),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles + 1, tile), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(pair_block, pair_tile, pair_w, pair_first, block_docs, block_tfs)
     # Tiles never visited by any pair hold garbage -> mask them to zero.
     visited = jnp.zeros((n_tiles + 1,), jnp.bool_).at[pair_tile].set(True)
@@ -99,20 +124,20 @@ def posting_score_pallas(block_docs: Array, block_tfs: Array,
 
 
 def build_pairs(sel_blocks: Array, sel_valid: Array, sel_w: Array,
-                block_min: Array, block_max: Array, num_docs: int,
-                max_pairs: int, tile: int = TILE):
+                tile_first: Array, tile_count: Array, n_tiles: int,
+                max_pairs: int):
     """jnp glue: expand selected blocks into tile-sorted routing pairs.
 
     sel_blocks i32[S] global block ids for the query's terms,
     sel_valid bool[S], sel_w f32[S] per-block term weight (idf).
+    tile_first/tile_count i32[NB] are the index's BUILD-TIME routing
+    cache (block -> doc-tile span) — see ``ops.routing_spans``.
     Returns (pair_block, pair_tile, pair_w, overflow) with static size
     ``max_pairs``; ``overflow`` counts dropped pairs (0 in healthy runs).
     """
-    n_tiles = -(-num_docs // tile)
     safe = jnp.maximum(sel_blocks, 0)
-    t0 = jnp.clip(block_min[safe] // tile, 0, n_tiles - 1)
-    t1 = jnp.clip(block_max[safe] // tile, 0, n_tiles - 1)
-    span = jnp.where(sel_valid, t1 - t0 + 1, 0)
+    t0 = tile_first[safe]
+    span = jnp.where(sel_valid, tile_count[safe], 0)
     offs = jnp.concatenate([jnp.zeros(1, jnp.int32),
                             jnp.cumsum(span, dtype=jnp.int32)])
     total = offs[-1]

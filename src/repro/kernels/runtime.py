@@ -1,0 +1,18 @@
+"""Backend selection shared by every Pallas kernel in this package.
+
+Kernels take ``interpret: bool | None = None``; ``None`` resolves to
+"interpret unless we are actually on a TPU", so the same call sites run
+the Python interpreter on CPU (semantics validated everywhere) and the
+compiled Mosaic kernel on real hardware — no hardcoded ``interpret=True``
+defaults to flip before a TPU run.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Explicit flag wins; otherwise compile only on a real TPU backend."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

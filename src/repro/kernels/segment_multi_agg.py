@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 
@@ -55,7 +57,8 @@ def _pna_kernel(nbr_ref, feat_ref, out_ref, *, k: int, tile_n: int,
 
 
 def pna_multi_agg_pallas(feats: Array, nbr: Array, tile_n: int = 128,
-                         eps: float = 1e-5, interpret: bool = True) -> Array:
+                         eps: float = 1e-5,
+                         interpret: bool | None = None) -> Array:
     """feats f32[Nsrc, D], nbr i32[N, K] (-1 pad) -> f32[N, 4D]."""
     nsrc, d = feats.shape
     n, k = nbr.shape
@@ -71,5 +74,5 @@ def pna_multi_agg_pallas(feats: Array, nbr: Array, tile_n: int = 128,
             out_specs=pl.BlockSpec((tile_n, 4 * d), lambda i, nbr: (i, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((n, 4 * d), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(nbr, feats)

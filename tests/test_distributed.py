@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.text import corpus
 from repro.core import build, layouts, query
 from repro.distributed import retrieval, compress, decode_attn, topk
+from repro.distributed.shmap import shard_map
 
 mesh = jax.make_mesh((8,), ("data",))
 
@@ -30,6 +31,18 @@ ds = retrieval.build_doc_sharded(host, 8)
 scorer = retrieval.make_doc_sharded_scorer(ds, mesh, "data", k=10)
 for q in qh:
     vv, ids = scorer(jnp.asarray(q))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(vv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(np.asarray(ids).tolist()) == \
+        set(np.asarray(ref.doc_ids).tolist())
+
+# 1b) document-partitioned FUSED Pallas engine == single-node
+bs = retrieval.build_doc_sharded_blocked(host, 8)
+fscorer = retrieval.make_doc_sharded_fused_scorer(bs, mesh, "data", k=10)
+for q in qh:
+    vv, ids = fscorer(jnp.asarray(q))
     ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
                             cap=host.max_posting_len)
     np.testing.assert_allclose(np.asarray(vv), np.asarray(ref.scores),
@@ -56,7 +69,7 @@ assert np.asarray(i).tolist() == [63, 62, 61, 60, 59]
 # 4) int8 compressed grad mean ~ identity within quantization error
 x = jnp.asarray(np.random.default_rng(0).normal(size=(128,))
                 .astype(np.float32))
-cm = jax.jit(jax.shard_map(
+cm = jax.jit(shard_map(
     lambda v: compress.quantized_psum_mean(v, "data", 8),
     mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False))
 np.testing.assert_allclose(np.asarray(cm(x)), np.asarray(x), rtol=0.1,

@@ -37,11 +37,12 @@ def test_posting_score_pair_overflow_counter():
     from repro.kernels.posting_score import build_pairs
     host = _host(3)
     hor = layouts.build_blocked(host, block=16)
+    tfirst, tcount, n_tiles = ops.routing_spans(hor, 64)
     sel = jnp.arange(8, dtype=jnp.int32)
     valid = jnp.ones(8, bool)
     w = jnp.ones(8)
-    *_, ovf = build_pairs(sel, valid, w, hor.block_min, hor.block_max,
-                          host.num_docs, max_pairs=2, tile=64)
+    *_, ovf = build_pairs(sel, valid, w, tfirst, tcount, n_tiles,
+                          max_pairs=2)
     assert int(ovf) > 0      # too-small pair budget is REPORTED, not silent
 
 
@@ -60,6 +61,68 @@ def test_packed_unpack_sweep(seed, block):
     got = np.asarray(d_pl[b0])[:e - s]
     np.testing.assert_array_equal(got[:min(block, e - s)],
                                   host.doc_ids[s:s + min(block, e - s)])
+
+
+def _np_unpack_block(words, bits, base, count, block):
+    """Independent numpy oracle for the bit-packed block decoder,
+    including the kernel's exact int32 wrap-around semantics."""
+    mask = (1 << bits) - 1 if bits < 32 else 0xFFFFFFFF
+    deltas = np.zeros(block, np.int64)
+    for lane in range(block):
+        bitpos = lane * bits
+        wi, off = divmod(bitpos, 32)
+        lo = int(words[wi]) >> off
+        hi = (int(words[min(wi + 1, len(words) - 1)]) << (32 - off)) \
+            if off else 0
+        deltas[lane] = (lo | hi) & mask
+    docs = int(base) + np.cumsum(deltas)
+    docs = ((docs + 2**31) % 2**32 - 2**31).astype(np.int32)  # i32 wrap
+    return np.where(np.arange(block) < count, docs, -1)
+
+
+@pytest.mark.parametrize("bits", list(range(4, 33)))
+@pytest.mark.parametrize("block", [16, 128])
+def test_packed_unpack_bit_width_sweep(bits, block):
+    """Cross-block bleed guard: the kernel's hi-word fetch clamps to the
+    LAST WORD OF THE BLOCK, so every bit width whose final lane lands on
+    a word boundary must still decode exactly — swept bits 4..32 against
+    an independent numpy unpacker over adversarial random words."""
+    rng = np.random.default_rng(bits * 1000 + block)
+    nb = 8
+    wpb = (block * bits + 31) // 32
+    # random words with all-ones high bytes mixed in: if the clamped
+    # hi-word fetch ever bled into a neighbouring lane, these would show
+    words = rng.integers(0, 2**32, size=(nb, wpb), dtype=np.uint32)
+    words[:, -1] |= np.uint32(0xFF000000)
+    bits_a = np.full(nb, bits, np.int32)
+    base_a = rng.integers(-5, 1000, size=nb).astype(np.int32)
+    count_a = rng.integers(1, block + 1, size=nb).astype(np.int32)
+    from repro.kernels.packed_postings import unpack_blocks_pallas
+    got = np.asarray(unpack_blocks_pallas(
+        jnp.asarray(words), jnp.asarray(bits_a), jnp.asarray(base_a),
+        jnp.asarray(count_a), block, interpret=True))
+    want = np.stack([_np_unpack_block(words[i], bits, base_a[i],
+                                      count_a[i], block)
+                     for i in range(nb)])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("bits", [4, 7, 11, 13, 17, 23, 29, 31, 32])
+def test_pack_roundtrip_bit_width_sweep(bits):
+    """pack -> kernel unpack is the identity for every bit width,
+    including widths whose final lane straddles a u32 word boundary."""
+    from repro.kernels.packed_postings import unpack_blocks_pallas
+    rng = np.random.default_rng(bits)
+    block = 128
+    hi = min(1 << bits, 2**24)        # keep cumsum inside int32
+    deltas = rng.integers(0, hi, size=block).astype(np.int64)
+    deltas[-1] = hi - 1               # force the last lane's full width
+    words = layouts._pack_block_np(deltas, bits, block)[None, :]
+    got = np.asarray(unpack_blocks_pallas(
+        jnp.asarray(words.astype(np.uint32)),
+        jnp.asarray([bits], np.int32), jnp.asarray([0], np.int32),
+        jnp.asarray([block], np.int32), block, interpret=True))[0]
+    np.testing.assert_array_equal(got, np.cumsum(deltas).astype(np.int32))
 
 
 @pytest.mark.parametrize("v,d,b,h,dtype", [

@@ -50,6 +50,29 @@ def test_conjunctive_is_subset_of_disjunctive(small_host, query_hashes):
             assert d in small_host.doc_ids[s:e]
 
 
+def test_conjunctive_counts_are_exact_ints(small_host, query_hashes):
+    """Regression: AND-membership counting must use an integer
+    accumulator — float32 loses integer exactness past 2**24, which
+    silently mis-filters long posting lists."""
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    q = jnp.asarray(query_hashes[0][:2])
+    counts_dtype = query.accumulate_counts(
+        jnp.zeros((1, 4), jnp.int32), jnp.ones((1, 4), bool), 8).dtype
+    assert counts_dtype == jnp.int32
+    # AND result equals the numpy ground truth doc set
+    conj = query.conjunctive_filter(ix, q, k=small_host.num_docs, cap=cap)
+    got = set(int(d) for d in np.asarray(conj.doc_ids) if d >= 0)
+    h2t = {int(h): i for i, h in enumerate(small_host.term_hashes)}
+    want = None
+    for h in np.asarray(q):
+        t = h2t[int(h)]
+        s, e = small_host.offsets[t], small_host.offsets[t + 1]
+        docs = set(small_host.doc_ids[s:e].tolist())
+        want = docs if want is None else want & docs
+    assert got == want
+
+
 def test_absent_and_empty_terms(small_host):
     ix = layouts.build_csr(small_host)
     cap = small_host.max_posting_len

@@ -1,5 +1,8 @@
 """Paper Table 4 analytic size model (+ hypothesis properties)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import size_model as sm
