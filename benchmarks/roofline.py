@@ -22,6 +22,22 @@ Methodology (CPU container — no wall-clock MFU possible):
     factors: all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all
     (n-1)/n, collective-permute 1.
 
+Engines (the ``query_bytes`` rows, emitted by ``query_hbm_bytes``):
+  the fused decode-and-score engine's per-query HBM traffic has a READ
+  side and a WRITE side, reported separately.
+  * Read rows ``query_bytes/hor`` vs ``query_bytes/packed``: posting
+    payload bytes for a sampled batch with cross-query block dedup —
+    the paper's §4.3 layout-determines-I/O claim (packed streams
+    <= ~0.5x of unpacked HOR).
+  * Write rows ``query_bytes/score_dense`` vs
+    ``query_bytes/score_candidates``: the PR-1 dense engine wrote a
+    ``[Q, num_docs]`` f32 score array to HBM before ``top_k``
+    (4·num_docs B/query — at corpus scale this write dwarfs the
+    compressed posting bytes the read side saved); the candidate
+    engine reduces each doc tile to ``k_tile`` (f32 value, i32 doc id)
+    pairs IN VMEM, so only 8·n_tiles·k_tile B/query reach HBM — the
+    write scales with ``n_tiles * k_tile``, not ``num_docs``.
+
 Emits one CSV row per cell and writes experiments/roofline.csv.
 """
 from __future__ import annotations
@@ -175,18 +191,25 @@ def analyze_cell(path: str) -> dict | None:
     }
 
 
-def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4) -> None:
-    """Measured posting-HBM bytes per query for the fused read path.
+def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4,
+                    k: int = 10) -> None:
+    """Measured posting-HBM bytes per query for the fused engine.
 
-    Counts the payload bytes the fused decode-and-score engine streams
-    for a sampled batch: each unique posting block touched by the batch
+    READ side: payload bytes the fused decode-and-score engine streams
+    for a sampled batch — each unique posting block touched by the batch
     is read ONCE (cross-query dedup).  HOR streams raw int32 doc ids +
     f32 tfs (8 B/posting); Packed streams the bit-packed words + f16 tfs
     (+12 B of per-block decode scalars) — the paper's §4.3 I/O argument,
     measured.  The packed/HOR ratio should be <= ~0.5.
+
+    WRITE side (the ranking tail): dense engine = 4·num_docs B/query of
+    f32 scores; candidate engine = 8·n_tiles·k_tile B/query of (value,
+    doc id) pairs — scaling with the tile grid and per-tile candidate
+    count instead of the corpus size.
     """
     from benchmarks.common import bench_host, emit
     from repro.core import layouts
+    from repro.kernels.fused_decode_score import TILE, default_k_tile
     from repro.text import corpus
 
     _, host = bench_host()
@@ -215,6 +238,20 @@ def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4) -> None:
     emit("roofline/query_bytes/packed", 0.0,
          f"bytes_per_query={packed_bytes / n_queries:.0f};"
          f"ratio_vs_hor={ratio:.3f}")
+
+    # score-WRITE bytes per query: dense [Q, num_docs] f32 vs the
+    # candidate engine's per-tile (f32 value, i32 doc id) pairs
+    num_docs = host.num_docs
+    n_tiles = max(-(-num_docs // TILE), 1)
+    k_tile = default_k_tile(k, TILE)
+    dense_bytes = num_docs * 4
+    cand_bytes = n_tiles * k_tile * 8
+    emit("roofline/query_bytes/score_dense", 0.0,
+         f"bytes_per_query={dense_bytes};num_docs={num_docs}")
+    emit("roofline/query_bytes/score_candidates", 0.0,
+         f"bytes_per_query={cand_bytes};n_tiles={n_tiles};"
+         f"k_tile={k_tile};k={k};"
+         f"ratio_vs_dense={cand_bytes / max(dense_bytes, 1):.4f}")
 
 
 def main(out_dir: str = "experiments/dryrun",

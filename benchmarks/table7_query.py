@@ -56,17 +56,24 @@ def main() -> None:
         # wide-row scatter); the Pallas kernel itself is timed below in
         # interpret mode (NOT hardware-representative).  max_pairs is the
         # engine's routing budget — the overflow counter verifies it.
+        # Both ranking tails are timed: "dense" (full [Q, num_docs]
+        # score array + top_k) and "candidates" (per-tile partial top-k
+        # + candidate merge — the HBM-write win is on real TPU; on CPU
+        # this row just verifies the tail costs about the same).
         for name in ("hor", "packed"):
-            fused = query.make_scorer(indexes[name], k=10, cap=cap,
-                                      engine="pallas", backend="xla",
-                                      max_pairs=MAX_PAIRS_PER_TERM * n_terms,
-                                      return_stats=True)
-            _, stats = fused(jnp.asarray(qh))
-            us = time_call(lambda q: fused(q)[0],
-                           jnp.asarray(qh)) / N_QUERIES
-            emit(f"table7/fused_{name}_b{N_QUERIES}/{n_terms}t", us,
-                 f"speedup_vs_jnp={jnp_time[name] / us:.2f};"
-                 f"pair_overflow={int(stats['pair_overflow'])}")
+            for mode in ("candidates", "dense"):
+                fused = query.make_scorer(
+                    indexes[name], k=10, cap=cap, engine="pallas",
+                    backend="xla", mode=mode,
+                    max_pairs=MAX_PAIRS_PER_TERM * n_terms,
+                    return_stats=True)
+                _, stats = fused(jnp.asarray(qh))
+                us = time_call(lambda q: fused(q)[0],
+                               jnp.asarray(qh)) / N_QUERIES
+                emit(f"table7/fused_{name}_{mode}_b{N_QUERIES}/"
+                     f"{n_terms}t", us,
+                     f"speedup_vs_jnp={jnp_time[name] / us:.2f};"
+                     f"pair_overflow={int(stats['pair_overflow'])}")
 
         # legacy single-query kernel glue via the XLA oracle path
         hor = indexes["hor"]
@@ -80,14 +87,15 @@ def main() -> None:
             tids, w)
         emit(f"table7/kernel_xla/{n_terms}t", us, "per_query")
 
-    # one interpret-mode timing of the real fused Pallas kernel (kernel
-    # SEMANTICS on CPU; wall time is the Python interpreter's, not HBM's)
+    # one interpret-mode timing of the real fused Pallas kernel in
+    # candidate mode (kernel SEMANTICS on CPU; wall time is the Python
+    # interpreter's, not HBM's)
     qh1 = corpus.sample_query_terms(host.df, host.term_hashes, N_QUERIES, 1,
                                     num_docs=host.num_docs, seed=1)
     fused_pl = query.make_scorer(indexes["hor"], k=10, cap=cap,
                                  engine="pallas")
     us = time_call(fused_pl, jnp.asarray(qh1), reps=1, warmup=1) / N_QUERIES
-    emit("table7/fused_hor_pallas_interp/1t", us,
+    emit("table7/fused_hor_pallas_interp_candidates/1t", us,
          "interpret_mode=not_hw_representative")
 
     emit("table7/paper_measured", 0.0,

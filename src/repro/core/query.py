@@ -37,6 +37,38 @@ def idf(df: Array, num_docs: int) -> Array:
                      0.0)
 
 
+def dedup_query_hashes(query_hashes: Array) -> Array:
+    """Zero out repeated term hashes within each query (keep the first).
+
+    A term name appearing in two slots of the padded query vector must
+    contribute ONCE: the gather phase reads one posting list per slot,
+    so without dedup the term's tf·idf weight is double-counted by every
+    engine and the query norm inflates.  Works on [..., T]; 0 (empty
+    slot) is never treated as a duplicate.
+    """
+    t = query_hashes.shape[-1]
+    eq = query_hashes[..., :, None] == query_hashes[..., None, :]
+    earlier = jnp.tril(jnp.ones((t, t), jnp.bool_), k=-1)
+    dup = jnp.any(eq & earlier, axis=-1) & (query_hashes != 0)
+    return jnp.where(dup, 0, query_hashes)
+
+
+def final_scores(scores: Array, norm: Array, rank: Array, qnorm: Array,
+                 rank_blend: float) -> Array:
+    """Batched q_doc scoring tail: cosine + static-rank blend; deleted
+    (norm == 0) and zero-score docs -> -inf.
+
+    scores f32[B, D], qnorm f32[B].  The fused candidate kernels apply
+    the SAME op sequence per resident tile
+    (``fused_decode_score._final_from_acc``), so candidate values are
+    bit-identical to this dense reference.
+    """
+    live = norm > 0
+    cosine = scores / (jnp.maximum(norm, 1e-12)[None, :] * qnorm[:, None])
+    final = cosine + rank_blend * rank[None, :]
+    return jnp.where(live[None, :] & (scores > 0), final, -jnp.inf)
+
+
 def accumulate_scores(doc_ids: Array, weights: Array, valid: Array,
                       num_docs: int) -> Array:
     """Scatter-add posting weights into a dense per-document accumulator.
@@ -72,6 +104,7 @@ def score_query(index: Any, query_hashes: Array, k: int, cap: int,
     Implements the paper's three-phase evaluation: lookup -> gather ->
     doc metadata; ranks by cosine(q, d) (+ optional static-rank blend).
     """
+    query_hashes = dedup_query_hashes(query_hashes)
     present = query_hashes != 0
     term_ids = index.lookup_terms(query_hashes)            # q_word
     term_ids = jnp.where(present, term_ids, -1)
@@ -87,11 +120,8 @@ def score_query(index: Any, query_hashes: Array, k: int, cap: int,
     # q_doc: norms + static rank for candidate docs (dense fetch here; the
     # distributed engine fetches only per-shard candidates).
     qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t), 1e-12))
-    norm = index.docs.norm
-    live = norm > 0            # deleted docs have norm == 0
-    cosine = scores / (jnp.maximum(norm, 1e-12) * qnorm)
-    final = cosine + rank_blend * index.docs.rank
-    final = jnp.where(live & (scores > 0), final, -jnp.inf)
+    final = final_scores(scores[None, :], index.docs.norm, index.docs.rank,
+                         qnorm[None], rank_blend)[0]
 
     top_scores, top_docs = jax.lax.top_k(final, k)
     hit = jnp.isfinite(top_scores)
@@ -110,35 +140,50 @@ def score_queries(index: Any, query_hashes: Array, k: int, cap: int,
 def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
                         rank_blend: float = 0.0,
                         max_pairs: int | None = None,
-                        backend: str = "pallas"):
+                        backend: str = "pallas",
+                        mode: str = "candidates"):
     """Batched evaluation through the fused decode-and-score Pallas
     engine (one HBM pass over the shared posting blocks for the whole
     batch).  Requires a BlockedIndex or PackedCsrIndex.
+
+    ``mode="candidates"`` (default) extracts per-tile top-k candidates
+    INSIDE the kernel — only O(B * n_tiles * k_tile) candidates reach
+    HBM, merged here by the pure ``merge_topk_candidates`` tier;
+    ``mode="dense"`` is the PR-1 engine (dense [B, num_docs] scores +
+    host-side top_k), kept as the byte-accounting reference.
 
     Returns (QueryResult, stats) where stats carries the routing
     ``pair_overflow`` counter — nonzero means postings were DROPPED
     because ``max_pairs`` was undersized, never silently.
     """
     from repro.kernels import ops   # engine dispatch (avoids import cycle)
+    from repro.distributed.topk import merge_topk_candidates
 
+    if mode not in ("candidates", "dense"):
+        raise ValueError(f"unknown fused-engine mode: {mode!r}")
+    query_hashes = dedup_query_hashes(query_hashes)
     present = query_hashes != 0                            # [B, T]
     term_ids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     df = index.term_df(term_ids)
     num_docs = index.docs.num_docs
     idf_t = idf(df, num_docs)
 
-    scores, overflow = ops.fused_batched_scores(
-        index, term_ids, idf_t, cap, max_pairs=max_pairs, backend=backend)
-    ops.warn_on_overflow(overflow, "fused engine")
-
-    # identical scoring tail to score_query (the parity oracle)
-    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t, axis=1), 1e-12))
-    norm = index.docs.norm
-    live = norm > 0
-    cosine = scores / (jnp.maximum(norm, 1e-12)[None, :] * qnorm[:, None])
-    final = cosine + rank_blend * index.docs.rank[None, :]
-    final = jnp.where(live[None, :] & (scores > 0), final, -jnp.inf)
-    top_scores, top_docs = jax.lax.top_k(final, k)
+    if mode == "candidates":
+        cand_v, cand_i, overflow = ops.fused_batched_topk(
+            index, term_ids, idf_t, cap, k, rank_blend=rank_blend,
+            max_pairs=max_pairs, backend=backend)
+        ops.warn_on_overflow(overflow, "fused engine")
+        top_scores, top_docs = merge_topk_candidates(cand_v, cand_i, k)
+    else:
+        scores, overflow = ops.fused_batched_scores(
+            index, term_ids, idf_t, cap, max_pairs=max_pairs,
+            backend=backend)
+        ops.warn_on_overflow(overflow, "fused engine")
+        # identical scoring tail to score_query (the parity oracle)
+        qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t, axis=1), 1e-12))
+        final = final_scores(scores, index.docs.norm, index.docs.rank,
+                             qnorm, rank_blend)
+        top_scores, top_docs = jax.lax.top_k(final, k)
     hit = jnp.isfinite(top_scores)
     result = QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
                          scores=jnp.where(hit, top_scores, 0.0))
@@ -147,19 +192,24 @@ def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
 
 def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
                 engine: str = "jnp", max_pairs: int | None = None,
-                backend: str = "pallas", return_stats: bool = False
+                backend: str = "pallas", mode: str = "candidates",
+                return_stats: bool = False
                 ) -> Callable[[Array], QueryResult]:
     """jit-compiled batched scorer with the index captured as constants.
 
     ``engine="jnp"`` is the dense pure-jnp oracle; ``engine="pallas"``
     dispatches the fused batched decode-and-score kernel (BlockedIndex /
-    PackedCsrIndex only) — same ranked results, one HBM pass.
+    PackedCsrIndex only) — same ranked results, one HBM pass, and (with
+    the default ``mode="candidates"``) in-kernel per-tile top-k so the
+    dense score array never reaches HBM.
     ``backend`` tunes the fused engine's lowering ("pallas" auto /
     "pallas-tpu" / "xla" plain-HLO with the same block dedup).  With
     ``return_stats=True`` the scorer returns (QueryResult, stats).
     """
     if engine not in ("jnp", "pallas"):
         raise ValueError(f"unknown engine: {engine!r}")
+    if mode not in ("candidates", "dense"):
+        raise ValueError(f"unknown fused-engine mode: {mode!r}")
     if engine == "pallas":
         from repro.core.layouts import BlockedIndex, PackedCsrIndex
         if not isinstance(index, (BlockedIndex, PackedCsrIndex)):
@@ -172,7 +222,7 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
         if engine == "pallas":
             result, stats = fused_score_queries(
                 index, query_hashes, k=k, cap=cap, rank_blend=rank_blend,
-                max_pairs=max_pairs, backend=backend)
+                max_pairs=max_pairs, backend=backend, mode=mode)
         else:
             result = score_queries(index, query_hashes, k=k, cap=cap,
                                    rank_blend=rank_blend)
@@ -187,8 +237,22 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
 
 
 def conjunctive_filter(index: Any, query_hashes: Array, k: int,
-                       cap: int) -> QueryResult:
-    """AND semantics: docs must contain every present query term."""
+                       cap: int) -> tuple[QueryResult, dict]:
+    """AND semantics: docs must contain every present query term.
+
+    Duplicate hashes are deduplicated first so ``needed`` counts UNIQUE
+    present terms (a repeated slot used to inflate both the membership
+    counts and the threshold, and to double-count the tf·idf weight).
+
+    Returns (QueryResult, stats).  ``stats["truncated_terms"]`` counts
+    present terms whose posting list is LONGER than ``cap``: the gather
+    phase drops their tail postings, so membership can be undercounted
+    and true AND matches silently lost — like the fused engine's
+    ``pair_overflow``, the truncation is surfaced instead of returning
+    a silently wrong result (re-run with ``cap >= max df`` for exact
+    AND semantics).
+    """
+    query_hashes = dedup_query_hashes(query_hashes)
     present = query_hashes != 0
     term_ids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     df = index.term_df(term_ids)
@@ -199,10 +263,12 @@ def conjunctive_filter(index: Any, query_hashes: Array, k: int,
     scores = accumulate_scores(d, w, valid, num_docs)
     counts = accumulate_counts(d, valid, num_docs)
     needed = jnp.sum(present.astype(jnp.int32))
+    truncated = jnp.sum(((df > cap) & (term_ids >= 0)).astype(jnp.int32))
     ok = counts >= needed
     final = jnp.where(ok & (index.docs.norm > 0),
                       scores / jnp.maximum(index.docs.norm, 1e-12), -jnp.inf)
     top_scores, top_docs = jax.lax.top_k(final, k)
     hit = jnp.isfinite(top_scores)
-    return QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
-                       scores=jnp.where(hit, top_scores, 0.0))
+    result = QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
+                         scores=jnp.where(hit, top_scores, 0.0))
+    return result, {"truncated_terms": truncated}

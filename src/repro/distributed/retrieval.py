@@ -35,7 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import layouts, segments
 from repro.core.layouts import PostingsHost
-from repro.core.query import idf as idf_fn
+from repro.core.query import dedup_query_hashes, idf as idf_fn
 from repro.distributed.topk import local_topk_merge
 from repro.distributed.shmap import shard_map
 
@@ -146,6 +146,7 @@ def make_doc_sharded_scorer(index: DocShardedIndex, mesh: Mesh, axis: str,
         in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
     def score(ix, qh):
         sq = {n: v[0] for n, v in ix.items()}    # drop shard dim
+        qh = dedup_query_hashes(qh)
         pos = jnp.searchsorted(sq["sorted_hash"], qh).astype(jnp.int32)
         pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
         hit = (sq["sorted_hash"][pos] == qh) & (qh != 0)
@@ -255,6 +256,7 @@ def make_term_sharded_scorer(index: TermShardedIndex, mesh: Mesh, axis: str,
         in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
     def score(ix, qh):
         sq = {n: (v[0] if n != "norm" else v) for n, v in ix.items()}
+        qh = dedup_query_hashes(qh)
         pos = jnp.searchsorted(sq["sorted_hash"], qh).astype(jnp.int32)
         pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
         hit = (sq["sorted_hash"][pos] == qh) & (qh != 0)
@@ -394,11 +396,17 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
                                   axis: str, k: int = 10):
     """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
 
-    Same contract as ``make_doc_sharded_scorer`` but every shard runs the
-    fused decode-and-score Pallas kernel over its local posting blocks
-    instead of the dense scatter-add."""
+    Same contract as ``make_doc_sharded_scorer`` but every shard runs
+    the fused decode-and-score Pallas kernel in CANDIDATE mode over its
+    local posting blocks: each doc tile is reduced to a per-tile top-k
+    in VMEM (the dense local score vector never reaches HBM), the
+    shard's tile candidates become global candidates via ``doc_base``,
+    and a thin all-gather candidate merge produces the global answer —
+    the ODYS-style per-partition extraction + merge tier."""
+    from repro.distributed.topk import local_candidate_merge
     from repro.kernels.fused_decode_score import (
-        Q_PAD, build_batched_pairs, fused_score_blocked_pallas)
+        Q_PAD, build_batched_pairs, default_k_tile,
+        fused_topk_blocked_pallas)
     from repro.kernels.ops import (expand_block_candidates,
                                     warn_on_overflow)
 
@@ -407,6 +415,7 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
     n_tiles = max(-(-dmax // tile), 1)
     num_docs = index.num_docs
     m_blocks = max(index.max_blocks_per_term, 1)
+    k_tile = default_k_tile(k, tile)
 
     sharded = {n: P(axis) for n in
                ("sorted_hash", "df_global", "block_offsets", "block_docs",
@@ -417,6 +426,7 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
         in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
     def score(ix, qh):
         sq = {n: v[0] for n, v in ix.items()}    # drop shard dim
+        qh = dedup_query_hashes(qh)
         t = qh.shape[0]
         pos = jnp.searchsorted(sq["sorted_hash"], qh).astype(jnp.int32)
         pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
@@ -438,16 +448,186 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
         # formula is ever loosened
         warn_on_overflow(ovf, "doc-sharded fused engine")
         pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
-        scores = fused_score_blocked_pallas(
-            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
-            dmax, tile)[0]
-
         qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
+        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
+        vals, ids = fused_topk_blocked_pallas(
+            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
+            sq["norm"], jnp.zeros_like(sq["norm"]), qn, dmax, k_tile,
+            tile=tile)
+        gids = jnp.where(ids[0] >= 0, ids[0] + sq["doc_base"], -1)
+        return local_candidate_merge(vals[0], gids, k, axis)
+
+    return jax.jit(lambda qh: score(arrs, qh))
+
+
+# ---------------------------------------------------------------------------
+# term-partitioned, fused Pallas engine (HOR blocks per vocab shard)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockedTermShardedIndex:
+    """Stacked per-vocab-shard HOR arrays for the fused engine.
+
+    Each shard owns a contiguous hash range of the vocabulary as whole
+    posting lists re-packed into 128-lane blocks with GLOBAL doc ids
+    (the doc/tile space is the full corpus, identical on every shard),
+    plus the build-time (block -> doc-tile) routing cache.
+    """
+    sorted_hash: np.ndarray    # u32[S, Wmax]  (padded with 0xFFFFFFFF)
+    df: np.ndarray             # i32[S, Wmax]  global df (terms are whole)
+    block_offsets: np.ndarray  # i32[S, Wmax+1]
+    block_docs: np.ndarray     # i32[S, NBmax, BLOCK]  GLOBAL doc ids
+    block_tfs: np.ndarray      # f32[S, NBmax, BLOCK]
+    tile_first: np.ndarray     # i32[S, NBmax]
+    tile_count: np.ndarray     # i32[S, NBmax]
+    norm: np.ndarray           # f32[D] (replicated)
+    n_shards: int
+    num_docs: int
+    tile: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def build_term_sharded_blocked(host: PostingsHost, n_shards: int
+                               ) -> BlockedTermShardedIndex:
+    order = np.argsort(host.term_hashes, kind="stable")
+    W = host.num_terms
+    bounds = np.linspace(0, W, n_shards + 1).astype(np.int64)
+    wmax = int(np.max(np.diff(bounds)))
+
+    shards = []
+    for s in range(n_shards):
+        terms = order[bounds[s]:bounds[s + 1]]
+        lens = (host.offsets[terms + 1] - host.offsets[terms]).astype(np.int64)
+        offs = np.zeros(len(terms) + 1, dtype=np.int64)
+        np.cumsum(lens, out=offs[1:])
+        docs = np.zeros(int(offs[-1]), np.int32)
+        tfs = np.zeros(int(offs[-1]), np.float32)
+        for i, t in enumerate(terms):
+            a, bnd = host.offsets[t], host.offsets[t + 1]
+            docs[offs[i]:offs[i + 1]] = host.doc_ids[a:bnd]
+            tfs[offs[i]:offs[i + 1]] = host.tfs[a:bnd]
+        sub = PostingsHost(term_hashes=host.term_hashes[terms],
+                           df=host.df[terms].astype(np.int32),
+                           offsets=offs, doc_ids=docs, tfs=tfs,
+                           num_docs=host.num_docs,
+                           norm=host.norm, rank=host.rank)
+        shards.append(layouts.build_blocked(sub))
+
+    block = shards[0].block
+    nbmax = max(int(ix.block_docs.shape[0]) for ix in shards)
+    S = n_shards
+    sh_a = np.full((S, wmax), 0xFFFFFFFF, np.uint32)
+    df_a = np.zeros((S, wmax), np.int32)
+    offs_a = np.zeros((S, wmax + 1), np.int32)
+    bd = np.full((S, nbmax, block), -1, np.int32)
+    bt = np.zeros((S, nbmax, block), np.float32)
+    tf_a = np.zeros((S, nbmax), np.int32)
+    tc_a = np.zeros((S, nbmax), np.int32)
+    for s, ix in enumerate(shards):
+        w = int(ix.sorted_hash.shape[0])
+        nb = int(ix.block_docs.shape[0])
+        sh_a[s, :w] = np.asarray(ix.sorted_hash)
+        df_a[s, :w] = np.asarray(ix.df)
+        offs_a[s, :w + 1] = np.asarray(ix.block_offsets)
+        offs_a[s, w + 1:] = offs_a[s, w]
+        bd[s, :nb] = np.asarray(ix.block_docs)
+        bt[s, :nb] = np.asarray(ix.block_tfs)
+        tf_a[s, :nb] = np.asarray(ix.tile_first)
+        tc_a[s, :nb] = np.asarray(ix.tile_count)
+    return BlockedTermShardedIndex(
+        sorted_hash=sh_a, df=df_a, block_offsets=offs_a,
+        block_docs=bd, block_tfs=bt, tile_first=tf_a, tile_count=tc_a,
+        norm=host.norm.astype(np.float32), n_shards=S,
+        num_docs=host.num_docs, tile=layouts.ROUTE_TILE,
+        max_blocks_per_term=max(ix.max_blocks_per_term for ix in shards),
+        route_span_max=max(ix.route_span_max for ix in shards),
+        route_pairs_max=max(ix.route_pairs_max for ix in shards),
+    )
+
+
+def make_term_sharded_fused_scorer(index: BlockedTermShardedIndex,
+                                   mesh: Mesh, axis: str, k: int = 10):
+    """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
+
+    Term-partitioned fused engine: each shard scores only the query
+    terms it owns through the fused Pallas kernel (partial scores over
+    the GLOBAL doc space), pays the term-sharding tax — a full [D] psum
+    of partials — then the candidate tier takes over: every shard
+    reduces its 1/S slice of the doc-tile grid to per-tile candidates
+    and an all-gather candidate merge yields the global top-k, so the
+    post-psum ranking tail is candidate-sized instead of dense.
+    """
+    from repro.distributed.topk import local_candidate_merge
+    from repro.kernels.fused_decode_score import (
+        Q_PAD, build_batched_pairs, default_k_tile,
+        extract_tile_candidates, fused_score_blocked_pallas)
+    from repro.kernels.ops import (expand_block_candidates,
+                                    warn_on_overflow)
+
+    arrs = index.device_arrays()
+    num_docs, tile = index.num_docs, index.tile
+    n_tiles = max(-(-num_docs // tile), 1)
+    S = index.n_shards
+    m_blocks = max(index.max_blocks_per_term, 1)
+    k_tile = default_k_tile(k, tile)
+    # per-shard slice of the tile grid for candidate extraction
+    tiles_per = -(-n_tiles // S)
+    chunk = tiles_per * tile
+
+    sharded = {n: P(axis) for n in
+               ("sorted_hash", "df", "block_offsets", "block_docs",
+                "block_tfs", "tile_first", "tile_count")}
+    sharded["norm"] = P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
+    def score(ix, qh):
+        sq = {n: (v[0] if n != "norm" else v) for n, v in ix.items()}
+        qh = dedup_query_hashes(qh)
+        t = qh.shape[0]
+        pos = jnp.searchsorted(sq["sorted_hash"], qh).astype(jnp.int32)
+        pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
+        hit = (sq["sorted_hash"][pos] == qh) & (qh != 0)
+        tid = jnp.where(hit, pos, -1)       # terms NOT on this shard miss
+        w = idf_fn(jnp.where(hit, sq["df"][pos], 0), num_docs)
+
+        cand_block, cand_valid, cand_q, cand_w, _ = \
+            expand_block_candidates(sq["block_offsets"], tid[None],
+                                    w[None], m_blocks,
+                                    sq["block_docs"].shape[-1])
+        max_pairs = max(min(index.route_pairs_max,
+                            t * m_blocks * max(index.route_span_max, 1)), 8)
+        pb, pt, pqw, pcap, ovf = build_batched_pairs(
+            cand_block, cand_valid, cand_q, cand_w,
+            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs)
+        warn_on_overflow(ovf, "term-sharded fused engine")
+        pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+        partial = fused_score_blocked_pallas(
+            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
+            num_docs, tile)[0]
+        # THE term-partitioned cost: a full [D] psum across shards
+        scores = jax.lax.psum(partial, axis)
+        qn2 = jax.lax.psum(jnp.sum(w * w), axis)
+        qnorm = jnp.sqrt(jnp.maximum(qn2, 1e-12))
         live = sq["norm"] > 0
         final = jnp.where(live & (scores > 0),
                           scores / (jnp.maximum(sq["norm"], 1e-12) * qnorm),
                           -jnp.inf)
-        vv, ids = local_topk_merge(final, k, axis, sq["doc_base"])
-        return vv, ids
+        s_idx = jax.lax.axis_index(axis)
+        fpad = jnp.pad(final, (0, S * chunk - num_docs),
+                       constant_values=-jnp.inf)
+        local = jax.lax.dynamic_slice(fpad, (s_idx * chunk,), (chunk,))
+        v, ids = extract_tile_candidates(local[None], tile, k_tile)
+        gids = jnp.where(ids[0] >= 0, ids[0] + s_idx * chunk, -1)
+        return local_candidate_merge(v[0], gids, k, axis)
 
     return jax.jit(lambda qh: score(arrs, qh))

@@ -5,6 +5,13 @@ global answer is the top-k of the all-gathered per-shard candidates —
 k·n_shards values instead of the full score vector, which is the
 standard scatter-gather trick every production search tier uses.
 
+``merge_topk_candidates`` is the pure (collective-free) core of that
+merge: it is shared by the single-node fused engine's per-tile candidate
+path (kernels/fused_decode_score.py reduces each doc tile to a small
+candidate set in VMEM; the merge of those candidate lists is exactly a
+shard merge with tiles playing the role of shards) and by the shard_map
+scorers here.
+
 Implemented with shard_map + jax.lax collectives, so it composes with
 the retrieval engine in distributed/retrieval.py and with the recsys
 ``retrieval_cand`` cells.
@@ -22,20 +29,57 @@ from jax.sharding import Mesh, PartitionSpec as P
 Array = jax.Array
 
 
+def merge_topk_candidates(values: Array, ids: Array, k: int
+                          ) -> tuple[Array, Array]:
+    """Pure top-k merge of candidate (value, id) lists on the last axis.
+
+    values f32[..., C], ids i32[..., C] — candidate lists from any
+    partitioning (per-tile, per-shard, all-gathered...).  Pads with
+    -inf / -1 when C < k, so ``k`` may exceed the candidate count.
+
+    Tie-breaking: ``jax.lax.top_k`` keeps the EARLIEST candidate among
+    equal values, so when candidate lists are ordered by ascending doc
+    id (per-tile lists concatenated tile-major, each sorted descending
+    with ascending-id ties), the merged ranking tie-breaks on lowest
+    doc id — bit-identical to a dense ``top_k`` over all documents.
+    """
+    c = values.shape[-1]
+    if c < k:
+        pad = [(0, 0)] * (values.ndim - 1) + [(0, k - c)]
+        values = jnp.pad(values, pad, constant_values=-jnp.inf)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    v, pos = jax.lax.top_k(values, k)
+    return v, jnp.take_along_axis(ids, pos, axis=-1)
+
+
 def local_topk_merge(scores: Array, k: int, axis_name: str,
                      shard_offset: Array) -> tuple[Array, Array]:
     """Inside shard_map: scores f32[local_n] -> global (values, ids)[k].
 
     ``shard_offset``: scalar global id of this shard's first row.
+    ``k`` may exceed the shard's local length (``jax.lax.top_k``
+    requires k <= n): the local top-k is clamped to the local size and
+    padded with -inf values / -1 ids before the all-gather merge.
     """
-    v, i = jax.lax.top_k(scores, k)
+    local_n = scores.shape[-1]
+    kl = min(k, local_n)
+    v, i = jax.lax.top_k(scores, kl)
     gids = i + shard_offset
-    all_v = jax.lax.all_gather(v, axis_name)         # [S, k]
-    all_g = jax.lax.all_gather(gids, axis_name)
-    flat_v = all_v.reshape(-1)
-    flat_g = all_g.reshape(-1)
-    vv, ii = jax.lax.top_k(flat_v, k)
-    return vv, flat_g[ii]
+    if kl < k:
+        v = jnp.pad(v, (0, k - kl), constant_values=-jnp.inf)
+        gids = jnp.pad(gids, (0, k - kl), constant_values=-1)
+    return local_candidate_merge(v, gids, k, axis_name)
+
+
+def local_candidate_merge(values: Array, ids: Array, k: int,
+                          axis_name: str) -> tuple[Array, Array]:
+    """Inside shard_map: merge per-shard candidate lists to a global
+    top-k — the thin tier over any per-shard candidate extraction
+    (dense local top-k or the fused engine's per-tile candidates).
+    """
+    all_v = jax.lax.all_gather(values, axis_name).reshape(-1)   # [S*C]
+    all_g = jax.lax.all_gather(ids, axis_name).reshape(-1)
+    return merge_topk_candidates(all_v, all_g, k)
 
 
 def sharded_topk(mesh: Mesh, axis: str, scores_spec: P = None):

@@ -1,5 +1,6 @@
 """Pallas TPU kernel: fused batched decode-and-score — one HBM pass from
-(possibly bit-packed) posting blocks to dense per-query scores.
+(possibly bit-packed) posting blocks to dense per-query scores, or (the
+candidate path) straight to per-tile top-k candidates.
 
 The paper's §4.3 claim is that query cost is dominated by posting-list
 I/O, so the compressed layout must NOT be decompressed through HBM
@@ -24,9 +25,32 @@ tile stays resident in VMEM for one contiguous run of grid steps
 table is a build-time cache on the index (``tile_first``/``tile_count``),
 not a per-query computation.
 
+CANDIDATE EXTRACTION (the ``fused_topk_*`` variants): the dense engine
+still wrote a ``[Q, num_docs]`` score array to HBM before ``top_k`` —
+at corpus scale that write dwarfs the compressed posting bytes the read
+path saved.  The candidate kernels keep the ``[Q, tile]`` accumulator in
+VMEM SCRATCH instead of an output block; on a tile's LAST grid step
+(tile-sorted pairs make the run contiguous, so "last" is a prefetched
+flag) the accumulator is reduced IN VMEM to a per-tile candidate set:
+
+  * the doc-metadata tail (norm division, deleted-doc mask, static-rank
+    blend — bit-identical op sequence to the jnp oracle's scoring tail)
+    is applied to the resident tile, and
+  * ``k_tile`` successive maxima are extracted (lowest-lane tie-break,
+    matching ``jax.lax.top_k``) as (value, global doc id) pairs.
+
+Only ``O(Q * n_tiles * k_tile)`` candidates ever reach HBM; a pure
+``merge_topk_candidates`` (distributed/topk.py) over the tile-major
+candidate lists reproduces the dense oracle's ranked ids bit-exactly
+because per-tile lists are value-sorted with ascending-id ties and tiles
+are concatenated in ascending doc order.  ``k_tile >= min(k, tile)``
+guarantees no global top-k entry is lost.
+
 HBM bytes per batch ~ sum over unique (block, tile) pairs of the block's
 payload: ``4*ceil(128*bits/32) + 2*128`` bytes packed vs ``8*128`` bytes
-unpacked — the roofline benchmark reports the measured ratio.
+unpacked, plus ``Q * n_tiles * k_tile * 8`` candidate bytes out (vs
+``Q * num_docs * 4`` dense) — the roofline benchmark reports both
+ratios.
 """
 from __future__ import annotations
 
@@ -37,20 +61,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.query import final_scores
 from repro.kernels.runtime import resolve_interpret
 
 Array = jax.Array
 
 TILE = 512   # doc-space tile width (4 x 128 lanes), matches posting_score
 Q_PAD = 8    # query-batch padding quantum (f32 sublane width)
+K_PAD = 8    # candidate-count padding quantum (per-tile k_tile lanes)
 
 
-def _accumulate(docs, tfs, qw, tile_base, lane_cap, out_ref, tile: int):
-    """Shared scoring tail: one-hot matmul + rank-1 batch update.
+def default_k_tile(k: int, tile: int = TILE) -> int:
+    """Per-tile candidate count: >= min(k, tile) (exactness floor),
+    rounded up to the K_PAD lane quantum, never wider than the tile."""
+    return min(tile, max(K_PAD, -(-max(k, 1) // K_PAD) * K_PAD))
+
+
+def _tile_contribution(docs, tfs, qw, tile_base, lane_cap, tile: int):
+    """Shared scoring step: one-hot matmul + rank-1 batch update.
 
     ``lane_cap`` truncates the block at posting granularity so the
     engine honours a per-term ``cap`` that cuts mid-block, exactly like
-    the jnp oracle's gather.
+    the jnp oracle's gather.  Returns the [Q, tile] contribution.
     """
     block = docs.shape[0]
     lane0 = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
@@ -61,39 +93,13 @@ def _accumulate(docs, tfs, qw, tile_base, lane_cap, out_ref, tile: int):
     onehot = (local[:, None] == lane).astype(jnp.float32)     # [B, tile]
     row = jnp.dot(w[None, :], onehot,
                   preferred_element_type=jnp.float32)         # [1, tile] MXU
-    out_ref[0] += jnp.dot(qw[:, None], row,
-                          preferred_element_type=jnp.float32)  # [Q, tile]
+    return jnp.dot(qw[:, None], row,
+                   preferred_element_type=jnp.float32)        # [Q, tile]
 
 
-def _fused_blocked_kernel(pair_block, pair_tile, pair_first,
-                          pair_cap,                            # SMEM prefetch
-                          docs_ref, tfs_ref, qw_ref,           # VMEM inputs
-                          out_ref, *, tile: int):
-    i = pl.program_id(0)
-
-    @pl.when(pair_first[i] == 1)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    _accumulate(docs_ref[0, :], tfs_ref[0, :], qw_ref[0, :],
-                pair_tile[i] * tile, pair_cap[i], out_ref, tile)
-
-
-def _fused_packed_kernel(pair_block, pair_tile, pair_first, pair_cap,
-                         pair_bits, pair_base, pair_count,     # SMEM prefetch
-                         words_ref, tfs_ref, qw_ref,           # VMEM inputs
-                         out_ref, *, tile: int, block: int):
-    i = pl.program_id(0)
-
-    @pl.when(pair_first[i] == 1)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    # in-VMEM decode (packed_postings' _unpack_kernel, fused)
-    bits = pair_bits[i].astype(jnp.uint32)
-    base = pair_base[i]
-    count = pair_count[i]
-    words = words_ref[0, :]                                   # u32[Wpb]
+def _unpack_block_vmem(words, bits, base, count, block: int):
+    """In-VMEM decode of one delta+bit-packed block (the
+    ``packed_postings`` kernel body, shared by both packed kernels)."""
     lane = jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
     bitpos = lane * bits
     wi = (bitpos >> 5).astype(jnp.int32)
@@ -108,16 +114,96 @@ def _fused_packed_kernel(pair_block, pair_tile, pair_first, pair_cap,
     deltas = (raw & mask).astype(jnp.int32)
     docs = base + jnp.cumsum(deltas)
     valid = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) < count
-    docs = jnp.where(valid, docs, -1)
+    return jnp.where(valid, docs, -1)
 
-    _accumulate(docs, tfs_ref[0, :].astype(jnp.float32), qw_ref[0, :],
-                pair_tile[i] * tile, pair_cap[i], out_ref, tile)
+
+def _final_from_acc(acc, norm, rank, qnorm, rank_blend: float):
+    """The oracle's q_doc scoring tail, applied to one resident tile.
+
+    Delegates to the ONE shared definition (``core.query.final_scores``)
+    so candidate values stay bit-identical to the dense reference — any
+    change to the tail changes both sides at once.
+    """
+    return final_scores(acc, norm, rank, qnorm, rank_blend)
+
+
+def _tile_topk(final, base, k_tile: int, tile: int):
+    """Extract k_tile successive maxima from a [Q, tile] tile in VMEM.
+
+    Tie-break: lowest lane (== lowest doc id) first — the same order
+    ``jax.lax.top_k`` produces, so the host-side merge of per-tile lists
+    matches a dense top_k exactly.  Exhausted rows yield (-inf, -1).
+    """
+    q = final.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (q, tile), 1)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (q, k_tile), 1)
+
+    def body(j, carry):
+        work, vals, ids = carry
+        m = jnp.max(work, axis=1)                              # [Q]
+        am = jnp.min(jnp.where(work == m[:, None], lane, tile), axis=1)
+        gid = jnp.where(jnp.isfinite(m), base + am, -1)
+        sel = kidx == j
+        vals = jnp.where(sel, m[:, None], vals)
+        ids = jnp.where(sel, gid[:, None], ids)
+        work = jnp.where(lane == am[:, None], -jnp.inf, work)
+        return work, vals, ids
+
+    _, vals, ids = jax.lax.fori_loop(
+        0, k_tile, body,
+        (final, jnp.full((q, k_tile), -jnp.inf, jnp.float32),
+         jnp.full((q, k_tile), -1, jnp.int32)))
+    return vals, ids
+
+
+# ---------------------------------------------------------------------------
+# dense kernels (scores for every document; the PR-1 engine)
+# ---------------------------------------------------------------------------
+
+
+def _fused_blocked_kernel(pair_block, pair_tile, pair_first,
+                          pair_cap,                            # SMEM prefetch
+                          docs_ref, tfs_ref, qw_ref,           # VMEM inputs
+                          out_ref, *, tile: int):
+    i = pl.program_id(0)
+
+    @pl.when(pair_first[i] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0] += _tile_contribution(docs_ref[0, :], tfs_ref[0, :],
+                                     qw_ref[0, :], pair_tile[i] * tile,
+                                     pair_cap[i], tile)
+
+
+def _fused_packed_kernel(pair_block, pair_tile, pair_first, pair_cap,
+                         pair_bits, pair_base, pair_count,     # SMEM prefetch
+                         words_ref, tfs_ref, qw_ref,           # VMEM inputs
+                         out_ref, *, tile: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(pair_first[i] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    docs = _unpack_block_vmem(words_ref[0, :],
+                              pair_bits[i].astype(jnp.uint32),
+                              pair_base[i], pair_count[i], block)
+    out_ref[0] += _tile_contribution(docs, tfs_ref[0, :].astype(jnp.float32),
+                                     qw_ref[0, :], pair_tile[i] * tile,
+                                     pair_cap[i], tile)
 
 
 def _pair_first(pair_tile: Array) -> Array:
     return jnp.concatenate(
         [jnp.ones(1, jnp.int32),
          (pair_tile[1:] != pair_tile[:-1]).astype(jnp.int32)])
+
+
+def _pair_last(pair_tile: Array) -> Array:
+    return jnp.concatenate(
+        [(pair_tile[1:] != pair_tile[:-1]).astype(jnp.int32),
+         jnp.ones(1, jnp.int32)])
 
 
 def _finish(out: Array, pair_tile: Array, n_tiles: int, tile: int,
@@ -205,6 +291,226 @@ def fused_score_packed_pallas(packed: Array, block_tfs: Array,
     return _finish(out, pair_tile, n_tiles, tile, num_docs)
 
 
+# ---------------------------------------------------------------------------
+# candidate-extraction kernels (per-tile partial top-k; the dense score
+# write never reaches HBM)
+# ---------------------------------------------------------------------------
+
+
+def _fused_blocked_topk_kernel(pair_block, pair_tile, pair_first, pair_last,
+                               pair_cap,                       # SMEM prefetch
+                               docs_ref, tfs_ref, qw_ref,
+                               norm_ref, rank_ref, qn_ref,     # VMEM inputs
+                               val_ref, idx_ref,               # VMEM outputs
+                               acc_ref,                        # VMEM scratch
+                               *, tile: int, k_tile: int, rank_blend: float):
+    i = pl.program_id(0)
+
+    @pl.when(pair_first[i] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _tile_contribution(docs_ref[0, :], tfs_ref[0, :],
+                                       qw_ref[0, :], pair_tile[i] * tile,
+                                       pair_cap[i], tile)
+
+    @pl.when(pair_last[i] == 1)
+    def _reduce():
+        final = _final_from_acc(acc_ref[...], norm_ref[0, :], rank_ref[0, :],
+                                qn_ref[0, :], rank_blend)
+        vals, ids = _tile_topk(final, pair_tile[i] * tile, k_tile, tile)
+        val_ref[0] = vals
+        idx_ref[0] = ids
+
+
+def _fused_packed_topk_kernel(pair_block, pair_tile, pair_first, pair_last,
+                              pair_cap, pair_bits, pair_base,
+                              pair_count,                      # SMEM prefetch
+                              words_ref, tfs_ref, qw_ref,
+                              norm_ref, rank_ref, qn_ref,      # VMEM inputs
+                              val_ref, idx_ref,                # VMEM outputs
+                              acc_ref,                         # VMEM scratch
+                              *, tile: int, block: int, k_tile: int,
+                              rank_blend: float):
+    i = pl.program_id(0)
+
+    @pl.when(pair_first[i] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    docs = _unpack_block_vmem(words_ref[0, :],
+                              pair_bits[i].astype(jnp.uint32),
+                              pair_base[i], pair_count[i], block)
+    acc_ref[...] += _tile_contribution(docs,
+                                       tfs_ref[0, :].astype(jnp.float32),
+                                       qw_ref[0, :], pair_tile[i] * tile,
+                                       pair_cap[i], tile)
+
+    @pl.when(pair_last[i] == 1)
+    def _reduce():
+        final = _final_from_acc(acc_ref[...], norm_ref[0, :], rank_ref[0, :],
+                                qn_ref[0, :], rank_blend)
+        vals, ids = _tile_topk(final, pair_tile[i] * tile, k_tile, tile)
+        val_ref[0] = vals
+        idx_ref[0] = ids
+
+
+def _doc_tiles(norm: Array, rank: Array, n_tiles: int, tile: int):
+    """Pad per-doc metadata to the tile grid (+ a zero trash tile for
+    padding pairs; norm 0 there marks every lane deleted)."""
+    pad = n_tiles * tile - norm.shape[0]
+    z = jnp.zeros((1, tile), jnp.float32)
+    nt = jnp.pad(norm.astype(jnp.float32), (0, pad)).reshape(n_tiles, tile)
+    rt = jnp.pad(rank.astype(jnp.float32), (0, pad)).reshape(n_tiles, tile)
+    return jnp.concatenate([nt, z]), jnp.concatenate([rt, z])
+
+
+def _finish_candidates(vals: Array, ids: Array, pair_tile: Array,
+                       n_tiles: int, k_tile: int):
+    """Mask never-visited (garbage) tiles to (-inf, -1), flatten the
+    per-tile candidate lists tile-major to [Q, n_tiles * k_tile]."""
+    visited = jnp.zeros((n_tiles + 1,), jnp.bool_).at[pair_tile].set(True)
+    vals = jnp.where(visited[:, None, None], vals, -jnp.inf)
+    ids = jnp.where(visited[:, None, None], ids, -1)
+    q = vals.shape[1]
+    return (vals[:n_tiles].transpose(1, 0, 2).reshape(q, n_tiles * k_tile),
+            ids[:n_tiles].transpose(1, 0, 2).reshape(q, n_tiles * k_tile))
+
+
+def fused_topk_blocked_pallas(block_docs: Array, block_tfs: Array,
+                              pair_block: Array, pair_tile: Array,
+                              pair_qw: Array, pair_cap: Array,
+                              norm: Array, rank: Array, qnorm: Array,
+                              num_docs: int, k_tile: int,
+                              rank_blend: float = 0.0, tile: int = TILE,
+                              interpret: bool | None = None):
+    """HOR candidate path: same routing contract as the dense kernel,
+    plus per-doc metadata (norm f32[num_docs], rank f32[num_docs]) and
+    per-query norms (qnorm f32[Q], padding queries should carry 1.0).
+    Returns (values f32[Q, n_tiles*k_tile], ids i32[Q, n_tiles*k_tile])
+    tile-major candidate lists of FINAL scores — the dense [Q, num_docs]
+    array never leaves VMEM."""
+    nb, b = block_docs.shape
+    np_pairs, q = pair_qw.shape
+    n_tiles = max(-(-num_docs // tile), 1)
+    norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(np_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i, pb, pt, pf, pg, pc: (pb[i], 0)),
+            pl.BlockSpec((1, b), lambda i, pb, pt, pf, pg, pc: (pb[i], 0)),
+            pl.BlockSpec((1, q), lambda i, pb, pt, pf, pg, pc: (i, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0)),
+            pl.BlockSpec((1, q), lambda i, pb, pt, pf, pg, pc: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, k_tile),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0, 0)),
+            pl.BlockSpec((1, q, k_tile),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((q, tile), jnp.float32)],
+    )
+    vals, ids = pl.pallas_call(
+        functools.partial(_fused_blocked_topk_kernel, tile=tile,
+                          k_tile=k_tile, rank_blend=rank_blend),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.int32)),
+        interpret=resolve_interpret(interpret),
+    )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
+      pair_cap, block_docs, block_tfs, pair_qw, norm_t, rank_t,
+      qnorm.reshape(1, q))
+    return _finish_candidates(vals, ids, pair_tile, n_tiles, k_tile)
+
+
+def fused_topk_packed_pallas(packed: Array, block_tfs: Array,
+                             pair_block: Array, pair_tile: Array,
+                             pair_qw: Array, pair_cap: Array,
+                             pair_bits: Array, pair_base: Array,
+                             pair_count: Array,
+                             norm: Array, rank: Array, qnorm: Array,
+                             num_docs: int, block: int, k_tile: int,
+                             rank_blend: float = 0.0, tile: int = TILE,
+                             interpret: bool | None = None):
+    """Packed candidate path: in-VMEM decode + per-tile top-k; only
+    compressed posting bytes in, only candidates out."""
+    nb, wpb = packed.shape
+    np_pairs, q = pair_qw.shape
+    n_tiles = max(-(-num_docs // tile), 1)
+    norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(np_pairs,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, wpb),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pb[i], 0)),
+            pl.BlockSpec(
+                (1, block),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pb[i], 0)),
+            pl.BlockSpec(
+                (1, q),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (i, 0)),
+            pl.BlockSpec(
+                (1, tile),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0)),
+            pl.BlockSpec(
+                (1, tile),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0)),
+            pl.BlockSpec(
+                (1, q),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, q, k_tile),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0, 0)),
+            pl.BlockSpec(
+                (1, q, k_tile),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((q, tile), jnp.float32)],
+    )
+    vals, ids = pl.pallas_call(
+        functools.partial(_fused_packed_topk_kernel, tile=tile, block=block,
+                          k_tile=k_tile, rank_blend=rank_blend),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.int32)),
+        interpret=resolve_interpret(interpret),
+    )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
+      pair_cap, pair_bits, pair_base, pair_count,
+      packed, block_tfs, pair_qw, norm_t, rank_t, qnorm.reshape(1, q))
+    return _finish_candidates(vals, ids, pair_tile, n_tiles, k_tile)
+
+
+def extract_tile_candidates(final: Array, tile: int, k_tile: int):
+    """Pure-jnp mirror of the kernels' per-tile reduction, over a dense
+    FINAL score array f32[B, num_docs] (-inf = not a hit).
+
+    Used by the XLA lowering of the candidate engine and by the term-
+    sharded scorer (whose psum forces the partial scores dense anyway).
+    Returns the same tile-major (values, ids) lists as the kernels:
+    per-tile ``top_k`` (ascending-id ties), ids -1 where not finite.
+    """
+    b, nd = final.shape
+    n_tiles = max(-(-nd // tile), 1)
+    f = jnp.pad(final, ((0, 0), (0, n_tiles * tile - nd)),
+                constant_values=-jnp.inf)
+    v, idx = jax.lax.top_k(f.reshape(b, n_tiles, tile), k_tile)
+    gids = idx + (jnp.arange(n_tiles, dtype=jnp.int32) * tile)[None, :, None]
+    gids = jnp.where(jnp.isfinite(v), gids, -1)
+    return (v.reshape(b, n_tiles * k_tile),
+            gids.reshape(b, n_tiles * k_tile))
+
+
 def build_batched_pairs(cand_block: Array, cand_valid: Array, cand_q: Array,
                         cand_w: Array, tile_first: Array, tile_count: Array,
                         n_tiles: int, num_queries: int, max_pairs: int,
@@ -217,8 +523,9 @@ def build_batched_pairs(cand_block: Array, cand_valid: Array, cand_q: Array,
     posting ``cap`` permits (a cap cutting mid-block truncates the last
     block, matching the oracle's gather).  Blocks selected by several
     queries collapse to ONE pair per tile with a weight ROW over the
-    batch (scatter-added, so duplicate query terms accumulate like the
-    oracle).  Returns
+    batch (scatter-added across each query's DISTINCT terms; duplicate
+    term hashes must be dedup'd upstream — ``dedup_query_hashes`` —
+    or their weight double-counts here).  Returns
     (pair_block [NP], pair_tile [NP], pair_qw f32[NP, Q], pair_cap [NP],
     overflow) with NP == max_pairs; overflow counts pairs dropped
     because ``max_pairs`` was too small (0 in healthy runs — surfaced by

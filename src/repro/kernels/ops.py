@@ -6,10 +6,13 @@ compiled), or "xla" (the ref.py oracle path — also what the multi-pod
 dry-run lowers, so GSPMD sees plain HLO).
 
 This module is also the engine layer for query evaluation: the fused
-batched decode-and-score path (``fused_batched_scores``) routes a whole
-query batch through ONE Pallas kernel launch — packed posting blocks are
-decoded in VMEM and scored against a ``[Q, tile]`` accumulator, so the
-compressed bytes are the only posting bytes that cross HBM.
+batched decode-and-score path routes a whole query batch through ONE
+Pallas kernel launch — packed posting blocks are decoded in VMEM and
+scored against a ``[Q, tile]`` accumulator, so the compressed bytes are
+the only posting bytes that cross HBM.  ``fused_batched_scores`` is the
+dense engine (full [B, num_docs] score array out);
+``fused_batched_topk`` is the candidate engine (per-tile partial top-k
+reduced IN VMEM — only O(B * n_tiles * k_tile) candidates reach HBM).
 """
 from __future__ import annotations
 
@@ -20,12 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layouts import BlockedIndex, PackedCsrIndex
+from repro.core.query import final_scores
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_decode_score import (
-    Q_PAD, build_batched_pairs, fused_score_blocked_pallas,
-    fused_score_packed_pallas)
+    Q_PAD, build_batched_pairs, default_k_tile, extract_tile_candidates,
+    fused_score_blocked_pallas, fused_score_packed_pallas,
+    fused_topk_blocked_pallas, fused_topk_packed_pallas)
 from repro.kernels.packed_postings import unpack_blocks_pallas
 from repro.kernels.posting_score import TILE, build_pairs, posting_score_pallas
 from repro.kernels.segment_multi_agg import pna_multi_agg_pallas
@@ -246,6 +251,85 @@ def fused_batched_scores(index: BlockedIndex | PackedCsrIndex,
             index.block_docs, index.block_tfs, pb, pt, pqw, pcap,
             num_docs, tile, interpret=_interp(backend))
     return scores[:b], overflow
+
+
+def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
+                       term_ids: Array, idf_w: Array, cap: int, k: int,
+                       rank_blend: float = 0.0,
+                       max_pairs: int | None = None, tile: int = TILE,
+                       k_tile: int | None = None,
+                       backend: Backend = "pallas"):
+    """The candidate path: per-tile partial top-k INSIDE the fused
+    engine, so the dense [B, num_docs] score array never reaches HBM.
+
+    Same contract as ``fused_batched_scores`` up to the accumulator;
+    each doc tile is then reduced (in VMEM, on its last grid step) to
+    ``k_tile`` (value, global doc id) candidates of FINAL score — the
+    doc-metadata tail (norm, deleted-doc mask, rank blend) is applied
+    per-tile, not densely.  ``k_tile`` defaults to the exactness floor
+    ``min(k, tile)`` (rounded up to the lane quantum), which guarantees
+    a pure ``merge_topk_candidates`` over the returned tile-major lists
+    reproduces the dense oracle's top-k bit-identically.
+
+    Returns (cand_values f32[B, n_tiles*k_tile],
+    cand_ids i32[B, n_tiles*k_tile], overflow).
+    """
+    b, t = term_ids.shape
+    num_docs = index.docs.num_docs
+    if k_tile is None:
+        k_tile = default_k_tile(k, tile)
+    # per-query norm of the idf weight vector (duplicate slots carry 0
+    # after dedup) — same reduction the oracle's scoring tail performs
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
+
+    if backend == "xla":
+        # plain-HLO lowering: dense scores (same block dedup), then the
+        # jnp mirror of the kernels' per-tile reduction
+        scores, overflow = fused_batched_scores(
+            index, term_ids, idf_w, cap, max_pairs=max_pairs, tile=tile,
+            backend="xla")
+        final = final_scores(scores, index.docs.norm, index.docs.rank,
+                             qnorm, rank_blend)
+        vals, ids = extract_tile_candidates(final, tile, k_tile)
+        return vals, ids, overflow
+
+    block = index.block
+    m = max(-(-min(cap, max(index.max_posting_len, 1)) // block), 1)
+    if isinstance(index, BlockedIndex):
+        m = min(m, max(index.max_blocks_per_term, 1))
+    if max_pairs is None:
+        max_pairs = default_max_pairs(index, b, t, cap, tile)
+
+    cand_block, cand_valid, cand_q, cand_w, cand_cap = \
+        expand_block_candidates(index.block_offsets, term_ids, idf_w,
+                                m, block, cap)
+    tfirst, tcount, n_tiles = routing_spans(index, tile)
+    pb, pt, pqw, pcap, overflow = build_batched_pairs(
+        cand_block, cand_valid, cand_q,
+        cand_w.astype(jnp.float32), tfirst, tcount, n_tiles, b, max_pairs,
+        cand_cap=cand_cap)
+
+    # pad the query batch to the accumulator quantum (padding queries
+    # get qnorm 1.0 — their zero accumulator masks them to -inf anyway)
+    bp = -(-b // Q_PAD) * Q_PAD
+    qnorm_p = qnorm
+    if bp != b:
+        pqw = jnp.pad(pqw, ((0, 0), (0, bp - b)))
+        qnorm_p = jnp.pad(qnorm, (0, bp - b), constant_values=1.0)
+
+    if isinstance(index, PackedCsrIndex):
+        vals, ids = fused_topk_packed_pallas(
+            index.packed, index.block_tfs, pb, pt, pqw, pcap,
+            index.block_bits[pb], index.block_base[pb],
+            index.block_count[pb], index.docs.norm, index.docs.rank,
+            qnorm_p, num_docs, block, k_tile, rank_blend=rank_blend,
+            tile=tile, interpret=_interp(backend))
+    else:
+        vals, ids = fused_topk_blocked_pallas(
+            index.block_docs, index.block_tfs, pb, pt, pqw, pcap,
+            index.docs.norm, index.docs.rank, qnorm_p, num_docs, k_tile,
+            rank_blend=rank_blend, tile=tile, interpret=_interp(backend))
+    return vals[:b], ids[:b], overflow
 
 
 # ---------------------------------------------------------------------------

@@ -60,11 +60,58 @@ for q in qh:
     np.testing.assert_allclose(np.asarray(tv), np.asarray(ref.scores),
                                rtol=1e-5)
 
+# 2b) term-partitioned FUSED Pallas engine == single-node (per-shard
+#     fused partial scores -> [D] psum -> sharded candidate extraction
+#     -> candidate merge)
+tb = retrieval.build_term_sharded_blocked(host, 8)
+tfscorer = retrieval.make_term_sharded_fused_scorer(tb, mesh, "data", k=10)
+for q in qh:
+    tv, ti = tfscorer(jnp.asarray(q))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(np.asarray(ti).tolist()) == \
+        set(np.asarray(ref.doc_ids).tolist())
+
+# 2c) term-sharded vs doc-sharded fused agreement on a 2x2 mesh: docs
+#     partitioned over axis "x", vocabulary over axis "y" — the two
+#     fused engines must return identical rankings
+mesh22 = jax.sharding.Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                           ("x", "y"))
+bs2 = retrieval.build_doc_sharded_blocked(host, 2)
+tb2 = retrieval.build_term_sharded_blocked(host, 2)
+dsc = retrieval.make_doc_sharded_fused_scorer(bs2, mesh22, "x", k=10)
+tsc = retrieval.make_term_sharded_fused_scorer(tb2, mesh22, "y", k=10)
+for q in qh:
+    dv, di = dsc(jnp.asarray(q))
+    tv, ti = tsc(jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(tv), rtol=1e-5)
+    assert set(np.asarray(di).tolist()) == set(np.asarray(ti).tolist())
+
 # 3) distributed top-k over a sharded score vector
 fn = topk.sharded_topk(mesh, "data")(5)
 scores = jnp.arange(64, dtype=jnp.float32)
 v, i = fn(scores)
 assert np.asarray(i).tolist() == [63, 62, 61, 60, 59]
+
+# 3b) k exceeding the shard-local length (top_k needs k <= n): local
+#     top-k is clamped and padded with -inf / -1 before the merge
+fn = topk.sharded_topk(mesh, "data")(20)
+v, i = fn(jnp.arange(64, dtype=jnp.float32))   # local length 8 < k=20
+assert np.asarray(i)[:5].tolist() == [63, 62, 61, 60, 59]
+assert np.asarray(v).tolist() == list(range(63, 43, -1))
+fused_k = retrieval.make_doc_sharded_fused_scorer(bs, mesh, "data",
+                                                  k=2 * host.num_docs // 8)
+vv, ids = fused_k(jnp.asarray(qh[0]))   # k > docs-per-shard
+ref = query.score_query(ref_ix, jnp.asarray(qh[0]),
+                        k=2 * host.num_docs // 8,
+                        cap=host.max_posting_len)
+hits = np.asarray(ref.doc_ids) >= 0
+np.testing.assert_allclose(np.asarray(vv)[hits],
+                           np.asarray(ref.scores)[hits], rtol=1e-5)
+assert set(np.asarray(ids)[hits].tolist()) == \
+    set(np.asarray(ref.doc_ids)[hits].tolist())
 
 # 4) int8 compressed grad mean ~ identity within quantization error
 x = jnp.asarray(np.random.default_rng(0).normal(size=(128,))

@@ -18,6 +18,7 @@ def _host(seed, docs=512, vocab=400, avg=25):
 
 @pytest.mark.parametrize("seed,block,tile", [(0, 16, 128), (1, 32, 256),
                                              (2, 64, 128)])
+@pytest.mark.slow
 def test_posting_score_sweep(seed, block, tile):
     host = _host(seed)
     hor = layouts.build_blocked(host, block=block)
@@ -47,6 +48,7 @@ def test_posting_score_pair_overflow_counter():
 
 
 @pytest.mark.parametrize("seed,block", [(0, 16), (1, 32), (2, 128)])
+@pytest.mark.slow
 def test_packed_unpack_sweep(seed, block):
     host = _host(seed)
     packed = layouts.build_packed_csr(host, block=block)
@@ -82,6 +84,7 @@ def _np_unpack_block(words, bits, base, count, block):
 
 @pytest.mark.parametrize("bits", list(range(4, 33)))
 @pytest.mark.parametrize("block", [16, 128])
+@pytest.mark.slow
 def test_packed_unpack_bit_width_sweep(bits, block):
     """Cross-block bleed guard: the kernel's hi-word fetch clamps to the
     LAST WORD OF THE BLOCK, so every bit width whose final lane lands on
@@ -108,6 +111,7 @@ def test_packed_unpack_bit_width_sweep(bits, block):
 
 
 @pytest.mark.parametrize("bits", [4, 7, 11, 13, 17, 23, 29, 31, 32])
+@pytest.mark.slow
 def test_pack_roundtrip_bit_width_sweep(bits):
     """pack -> kernel unpack is the identity for every bit width,
     including widths whose final lane straddles a u32 word boundary."""
@@ -130,6 +134,7 @@ def test_pack_roundtrip_bit_width_sweep(bits):
     (500, 16, 64, 7, jnp.float32),
     (50, 32, 16, 2, jnp.bfloat16),
 ])
+@pytest.mark.slow
 def test_embedding_bag_sweep(v, d, b, h, dtype):
     rng = np.random.default_rng(v + b)
     tab = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32)).astype(dtype)
@@ -143,6 +148,7 @@ def test_embedding_bag_sweep(v, d, b, h, dtype):
 
 
 @pytest.mark.parametrize("n,k,d,nsrc", [(32, 5, 8, 100), (64, 9, 16, 64)])
+@pytest.mark.slow
 def test_pna_multi_agg_sweep(n, k, d, nsrc):
     rng = np.random.default_rng(n + k)
     feats = jnp.asarray(rng.normal(size=(nsrc, d)).astype(np.float32))
@@ -159,6 +165,7 @@ def test_pna_multi_agg_sweep(n, k, d, nsrc):
     (False, 0, 2, 1, 32, 32, jnp.float32),
     (True, 16, 8, 2, 64, 16, jnp.bfloat16),
 ])
+@pytest.mark.slow
 def test_flash_attention_sweep(causal, window, hq, hkv, s, d, dtype):
     rng = np.random.default_rng(s + hq)
     q = jnp.asarray(rng.normal(size=(2, hq, s, d)).astype(np.float32)).astype(dtype)

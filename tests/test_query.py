@@ -39,7 +39,7 @@ def test_conjunctive_is_subset_of_disjunctive(small_host, query_hashes):
     ix = layouts.build_csr(small_host)
     cap = small_host.max_posting_len
     q = jnp.asarray(query_hashes[0][:2])
-    conj = query.conjunctive_filter(ix, q, k=50, cap=cap)
+    conj, _ = query.conjunctive_filter(ix, q, k=50, cap=cap)
     h2t = {int(h): i for i, h in enumerate(small_host.term_hashes)}
     for d in np.asarray(conj.doc_ids):
         if d < 0:
@@ -61,7 +61,7 @@ def test_conjunctive_counts_are_exact_ints(small_host, query_hashes):
         jnp.zeros((1, 4), jnp.int32), jnp.ones((1, 4), bool), 8).dtype
     assert counts_dtype == jnp.int32
     # AND result equals the numpy ground truth doc set
-    conj = query.conjunctive_filter(ix, q, k=small_host.num_docs, cap=cap)
+    conj, _ = query.conjunctive_filter(ix, q, k=small_host.num_docs, cap=cap)
     got = set(int(d) for d in np.asarray(conj.doc_ids) if d >= 0)
     h2t = {int(h): i for i, h in enumerate(small_host.term_hashes)}
     want = None
@@ -79,3 +79,57 @@ def test_absent_and_empty_terms(small_host):
     q = jnp.asarray([0, 0, 0, 0], dtype=jnp.uint32)      # empty query
     r = query.score_query(ix, q, k=5, cap=cap)
     assert (np.asarray(r.doc_ids) == -1).all()
+
+
+def test_duplicate_terms_score_once(small_host, query_hashes):
+    """Regression: the same term hash in two query slots must contribute
+    ONCE — the gather phase reads one posting list per slot, so without
+    dedup tf·idf weight is double-counted and the query norm inflates."""
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    h = query_hashes[0][0]
+    single = jnp.asarray(np.array([h, 0, 0, 0], np.uint32))
+    doubled = jnp.asarray(np.array([h, h, 0, h], np.uint32))
+    rs = query.score_query(ix, single, k=10, cap=cap)
+    rd = query.score_query(ix, doubled, k=10, cap=cap)
+    np.testing.assert_array_equal(np.asarray(rs.doc_ids),
+                                  np.asarray(rd.doc_ids))
+    np.testing.assert_allclose(np.asarray(rs.scores), np.asarray(rd.scores))
+
+
+def test_dedup_query_hashes_keeps_first_only():
+    qh = jnp.asarray(np.array([[7, 7, 0, 7], [1, 2, 1, 2]], np.uint32))
+    got = np.asarray(query.dedup_query_hashes(qh))
+    np.testing.assert_array_equal(got, [[7, 0, 0, 0], [1, 2, 0, 0]])
+
+
+def test_conjunctive_duplicate_terms_keep_and_semantics(small_host,
+                                                        query_hashes):
+    """A duplicated AND term must not change the result set (it used to
+    inflate both the membership counts and the needed threshold, and
+    double-count the score weights)."""
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    q2 = np.asarray(query_hashes[0][:2])
+    plain, _ = query.conjunctive_filter(ix, jnp.asarray(q2), k=50, cap=cap)
+    dup = np.array([q2[0], q2[1], q2[0], q2[1]], np.uint32)
+    doubled, _ = query.conjunctive_filter(ix, jnp.asarray(dup), k=50,
+                                          cap=cap)
+    np.testing.assert_array_equal(np.asarray(plain.doc_ids),
+                                  np.asarray(doubled.doc_ids))
+    np.testing.assert_allclose(np.asarray(plain.scores),
+                               np.asarray(doubled.scores))
+
+
+def test_conjunctive_cap_truncation_is_surfaced(small_host, query_hashes):
+    """A cap that truncates a posting list can undercount membership and
+    silently drop true AND matches — the filter must SURFACE it."""
+    ix = layouts.build_csr(small_host)
+    cap = small_host.max_posting_len
+    q = jnp.asarray(query_hashes[0][:2])
+    _, stats = query.conjunctive_filter(ix, q, k=10, cap=cap)
+    assert int(stats["truncated_terms"]) == 0      # full cap: exact
+    h2t = {int(h): i for i, h in enumerate(small_host.term_hashes)}
+    min_df = min(int(small_host.df[h2t[int(h)]]) for h in np.asarray(q))
+    _, stats = query.conjunctive_filter(ix, q, k=10, cap=min_df - 1)
+    assert int(stats["truncated_terms"]) > 0       # truncated: flagged
