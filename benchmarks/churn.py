@@ -1,0 +1,103 @@
+"""Ingest/churn benchmark: the segmented live index vs batch rebuild.
+
+Emits (CSV rows via benchmarks.common.emit):
+
+  churn/live_ingest        us per batch, derived docs/sec sustained
+  churn/rebuild_ingest     us per batch for the §3.6 merge-everything
+                           path (the pre-live-index ``add_documents``)
+  churn/query_segments_N   fused multi-segment query latency with N
+                           sealed segments on the stack
+  churn/amplification      posting-merge work ratio rebuild/live —
+                           cumulative postings touched per path (the
+                           ISSUE's >= 10x criterion is on the per-batch
+                           steady state, reported in ``derived``)
+  churn/lifecycle          seals + compactions the schedule triggered
+
+``--smoke`` shrinks the schedule but still exercises seal + compact +
+delete + multi-segment query end to end (the CI plumbing check).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import build, compaction
+from repro.core.live_index import SegmentedIndex
+from repro.text import corpus
+
+
+def _batches(tc, n_batches):
+    bounds = np.linspace(0, tc.num_docs, n_batches + 1).astype(int)
+    return [build.TokenizedCorpus(tc.doc_term_ids[a:b], tc.doc_counts[a:b],
+                                  tc.term_hashes, b - a)
+            for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def main() -> None:
+    tc, host_full = common.bench_host()
+    smoke = common.is_smoke()
+    n_batches = 8 if smoke else 32
+    batches = _batches(tc, n_batches)
+    per_batch = batches[0].num_docs
+    qh = corpus.sample_query_terms(host_full.df, host_full.term_hashes,
+                                   4, 3, num_docs=host_full.num_docs,
+                                   seed=7)
+
+    # --- live path: delta appends + seals + tiered compaction ----------
+    si = SegmentedIndex(
+        term_hashes=tc.term_hashes,
+        delta_doc_capacity=max(per_batch // 2, 32),
+        delta_posting_capacity=max(per_batch * 40, 2048),
+        policy=compaction.TieredPolicy(size_ratio=8.0, min_run=8))
+    checkpoints = sorted({n_batches // 4, n_batches // 2,
+                          n_batches - 1} - {0})
+    t0 = time.perf_counter()
+    ingest_time = 0.0
+    for i, b in enumerate(batches):
+        t1 = time.perf_counter()
+        si.add_batch(b)
+        if i == n_batches // 2:          # churn: deletes mixed in
+            si.delete(np.arange(0, si.num_docs, max(si.num_docs // 64, 1)))
+        ingest_time += time.perf_counter() - t1
+        if i in checkpoints:
+            us = common.time_call(lambda: si.topk(qh, k=10), reps=3,
+                                  warmup=1)
+            common.emit(f"churn/query_segments_{si.num_segments}", us,
+                        f"delta_docs={si._delta.n_docs}")
+    live_us = ingest_time / n_batches * 1e6
+    common.emit("churn/live_ingest", live_us,
+                f"docs_per_sec={per_batch / (ingest_time / n_batches):.0f}")
+
+    # --- rebuild baseline: merge ALL postings every batch --------------
+    t2 = time.perf_counter()
+    host = build.bulk_build(batches[0])
+    rebuild_touched = host.num_postings
+    for b in batches[1:]:
+        host = build._merge_documents(host, b, host.num_docs)
+        rebuild_touched += host.num_postings
+    rebuild_time = time.perf_counter() - t2
+    rebuild_us = rebuild_time / n_batches * 1e6
+    common.emit("churn/rebuild_ingest", rebuild_us,
+                f"docs_per_sec={per_batch / (rebuild_time / n_batches):.0f}")
+
+    # --- amplification: posting-merge work, cumulative + steady-state --
+    live_touched = si.stats.postings_merged
+    cum_ratio = rebuild_touched / max(live_touched, 1)
+    # steady state: last batch of the rebuild path touches every posting;
+    # the live path's amortized per-batch merge work is its cumulative
+    # total over the batch count
+    steady = host.num_postings / max(live_touched / n_batches, 1)
+    common.emit("churn/amplification", 0.0,
+                f"cumulative={cum_ratio:.1f}x steady_state={steady:.1f}x "
+                f"appended={si.stats.postings_appended}")
+    common.emit("churn/lifecycle", 0.0,
+                f"seals={si.stats.seals} compactions={si.stats.compactions}"
+                f" segments={si.num_segments} live={si.live_doc_count}")
+    _ = t0
+
+
+if __name__ == "__main__":
+    common.set_smoke()
+    main()

@@ -6,6 +6,8 @@
   table7   paper Table 7 (query evaluation, 1-4 terms)
   expansion  paper §4.4 (document-based access)
   roofline   §Roofline terms from the dry-run artifacts (if present)
+  churn    live-index ingest/churn: docs/sec, latency vs segment count,
+           posting-merge amplification vs full rebuild
 
 ``--smoke`` runs every suite on a CI-sized corpus (plumbing check, not
 representative numbers).
@@ -17,12 +19,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import common, expansion, partitioned, roofline, \
-        table5_size, table6_index, table7_query
+    from benchmarks import churn, common, expansion, partitioned, \
+        roofline, table5_size, table6_index, table7_query
     suites = [("table5", table5_size.main), ("table6", table6_index.main),
               ("table7", table7_query.main), ("expansion", expansion.main),
               ("partitioned", partitioned.main),
-              ("roofline", roofline.main)]
+              ("roofline", roofline.main), ("churn", churn.main)]
     args = [a for a in sys.argv[1:]]
     if "--smoke" in args:
         args.remove("--smoke")

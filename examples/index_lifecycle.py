@@ -1,12 +1,15 @@
 """Index lifecycle: bulk build -> incremental batch add -> deletion ->
-expansion/feedback — the paper's §3.6 maintenance story end to end.
+expansion/feedback — the paper's §3.6 maintenance story end to end,
+then the live-index version: LSM-style delta/seal/compact with
+tombstone deletes and multi-segment fused queries.
 
     PYTHONPATH=src python examples/index_lifecycle.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build, direct_index, layouts, query
+from repro.core import build, compaction, direct_index, layouts, query
+from repro.core.live_index import SegmentedIndex
 from repro.text import corpus
 
 spec = corpus.CorpusSpec(num_docs=3000, vocab=2500, avg_distinct=40, seed=3)
@@ -51,4 +54,30 @@ fb = direct_index.relevance_feedback(di, r2.doc_ids[:2],
                                      host.num_terms, cap=di.max_doc_len)
 print("expansion:", np.asarray(exp.term_ids).tolist())
 print("feedback :", np.asarray(fb.term_ids).tolist())
+
+# --- the live-index version: no rebuilds, no recompiles -------------------
+# delta -> seal -> compact; deletes are tombstones until compaction
+si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=256,
+                    policy=compaction.TieredPolicy(size_ratio=4.0,
+                                                   min_run=4))
+for a in range(0, 3000, 500):
+    si.add_batch(build.TokenizedCorpus(tc.doc_term_ids[a:a + 500],
+                                       tc.doc_counts[a:a + 500],
+                                       tc.term_hashes, 500))
+print(f"live index: docs={si.num_docs} segments={si.num_segments} "
+      f"seals={si.stats.seals} compactions={si.stats.compactions}")
+live = si.topk(qh[None], k=5)
+print("live top-5:", np.asarray(live.doc_ids)[0].tolist())
+si.delete(np.asarray(live.doc_ids)[0][:1])           # tombstone the winner
+live2 = si.topk(qh[None], k=5)
+print("after delete:", np.asarray(live2.doc_ids)[0].tolist())
+assert int(np.asarray(live.doc_ids)[0][0]) not in \
+    np.asarray(live2.doc_ids)[0].tolist()
+si.seal()
+si.compact(all_segments=True)                        # reclaim tombstones
+live3 = si.topk(qh[None], k=5)
+np.testing.assert_array_equal(np.asarray(live3.doc_ids),
+                              np.asarray(live2.doc_ids))
+print(f"after compact: segments={si.num_segments} "
+      f"merge_work={si.stats.postings_merged} postings")
 print("lifecycle OK")

@@ -8,9 +8,10 @@ Pipeline (host-side, vectorized numpy — this is the data-ingest layer):
 Two paths, mirroring §3.6:
   * ``bulk_build``      — the COPY path: one big sort, no incremental
                           maintenance, indices built once at the end.
-  * ``add_documents``   — incremental batch add: drop derived structures,
-                          merge-sort new postings in, rebuild metadata
-                          (drop-indices -> insert -> re-create, as §3.6).
+  * ``add_documents``   — incremental batch add: same contract as the
+                          paper's drop-indices -> insert -> re-create,
+                          now a compat wrapper over the segmented live
+                          index (core/live_index.py) + full compaction.
 """
 from __future__ import annotations
 
@@ -83,32 +84,67 @@ def bulk_build(corpus: TokenizedCorpus) -> PostingsHost:
                                   corpus.num_docs, corpus.term_hashes)
 
 
+def merge_vocab(old_hashes: np.ndarray, new_hashes: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized vocabulary union (replaces the per-hash dict loop).
+
+    Returns ``(merged_hashes, remap)``: ``merged_hashes`` is
+    ``old_hashes`` with genuinely new hashes appended in first-
+    appearance order; ``remap[i]`` is the merged id of
+    ``new_hashes[i]``.  One ``np.searchsorted`` over the sorted old
+    hashes instead of a Python dict probe per term — the hot half of
+    every incremental vocabulary merge (live-index ingest and the
+    legacy ``add_documents`` path share it).
+    """
+    old = np.asarray(old_hashes, np.uint32)
+    new = np.asarray(new_hashes, np.uint32)
+    remap = np.empty(len(new), dtype=np.int64)
+    if len(old):
+        order = np.argsort(old, kind="stable")
+        srt = old[order]
+        pos = np.minimum(np.searchsorted(srt, new), len(old) - 1)
+        found = srt[pos] == new
+        remap[found] = order[pos[found]]
+    else:
+        found = np.zeros(len(new), bool)
+    remap[~found] = len(old) + np.cumsum(~found)[~found] - 1
+    merged = (np.concatenate([old, new[~found]]) if (~found).any()
+              else old)
+    return merged, remap
+
+
 def add_documents(host: PostingsHost, new_corpus: TokenizedCorpus,
                   doc_id_base: int | None = None) -> PostingsHost:
-    """Incremental batch add (drop-indices -> merge -> rebuild).
+    """Incremental batch add — §3.6 semantics, live-index machinery.
 
-    New docs get ids starting at ``doc_id_base`` (default: append).
-    Term id space must match (same term_hashes); new terms are appended.
+    Historically this dropped every derived structure and merge-sorted
+    ALL postings (the paper's drop-indices -> insert -> re-create).  It
+    is now a thin compat wrapper over the segmented live index
+    (core/live_index.py): seed a one-segment index from ``host``, ingest
+    the batch through the delta, seal, fully compact, and export — the
+    same merged ``PostingsHost`` (identical df/doc_ids/norms), with the
+    vocabulary remap vectorized (``merge_vocab``).  A custom
+    ``doc_id_base`` overlapping existing ids keeps the legacy one-shot
+    merge path.
     """
     base = host.num_docs if doc_id_base is None else doc_id_base
+    if base != host.num_docs:
+        return _merge_documents(host, new_corpus, base)
+    from repro.core.live_index import SegmentedIndex
+    si = SegmentedIndex.from_host(host)
+    si.add_batch(new_corpus)
+    si.seal()
+    si.compact(all_segments=True)
+    return si.to_host()
+
+
+def _merge_documents(host: PostingsHost, new_corpus: TokenizedCorpus,
+                     base: int) -> PostingsHost:
+    """Legacy one-shot merge (kept for overlapping ``doc_id_base``)."""
     doc_of, terms, counts = _flatten(new_corpus)
     doc_of = doc_of + base
-
-    # unify vocabularies: append genuinely new hashes
-    old_hash = host.term_hashes
-    new_hash = new_corpus.term_hashes
-    hash_to_old = {int(h): i for i, h in enumerate(old_hash)}
-    remap = np.empty(len(new_hash), dtype=np.int64)
-    extra = []
-    for i, h in enumerate(new_hash):
-        j = hash_to_old.get(int(h))
-        if j is None:
-            j = len(old_hash) + len(extra)
-            extra.append(h)
-        remap[i] = j
-    merged_hashes = (np.concatenate([old_hash,
-                                     np.array(extra, dtype=np.uint32)])
-                     if extra else old_hash)
+    merged_hashes, remap = merge_vocab(host.term_hashes,
+                                       new_corpus.term_hashes)
     terms = remap[terms]
 
     # old postings back to triples, then one merged sort

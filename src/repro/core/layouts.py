@@ -610,6 +610,71 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
     )
 
 
+def size_class(n: int, base: int = 128, growth: int = 2) -> int:
+    """Smallest ``base * growth**i >= max(n, 1)`` — the static size-class
+    quantizer the live index seals segments into.
+
+    Device shapes (and the jit static metadata derived from them) are
+    quantized to a few geometric classes so that sealing a new segment
+    reuses an already-compiled kernel instead of triggering an XLA
+    recompile: two segments in the same class share one compilation.
+    """
+    n = max(int(n), 1)
+    c = base
+    while c < n:
+        c *= growth
+    return c
+
+
+def pad_blocked_to_class(ix: BlockedIndex, nb_pad: int, w_pad: int,
+                         max_posting_len: int, max_blocks_per_term: int,
+                         route_pairs_max: int, route_span_max: int
+                         ) -> BlockedIndex:
+    """Pad a BlockedIndex to a static size class.
+
+    Arrays grow to (nb_pad blocks, w_pad terms) with inert padding
+    (empty blocks with tile_count 0, absent-hash vocabulary slots) and
+    the static metadata is OVERRIDDEN with quantized upper bounds
+    (``>=`` the real values — each is only ever used as a budget or loop
+    bound, so over-approximating is semantically safe).  Every padded
+    field participates in the jit signature; quantizing all of them is
+    what makes "seal a segment, query it, no new compilation" hold.
+    The doc-space padding (``docs.num_docs``) is chosen at build time by
+    the caller (a tile-aligned class), not here.
+    """
+    w, nb = ix.num_terms, int(ix.block_docs.shape[0])
+    if nb_pad < nb or w_pad < w:
+        raise ValueError(f"size class ({nb_pad}, {w_pad}) below actual "
+                         f"({nb}, {w})")
+    if (max_posting_len < ix.max_posting_len
+            or max_blocks_per_term < ix.max_blocks_per_term
+            or route_pairs_max < ix.route_pairs_max
+            or route_span_max < ix.route_span_max):
+        raise ValueError("quantized static bounds must cover the actual "
+                         "index statics")
+    dn, dw = nb_pad - nb, w_pad - w
+    last = ix.block_offsets[-1]
+    return dataclasses.replace(
+        ix,
+        sorted_hash=jnp.pad(ix.sorted_hash, (0, dw),
+                            constant_values=HASH_EMPTY),
+        df=jnp.pad(ix.df, (0, dw)),
+        block_offsets=jnp.pad(ix.block_offsets, (0, dw),
+                              constant_values=last),
+        block_docs=jnp.pad(ix.block_docs, ((0, dn), (0, 0)),
+                           constant_values=-1),
+        block_tfs=jnp.pad(ix.block_tfs, ((0, dn), (0, 0))),
+        block_min=jnp.pad(ix.block_min, (0, dn)),
+        block_max=jnp.pad(ix.block_max, (0, dn), constant_values=-1),
+        tile_first=jnp.pad(ix.tile_first, (0, dn)),
+        tile_count=jnp.pad(ix.tile_count, (0, dn)),
+        max_posting_len=int(max_posting_len),
+        max_blocks_per_term=int(max_blocks_per_term),
+        route_pairs_max=int(route_pairs_max),
+        route_span_max=int(route_span_max),
+    )
+
+
 # ---------------------------------------------------------------------------
 # (beyond paper) PackedCsrIndex — delta + bit-packed postings
 # ---------------------------------------------------------------------------

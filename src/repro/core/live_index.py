@@ -1,0 +1,919 @@
+"""Segmented live index — LSM-style ingest, tombstone deletes, and
+multi-segment fused query over the paper's representations.
+
+The paper's §3.6 maintenance story stops at batch re-indexing: drop the
+derived structures, merge-sort every posting, rebuild.  That is
+O(total postings) of work and a device-shape change (new XLA
+compilation) per ingest batch.  This module replaces it with the
+structure every production DB-IR engine converges on (ODYS,
+arXiv:1208.4270; compressed-index maintenance, arXiv:1209.5448):
+immutable sealed runs + a small mutable tail + background
+reorganization.
+
+Segment lifecycle (delta -> seal -> compact)
+--------------------------------------------
+
+  * DELTA — a fixed-capacity, append-only, doc-major postings buffer
+    (uncompressed CSR).  Ingest batches append here in O(batch) time;
+    the device mirror has STATIC shapes (capacity-padded), so queries
+    over the delta never recompile.  Postings are kept per-doc in
+    ascending unified-term order — the same per-document accumulation
+    order the bulk builder's term-major sort produces, which is what
+    keeps recomputed norms bit-identical to a from-scratch rebuild.
+
+  * SEAL — when the delta fills (or ``seal()`` is called), its contents
+    become one immutable sealed segment: a ``BlockedIndex`` built by the
+    existing bulk path over the segment's contiguous doc-id range, then
+    padded to a static SIZE CLASS (geometric shape quantization:
+    ``layouts.size_class`` / ``pad_blocked_to_class``).
+
+  * COMPACT — a size-tiered policy (core/compaction.py) merges the
+    newest run of similarly-sized segments into one, physically dropping
+    tombstoned postings and re-blocking.  Doc ids are NEVER reused or
+    renumbered, so merged ranges stay contiguous and external references
+    stay valid.  ``compact()`` is synchronous but background-callable:
+    queries between compactions read the old stack unchanged.
+
+Recompile-avoidance contract
+----------------------------
+
+Every per-segment scorer (kernels/ops.py ``fused_segment_topk`` et al.)
+is a module-level jitted function taking the segment as a pytree
+ARGUMENT; its compilation is keyed on the segment's size class, not its
+identity.  Sealing quantizes all shape-bearing statics (block count,
+vocab width, doc span, routing budgets, posting-length bounds) to a few
+geometric classes, so after one warmup per class, sealing and querying
+new segments triggers ZERO new XLA compilations — asserted by the churn
+test via jit-cache counters (``scorer_cache_sizes``).  The cross-segment
+candidate merge runs on the host (numpy), so a changing segment count
+never enters a jit signature.
+
+Exact-ranking contract
+----------------------
+
+Scoring state that depends on the WHOLE corpus is maintained globally
+and exactly: ``df`` over live documents (incremented on add,
+decremented on delete using the per-doc forward postings), the live doc
+count behind idf, and tf-idf norms recomputed per mutation batch with
+the same float64 op sequence as the bulk builder.  Tombstones mask
+deleted docs by zeroing their norm — the existing deleted-doc path of
+every engine, applied inside the fused kernel's doc-metadata tail.  The
+result: at ANY point of an add/delete/compact schedule, top-k from the
+fused candidates engine is bit-identical (ties included) to the jnp
+oracle over ``bulk_build`` of the equivalent live corpus
+(``export_live_corpus`` builds exactly that corpus for the parity
+tests; ranking parity needs ``rank_blend == 0`` or an oracle sharing
+this index's static-rank table, and the default full-list ``cap``).
+
+Posting-merge work (the ``stats`` counters): each posting is appended
+once (an O(1) buffer write), sealed once, and compacted
+O(log N / log min_run) times — vs the rebuild path re-sorting EVERY
+posting EVERY batch.  Norm refresh is a separate vectorized
+O(live postings) bincount per mutation batch (counted apart in
+``postings_norm_refreshed``; it is metadata maintenance, not index
+merge work, and never re-sorts or rebuilds posting structures).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import compaction, layouts
+from repro.core.build import TokenizedCorpus
+from repro.core.layouts import DocTable, PostingsHost
+from repro.core.query import QueryResult, final_scores
+from repro.distributed.topk import merge_topk_candidates_host
+from repro.kernels import ops
+from repro.kernels.fused_decode_score import (TILE, default_k_tile,
+                                              extract_tile_candidates)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# module-level jitted helpers (argument-passed state => stable caches)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _query_weights(df: Array, d_live: Array):
+    """Global idf weights + query norms, same op sequence as the oracle.
+
+    df i32[B, T] LIVE global document frequencies per (dedup'd) slot,
+    d_live f32 scalar live doc count.  Bit-identical to
+    ``query.idf`` + the oracle's qnorm reduction, so every segment
+    scores with exactly the weights a from-scratch rebuild would use.
+    """
+    safe = jnp.maximum(df, 1)
+    idf = jnp.where(df > 0, jnp.log1p(d_live / safe.astype(jnp.float32)),
+                    0.0)
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf * idf, axis=1), 1e-12))
+    return idf, qnorm
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "tile", "rank_blend"))
+def _delta_candidates(terms: Array, tfs: Array, doc_of: Array, norm: Array,
+                      rank: Array, tids: Array, idf_w: Array, qnorm: Array,
+                      doc_base: Array, *, k_tile: int, tile: int = TILE,
+                      rank_blend: float = 0.0):
+    """Score the mutable delta (capacity-padded doc-major postings) and
+    reduce to the same per-tile candidate lists the sealed-segment
+    kernels emit.  All shapes are delta capacities — static for the
+    index's lifetime."""
+    dcap = norm.shape[0]
+    # per-posting query weight: each posting's unified term id against
+    # the query's (dedup'd) term-id slots
+    match = ((terms[None, :, None] == tids[:, None, :]) &
+             (tids[:, None, :] >= 0) & (terms[None, :, None] >= 0))
+    w_p = jnp.sum(jnp.where(match, idf_w[:, None, :], 0.0), axis=2)
+    valid = doc_of >= 0
+    safe_d = jnp.where(valid, doc_of, dcap)
+    contrib = jnp.where(valid[None, :], tfs[None, :] * w_p, 0.0)
+
+    def row(c):
+        acc = jnp.zeros((dcap + 1,), jnp.float32).at[safe_d].add(
+            c, mode="drop")
+        return acc[:dcap]
+
+    scores = jax.vmap(row)(contrib)
+    final = final_scores(scores, norm, rank, qnorm, rank_blend)
+    vals, ids = extract_tile_candidates(final, tile, k_tile)
+    gids = jnp.where(ids >= 0, ids + doc_base, -1)
+    return vals, gids
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "tile"))
+def _delta_conjunctive(terms: Array, tfs: Array, doc_of: Array, norm: Array,
+                       tids: Array, idf_w: Array, needed: Array,
+                       doc_base: Array, *, k_tile: int, tile: int = TILE):
+    """AND-semantics counts + scores over the delta for ONE query.  The
+    delta is scanned in full (no posting cap), so it never truncates —
+    its ``truncated_terms`` contribution is always zero."""
+    dcap = norm.shape[0]
+    match = ((terms[:, None] == tids[None, :]) & (tids[None, :] >= 0) &
+             (terms[:, None] >= 0))
+    w_p = jnp.sum(jnp.where(match, idf_w[None, :], 0.0), axis=1)
+    hit_p = jnp.any(match, axis=1)
+    valid = doc_of >= 0
+    safe_d = jnp.where(valid, doc_of, dcap)
+    scores = jnp.zeros((dcap + 1,), jnp.float32).at[safe_d].add(
+        jnp.where(valid, tfs * w_p, 0.0), mode="drop")[:dcap]
+    counts = jnp.zeros((dcap + 1,), jnp.int32).at[safe_d].add(
+        jnp.where(valid & hit_p, 1, 0).astype(jnp.int32),
+        mode="drop")[:dcap]
+    ok = counts >= needed
+    final = jnp.where(ok & (norm > 0),
+                      scores / jnp.maximum(norm, 1e-12), -jnp.inf)
+    vals, ids = extract_tile_candidates(final[None], tile, k_tile)
+    gids = jnp.where(ids[0] >= 0, ids[0] + doc_base, -1)
+    return vals[0], gids
+
+
+def scorer_cache_sizes() -> dict:
+    """jit-cache entry counts for every compiled piece of the live query
+    path.  The churn test snapshots this after warmup and asserts zero
+    growth across further seals, compactions, and queries — the
+    measurable form of the recompile-avoidance contract."""
+    sizes = dict(ops.segment_scorer_cache_sizes())
+    sizes.update({
+        "query_weights": _query_weights._cache_size(),
+        "delta_candidates": _delta_candidates._cache_size(),
+        "delta_conjunctive": _delta_conjunctive._cache_size(),
+    })
+    return sizes
+
+
+def _dedup_np(qh: np.ndarray) -> np.ndarray:
+    """Host twin of ``query.dedup_query_hashes`` (keep first, zero rest)."""
+    out = qh.copy()
+    t = qh.shape[-1]
+    eq = qh[..., :, None] == qh[..., None, :]
+    earlier = np.tril(np.ones((t, t), bool), k=-1)
+    dup = (eq & earlier).any(axis=-1) & (qh != 0)
+    out[dup] = 0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stats / delta / segment containers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LiveIndexStats:
+    """Work and lifecycle counters (all cumulative).
+
+    ``postings_merged`` is the posting-MERGE work (postings touched by
+    sort/merge/rebuild operations): seal builds + compaction merges —
+    each posting is sealed once and compacted O(log N / log min_run)
+    times.  Delta appends are pure O(1) buffer writes (no sort, no
+    structure rebuild) and are counted apart in ``postings_appended``,
+    as is the vectorized per-mutation norm refresh.  The rebuild path's
+    equivalent is its full re-sort: EVERY posting touched, every batch.
+    """
+    postings_appended: int = 0      # delta appends (O(1)/posting writes)
+    postings_sealed: int = 0        # delta -> segment bulk builds
+    postings_compacted: int = 0     # compaction merge inputs
+    postings_norm_refreshed: int = 0  # vectorized norm recompute (not merge)
+    docs_added: int = 0
+    seals: int = 0
+    compactions: int = 0
+    deletes: int = 0
+
+    @property
+    def postings_merged(self) -> int:
+        return self.postings_sealed + self.postings_compacted
+
+
+class _Delta:
+    """Fixed-capacity append-only doc-major postings buffer (host side).
+
+    Capacities are static so the device mirror's shapes never change;
+    per-doc postings are stored in ascending unified-term order."""
+
+    def __init__(self, doc_cap: int, post_cap: int, doc_base: int):
+        self.doc_cap = int(doc_cap)
+        self.post_cap = int(post_cap)
+        self.doc_base = int(doc_base)
+        self.n_docs = 0
+        self.n_postings = 0
+        self.terms = np.full(self.post_cap, -1, np.int32)
+        self.tfs = np.zeros(self.post_cap, np.float32)
+        self.doc_of = np.full(self.post_cap, -1, np.int32)
+        self.doc_offsets = np.zeros(self.doc_cap + 1, np.int64)
+
+    def append(self, lens: np.ndarray, terms: np.ndarray,
+               tfs: np.ndarray) -> None:
+        n, p = len(lens), len(terms)
+        assert self.n_docs + n <= self.doc_cap
+        assert self.n_postings + p <= self.post_cap
+        s = self.n_postings
+        self.terms[s:s + p] = terms
+        self.tfs[s:s + p] = tfs
+        self.doc_of[s:s + p] = np.repeat(
+            np.arange(self.n_docs, self.n_docs + n, dtype=np.int32),
+            lens)
+        off = self.doc_offsets
+        off[self.n_docs + 1:self.n_docs + n + 1] = \
+            off[self.n_docs] + np.cumsum(lens)
+        self.n_docs += n
+        self.n_postings += p
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable sealed run.
+
+    ``index`` is a size-class-padded BlockedIndex over LOCAL doc ids
+    (global id = local + doc_base); the host arrays are the (doc, term)-
+    sorted forward canonical used for norm refresh, per-doc delete
+    lookups, and compaction merges."""
+    index: layouts.BlockedIndex
+    doc_base: int
+    doc_span: int              # allocated local id range (may have holes)
+    doc_of: np.ndarray         # i32[P] local doc ids, doc-major
+    terms: np.ndarray          # i32[P] unified term ids, asc within doc
+    tfs: np.ndarray            # f32[P]
+    doc_offsets: np.ndarray    # i64[doc_span + 1] forward CSR
+    n_postings: int
+
+
+# ---------------------------------------------------------------------------
+# the live index
+# ---------------------------------------------------------------------------
+
+
+class SegmentedIndex:
+    """LSM-style live index: mutable delta + sealed segment stack +
+    tombstones, queried by the fused candidates engine per segment.
+
+    See the module docstring for the lifecycle and the exact-ranking /
+    recompile-avoidance contracts.
+    """
+
+    def __init__(self, term_hashes: np.ndarray | None = None, *,
+                 delta_doc_capacity: int = 512,
+                 delta_posting_capacity: int | None = None,
+                 policy: compaction.TieredPolicy | None = None,
+                 rank_seed: int = 7):
+        self._hashes = (np.asarray(term_hashes, np.uint32).copy()
+                        if term_hashes is not None
+                        else np.zeros(0, np.uint32))
+        self._df = np.zeros(len(self._hashes), np.int64)
+        self._rebuild_lookup()
+        self._live = np.zeros(0, bool)
+        self._rank = np.zeros(0, np.float32)
+        self._norm = np.zeros(0, np.float32)
+        self._live_docs = 0
+        self._segments: list[Segment] = []
+        post_cap = (int(delta_posting_capacity)
+                    if delta_posting_capacity is not None
+                    else int(delta_doc_capacity) * 64)
+        self._delta = _Delta(delta_doc_capacity, post_cap, 0)
+        self._delta_dev: dict | None = None
+        self._delta_dirty = True
+        self._policy = policy or compaction.TieredPolicy()
+        self._rng = np.random.default_rng(rank_seed)
+        self.stats = LiveIndexStats()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_docs(self) -> int:
+        """Allocated doc-id space (ids are never reused)."""
+        return len(self._live)
+
+    @property
+    def live_doc_count(self) -> int:
+        return self._live_docs
+
+    @property
+    def num_segments(self) -> int:
+        return len(self._segments)
+
+    @property
+    def num_terms(self) -> int:
+        return len(self._hashes)
+
+    @property
+    def term_hashes(self) -> np.ndarray:
+        return self._hashes
+
+    def live_mask(self) -> np.ndarray:
+        return self._live.copy()
+
+    def segment_postings(self) -> list:
+        return [s.n_postings for s in self._segments]
+
+    def segments(self) -> list:
+        """The sealed stack (ascending doc_base; treat as read-only)."""
+        return list(self._segments)
+
+    @property
+    def delta_postings(self) -> int:
+        return self._delta.n_postings
+
+    # -- vocabulary ---------------------------------------------------------
+
+    def _rebuild_lookup(self) -> None:
+        self._hash_order = np.argsort(self._hashes,
+                                      kind="stable").astype(np.int64)
+        self._hash_sorted = self._hashes[self._hash_order]
+
+    def _lookup_np(self, qh: np.ndarray) -> np.ndarray:
+        """u32[...] hashes -> unified term ids (i64, -1 absent/empty)."""
+        w = len(self._hashes)
+        if w == 0:
+            return np.full(qh.shape, -1, np.int64)
+        flat = qh.reshape(-1)
+        pos = np.searchsorted(self._hash_sorted, flat)
+        posc = np.minimum(pos, w - 1)
+        hit = (self._hash_sorted[posc] == flat) & (flat != 0)
+        return np.where(hit, self._hash_order[posc], -1).reshape(qh.shape)
+
+    # -- mutation: add ------------------------------------------------------
+
+    def add_batch(self, corpus: TokenizedCorpus) -> None:
+        """Ingest a tokenized batch: unify vocabularies (vectorized
+        remap), assign fresh ascending doc ids, append to the delta
+        (sealing when full), update live df exactly, refresh norms, and
+        let the tiered policy compact."""
+        nd = corpus.num_docs
+        merged, remap = build_mod.merge_vocab(
+            self._hashes, np.asarray(corpus.term_hashes, np.uint32))
+        if len(merged) != len(self._hashes):
+            grow = len(merged) - len(self._hashes)
+            self._hashes = merged
+            self._df = np.concatenate(
+                [self._df, np.zeros(grow, np.int64)])
+            self._rebuild_lookup()
+        if nd == 0:
+            return
+        lens = np.array([len(x) for x in corpus.doc_term_ids],
+                        dtype=np.int64)
+        total = int(lens.sum())
+        if total:
+            flat_terms = remap[
+                np.concatenate(corpus.doc_term_ids).astype(np.int64)]
+            flat_tfs = np.concatenate(corpus.doc_counts).astype(np.float32)
+            doc_idx = np.repeat(np.arange(nd, dtype=np.int64), lens)
+            # per-doc ascending UNIFIED term order: the remap can break
+            # the corpus-local ordering, and norm bit-parity with the
+            # term-major bulk sort depends on it
+            order = np.lexsort((flat_terms, doc_idx))
+            flat_terms = flat_terms[order]
+            flat_tfs = flat_tfs[order]
+        else:
+            flat_terms = np.zeros(0, np.int64)
+            flat_tfs = np.zeros(0, np.float32)
+
+        self._live = np.concatenate([self._live, np.ones(nd, bool)])
+        self._rank = np.concatenate(
+            [self._rank,
+             (self._rng.random(nd) * 1e-3).astype(np.float32)])
+        self._norm = np.concatenate(
+            [self._norm, np.zeros(nd, np.float32)])
+        if total:
+            self._df += np.bincount(flat_terms,
+                                    minlength=len(self._hashes))
+        self._live_docs += nd
+        self.stats.postings_appended += total
+        self.stats.docs_added += nd
+
+        doc_starts = np.zeros(nd + 1, np.int64)
+        np.cumsum(lens, out=doc_starts[1:])
+        d = 0
+        while d < nd:
+            free_docs = self._delta.doc_cap - self._delta.n_docs
+            free_posts = self._delta.post_cap - self._delta.n_postings
+            cum = doc_starts[d:] - doc_starts[d]
+            m = int(np.searchsorted(cum, free_posts, side="right")) - 1
+            m = min(m, free_docs, nd - d)
+            if m <= 0:
+                if self._delta.n_docs > 0:
+                    self._seal_delta()
+                    continue
+                # a single doc larger than the delta's posting capacity:
+                # seal it directly as its own segment
+                s, e = doc_starts[d], doc_starts[d + 1]
+                self._direct_seal(flat_terms[s:e], flat_tfs[s:e])
+                d += 1
+                continue
+            s, e = doc_starts[d], doc_starts[d + m]
+            self._delta.append(lens[d:d + m], flat_terms[s:e],
+                               flat_tfs[s:e])
+            d += m
+        self._delta_dirty = True
+        self._refresh_norms()
+        self._maybe_compact()
+
+    def _direct_seal(self, terms: np.ndarray, tfs: np.ndarray) -> None:
+        """Seal one oversized doc straight to a segment, bypassing the
+        delta (which must be empty; its base advances past the doc)."""
+        assert self._delta.n_docs == 0
+        base = self._delta.doc_base
+        doc_of = np.zeros(len(terms), np.int64)
+        seg = self._build_segment(base, 1, doc_of, terms.astype(np.int64),
+                                  tfs)
+        self._segments.append(seg)
+        self.stats.postings_sealed += len(terms)
+        self.stats.seals += 1
+        self._delta = _Delta(self._delta.doc_cap, self._delta.post_cap,
+                             base + 1)
+        self._delta_dirty = True
+
+    # -- mutation: delete ---------------------------------------------------
+
+    def delete(self, doc_ids) -> None:
+        """Tombstone documents: mark dead, decrement live df using the
+        forward postings, refresh norms (dead norm -> 0, which every
+        engine's deleted-doc mask honours in-kernel).  Postings stay in
+        place until compaction reclaims them.  Already-dead ids are
+        ignored; out-of-range ids raise."""
+        ids = np.atleast_1d(np.asarray(doc_ids, np.int64))
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.num_docs:
+            raise ValueError(f"doc id out of range [0, {self.num_docs})")
+        ids = np.unique(ids)
+        ids = ids[self._live[ids]]
+        if ids.size == 0:
+            return
+        for d in ids:
+            terms = self._doc_terms(int(d))
+            if len(terms):
+                self._df[terms.astype(np.int64)] -= 1
+        self._live[ids] = False
+        self._live_docs -= int(ids.size)
+        self.stats.deletes += int(ids.size)
+        self._refresh_norms()
+
+    def _owner(self, d: int):
+        """Segment index owning global doc id d, or None for the delta."""
+        if d >= self._delta.doc_base:
+            return None
+        bases = [s.doc_base for s in self._segments]
+        i = bisect.bisect_right(bases, d) - 1
+        seg = self._segments[i]
+        assert seg.doc_base <= d < seg.doc_base + seg.doc_span
+        return i
+
+    def _doc_terms(self, d: int) -> np.ndarray:
+        o = self._owner(d)
+        if o is None:
+            dl = self._delta
+            local = d - dl.doc_base
+            if local >= dl.n_docs:
+                return np.zeros(0, np.int32)
+            s, e = dl.doc_offsets[local], dl.doc_offsets[local + 1]
+            return dl.terms[s:e]
+        seg = self._segments[o]
+        local = d - seg.doc_base
+        s, e = seg.doc_offsets[local], seg.doc_offsets[local + 1]
+        return seg.terms[s:e]
+
+    # -- seal / compact -----------------------------------------------------
+
+    def seal(self) -> None:
+        """Flush the delta into a sealed segment (no-op when empty)."""
+        self._seal_delta()
+
+    def _seal_delta(self) -> None:
+        dl = self._delta
+        if dl.n_docs == 0:
+            return
+        n_p = dl.n_postings
+        doc_of = dl.doc_of[:n_p].astype(np.int64)
+        terms = dl.terms[:n_p].astype(np.int64)
+        tfs = dl.tfs[:n_p].copy()
+        live = self._live[doc_of + dl.doc_base]
+        if not live.all():
+            doc_of, terms, tfs = doc_of[live], terms[live], tfs[live]
+        seg = self._build_segment(dl.doc_base, dl.n_docs, doc_of, terms,
+                                  tfs)
+        self._segments.append(seg)
+        self.stats.postings_sealed += n_p
+        self.stats.seals += 1
+        self._delta = _Delta(dl.doc_cap, dl.post_cap,
+                             dl.doc_base + dl.n_docs)
+        self._delta_dirty = True
+
+    def _build_segment(self, base: int, span: int, doc_of: np.ndarray,
+                       terms: np.ndarray, tfs: np.ndarray) -> Segment:
+        """Bulk-build one sealed segment over LOCAL doc ids and pad it to
+        its size class.  ``doc_of``/``terms``/``tfs`` must be (doc,
+        term)-sorted."""
+        w = len(self._hashes)
+        d_pad = layouts.size_class(span, base=layouts.ROUTE_TILE)
+        order = np.lexsort((doc_of, terms))          # term-major for bulk
+        df_seg = (np.bincount(terms, minlength=w) if len(terms)
+                  else np.zeros(w, np.int64))
+        offsets = np.zeros(w + 1, np.int64)
+        np.cumsum(df_seg, out=offsets[1:])
+        norm_pad = np.zeros(d_pad, np.float32)
+        rank_pad = np.zeros(d_pad, np.float32)
+        norm_pad[:span] = self._norm[base:base + span]
+        rank_pad[:span] = self._rank[base:base + span]
+        host = PostingsHost(
+            term_hashes=self._hashes, df=df_seg.astype(np.int32),
+            offsets=offsets, doc_ids=doc_of[order].astype(np.int32),
+            tfs=tfs[order].astype(np.float32), num_docs=d_pad,
+            norm=norm_pad, rank=rank_pad)
+        ix = layouts.build_blocked(host)
+        nb = int(ix.block_docs.shape[0])
+        mpl_q = layouts.size_class(ix.max_posting_len)
+        ix = layouts.pad_blocked_to_class(
+            ix,
+            nb_pad=layouts.size_class(nb),
+            w_pad=layouts.size_class(w, base=256),
+            max_posting_len=mpl_q,
+            max_blocks_per_term=mpl_q // layouts.BLOCK,
+            route_pairs_max=layouts.size_class(ix.route_pairs_max),
+            route_span_max=layouts.size_class(ix.route_span_max, base=8))
+        doc_offsets = np.zeros(span + 1, np.int64)
+        np.cumsum(np.bincount(doc_of.astype(np.int64), minlength=span),
+                  out=doc_offsets[1:])
+        return Segment(index=ix, doc_base=int(base), doc_span=int(span),
+                       doc_of=doc_of.astype(np.int32),
+                       terms=terms.astype(np.int32),
+                       tfs=tfs.astype(np.float32),
+                       doc_offsets=doc_offsets, n_postings=len(terms))
+
+    def compact(self, all_segments: bool = False) -> bool:
+        """Merge a policy-picked run of adjacent segments into one,
+        physically dropping tombstoned postings (their ids stay dead —
+        never reused).  ``all_segments=True`` rewrites the whole stack
+        into a single segment (the compat wrapper's full merge).
+        Returns True if a merge happened."""
+        n = len(self._segments)
+        if all_segments:
+            pick = (0, n) if n >= 1 else None
+        else:
+            pick = self._policy.pick(
+                [s.n_postings for s in self._segments])
+        if pick is None:
+            return False
+        lo, hi = pick
+        segs = self._segments[lo:hi]
+        base = segs[0].doc_base
+        span = segs[-1].doc_base + segs[-1].doc_span - base
+        parts_d, parts_t, parts_f = [], [], []
+        touched = 0
+        for s in segs:
+            touched += s.n_postings
+            if s.n_postings == 0:
+                continue
+            live = self._live[s.doc_of.astype(np.int64) + s.doc_base]
+            parts_d.append(s.doc_of[live].astype(np.int64) +
+                           (s.doc_base - base))
+            parts_t.append(s.terms[live].astype(np.int64))
+            parts_f.append(s.tfs[live])
+        if parts_d:
+            doc_of = np.concatenate(parts_d)
+            terms = np.concatenate(parts_t)
+            tfs = np.concatenate(parts_f)
+            order = np.lexsort((terms, doc_of))      # doc-major canonical
+            doc_of, terms, tfs = doc_of[order], terms[order], tfs[order]
+        else:
+            doc_of = np.zeros(0, np.int64)
+            terms = np.zeros(0, np.int64)
+            tfs = np.zeros(0, np.float32)
+        seg = self._build_segment(base, span, doc_of, terms, tfs)
+        self._segments[lo:hi] = [seg]
+        self.stats.postings_compacted += touched
+        self.stats.compactions += 1
+        return True
+
+    def _maybe_compact(self) -> None:
+        while self.compact():
+            pass
+
+    # -- norms / doc metadata ----------------------------------------------
+
+    def _refresh_norms(self) -> None:
+        """Recompute every live doc's tf-idf norm with the CURRENT live
+        df and doc count — the same float64 bincount (per-doc ascending-
+        term accumulation order) as the bulk builder, so norms are
+        bit-identical to a rebuild.  Dead docs get norm 0 (the tombstone
+        mask every engine honours); live empty docs get 1e-12."""
+        n_alloc = self.num_docs
+        w = len(self._df)
+        idf64 = (np.log1p(self._live_docs /
+                          np.maximum(self._df, 1).astype(np.float64))
+                 if w else np.zeros(0))
+        norm_sq = np.zeros(n_alloc, np.float64)
+        touched = 0
+        for seg in self._segments:
+            if seg.n_postings == 0:
+                continue
+            wv = seg.tfs * idf64[seg.terms.astype(np.int64)]
+            norm_sq += np.bincount(
+                seg.doc_of.astype(np.int64) + seg.doc_base,
+                weights=wv * wv, minlength=n_alloc)
+            touched += seg.n_postings
+        dl = self._delta
+        if dl.n_postings:
+            wv = (dl.tfs[:dl.n_postings] *
+                  idf64[dl.terms[:dl.n_postings].astype(np.int64)])
+            norm_sq += np.bincount(
+                dl.doc_of[:dl.n_postings].astype(np.int64) + dl.doc_base,
+                weights=wv * wv, minlength=n_alloc)
+            touched += dl.n_postings
+        norm = np.sqrt(norm_sq).astype(np.float32)
+        norm[norm == 0] = 1e-12
+        norm[~self._live] = 0.0
+        self._norm = norm
+        self.stats.postings_norm_refreshed += touched
+        for seg in self._segments:
+            self._push_doc_meta(seg)
+        self._delta_dirty = True
+
+    def _push_doc_meta(self, seg: Segment) -> None:
+        d_pad = seg.index.docs.num_docs
+        norm_pad = np.zeros(d_pad, np.float32)
+        norm_pad[:seg.doc_span] = self._norm[
+            seg.doc_base:seg.doc_base + seg.doc_span]
+        seg.index = dataclasses.replace(
+            seg.index,
+            docs=DocTable(norm=jnp.asarray(norm_pad),
+                          rank=seg.index.docs.rank))
+
+    def _delta_device(self) -> dict:
+        if self._delta_dev is None or self._delta_dirty:
+            dl = self._delta
+            norm = np.zeros(dl.doc_cap, np.float32)
+            rank = np.zeros(dl.doc_cap, np.float32)
+            hi = min(dl.doc_base + dl.doc_cap, self.num_docs)
+            n = max(hi - dl.doc_base, 0)
+            norm[:n] = self._norm[dl.doc_base:hi]
+            rank[:n] = self._rank[dl.doc_base:hi]
+            self._delta_dev = {
+                "terms": jnp.asarray(dl.terms),
+                "tfs": jnp.asarray(dl.tfs),
+                "doc_of": jnp.asarray(dl.doc_of),
+                "norm": jnp.asarray(norm),
+                "rank": jnp.asarray(rank),
+            }
+            self._delta_dirty = False
+        return self._delta_dev
+
+    # -- queries ------------------------------------------------------------
+
+    def _prep(self, qh: np.ndarray):
+        qh = _dedup_np(np.asarray(qh, np.uint32))
+        tids = self._lookup_np(qh)
+        if len(self._df):
+            df = np.where(tids >= 0, self._df[np.maximum(tids, 0)],
+                          0).astype(np.int32)
+        else:
+            df = np.zeros(qh.shape, np.int32)
+        idf_w, qnorm = _query_weights(
+            jnp.asarray(df), jnp.asarray(np.float32(self._live_docs)))
+        return qh, tids, idf_w, qnorm
+
+    def topk(self, query_hashes, k: int, *, cap: int | None = None,
+             rank_blend: float = 0.0, engine: str = "pallas",
+             mode: str = "candidates", backend: str = "pallas",
+             return_stats: bool = False):
+        """Batched top-k over delta + every sealed segment.
+
+        query_hashes u32[B, T].  One fused candidate-kernel launch per
+        sealed segment (``engine="pallas"``, the default; ``mode=
+        "dense"`` keeps the PR-1 dense tail, ``engine="jnp"`` is the
+        gather oracle) + one static-shape delta evaluation; per-segment
+        candidate lists merge on the host with the oracle's tie order.
+        ``cap`` defaults to each segment's (quantized) full posting
+        length — the exact-parity setting."""
+        if engine not in ("pallas", "jnp"):
+            raise ValueError(f"unknown engine: {engine!r}")
+        if mode not in ("candidates", "dense"):
+            raise ValueError(f"unknown fused-engine mode: {mode!r}")
+        qh = np.asarray(query_hashes, np.uint32)
+        if qh.ndim != 2:
+            raise ValueError("query_hashes must be [B, T]")
+        qh, tids, idf_w, qnorm = self._prep(qh)
+        qh_dev = jnp.asarray(qh)
+        k_tile = default_k_tile(k)
+        vals, ids, overflows = [], [], []
+        for seg in self._segments:
+            c = int(cap) if cap is not None else seg.index.max_posting_len
+            b = jnp.asarray(np.int32(seg.doc_base))
+            if engine == "jnp":
+                v, g, o = ops.jnp_segment_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    rank_blend=rank_blend)
+            elif mode == "dense":
+                v, g, o = ops.fused_segment_dense_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    max_pairs=seg.index.route_pairs_max,
+                    rank_blend=rank_blend, backend=backend)
+            else:
+                v, g, o = ops.fused_segment_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    max_pairs=seg.index.route_pairs_max,
+                    rank_blend=rank_blend, backend=backend)
+            # keep device arrays until every segment is dispatched —
+            # transferring here would serialize the per-segment launches
+            vals.append(v)
+            ids.append(g)
+            overflows.append(o)
+        dev = self._delta_device()
+        dv, dg = _delta_candidates(
+            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
+            dev["rank"], jnp.asarray(tids.astype(np.int32)), idf_w, qnorm,
+            jnp.asarray(np.int32(self._delta.doc_base)), k_tile=k_tile,
+            rank_blend=rank_blend)
+        vals.append(dv)
+        ids.append(dg)
+        overflow = sum(int(o) for o in overflows)
+        mv, mi = merge_topk_candidates_host(vals, ids, k)
+        hit = np.isfinite(mv)
+        result = QueryResult(
+            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
+            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
+        if return_stats:
+            return result, {"pair_overflow": overflow}
+        return result
+
+    def conjunctive(self, query_hashes, k: int, cap: int):
+        """AND semantics over the whole live index for ONE query [T].
+
+        Each sealed segment contributes its local membership counts
+        (docs live in exactly one segment, so local == global) and its
+        own cap-truncation count; ``stats["truncated_terms"]``
+        AGGREGATES across segments — truncation in ANY segment is
+        surfaced, not just the last one scored."""
+        qh = _dedup_np(np.asarray(query_hashes, np.uint32).reshape(1, -1))
+        needed = int((qh != 0).sum())
+        qh1, tids, idf_w, _qnorm = self._prep(qh)
+        qh_dev = jnp.asarray(qh1[0])
+        k_tile = default_k_tile(k)
+        vals, ids, truncs = [], [], []
+        for seg in self._segments:
+            v, g, t = ops.jnp_segment_conjunctive(
+                seg.index, qh_dev, idf_w[0], jnp.asarray(np.int32(needed)),
+                jnp.asarray(np.int32(seg.doc_base)), k_tile=k_tile,
+                cap=int(cap))
+            vals.append(v)
+            ids.append(g)
+            truncs.append(t)
+        truncated = sum(int(t) for t in truncs)
+        dev = self._delta_device()
+        dv, dg = _delta_conjunctive(
+            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
+            jnp.asarray(tids[0].astype(np.int32)), idf_w[0],
+            jnp.asarray(np.int32(needed)),
+            jnp.asarray(np.int32(self._delta.doc_base)), k_tile=k_tile)
+        vals.append(np.asarray(dv))
+        ids.append(np.asarray(dg))
+        mv, mi = merge_topk_candidates_host(vals, ids, k)
+        hit = np.isfinite(mv)
+        result = QueryResult(
+            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
+            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
+        return result, {"truncated_terms": truncated}
+
+    # -- import / export ----------------------------------------------------
+
+    @classmethod
+    def from_host(cls, host: PostingsHost, **kwargs) -> "SegmentedIndex":
+        """Seed a live index from bulk-built postings: one sealed
+        segment over [0, num_docs), the host's vocabulary and static
+        ranks, norms recomputed (identically) from live df."""
+        si = cls(term_hashes=host.term_hashes, **kwargs)
+        if host.num_docs == 0:
+            return si
+        si._live = np.ones(host.num_docs, bool)
+        si._rank = host.rank.astype(np.float32).copy()
+        si._norm = np.zeros(host.num_docs, np.float32)
+        si._df = host.df.astype(np.int64).copy()
+        si._live_docs = host.num_docs
+        term_of = np.repeat(np.arange(host.num_terms, dtype=np.int64),
+                            np.diff(host.offsets))
+        doc = host.doc_ids.astype(np.int64)
+        order = np.lexsort((term_of, doc))           # doc-major canonical
+        seg = si._build_segment(0, host.num_docs, doc[order],
+                                term_of[order],
+                                host.tfs[order].astype(np.float32))
+        si._segments.append(seg)
+        si.stats.postings_sealed += seg.n_postings
+        si.stats.seals += 1
+        si._delta = _Delta(si._delta.doc_cap, si._delta.post_cap,
+                           host.num_docs)
+        si._refresh_norms()
+        return si
+
+    def _live_triples(self):
+        parts_d, parts_t, parts_f = [], [], []
+        for seg in self._segments:
+            if seg.n_postings == 0:
+                continue
+            gdoc = seg.doc_of.astype(np.int64) + seg.doc_base
+            live = self._live[gdoc]
+            parts_d.append(gdoc[live])
+            parts_t.append(seg.terms[live].astype(np.int64))
+            parts_f.append(seg.tfs[live])
+        dl = self._delta
+        if dl.n_postings:
+            gdoc = dl.doc_of[:dl.n_postings].astype(np.int64) + dl.doc_base
+            live = self._live[gdoc]
+            parts_d.append(gdoc[live])
+            parts_t.append(dl.terms[:dl.n_postings][live].astype(np.int64))
+            parts_f.append(dl.tfs[:dl.n_postings][live])
+        if not parts_d:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.float32))
+        return (np.concatenate(parts_d), np.concatenate(parts_t),
+                np.concatenate(parts_f))
+
+    def to_host(self) -> PostingsHost:
+        """Export merged live postings as §3.6 bulk output (the compat
+        wrapper's return).  Doc ids keep their global values; with
+        tombstones present the dead ids export as deleted (norm 0) empty
+        docs, and the export's norms use the allocated id count as D —
+        build the oracle from ``export_live_corpus`` when an exact
+        live-corpus reference is needed."""
+        gdoc, terms, tfs = self._live_triples()
+        host = build_mod._postings_from_triples(
+            gdoc, terms, tfs.astype(np.float64), len(self._hashes),
+            self.num_docs, self._hashes)
+        if not self._live.all():
+            norm = host.norm.copy()
+            norm[~self._live] = 0.0
+            host = dataclasses.replace(host, norm=norm)
+        return host
+
+    def export_live_corpus(self):
+        """The equivalent live corpus over the unified vocabulary, plus
+        the ascending global ids of its docs — exactly what the parity
+        oracle should ``bulk_build`` (compact renumbering preserves doc
+        order, so tie-breaking maps 1:1)."""
+        live_ids = np.flatnonzero(self._live)
+        doc_term_ids, doc_counts = [], []
+        for d in live_ids:
+            t = self._doc_terms(int(d))
+            s, tf = np.asarray(t, np.int64), None
+            o = self._owner(int(d))
+            if o is None:
+                dl = self._delta
+                local = int(d) - dl.doc_base
+                a, b = dl.doc_offsets[local], dl.doc_offsets[local + 1]
+                tf = dl.tfs[a:b]
+            else:
+                seg = self._segments[o]
+                local = int(d) - seg.doc_base
+                a, b = seg.doc_offsets[local], seg.doc_offsets[local + 1]
+                tf = seg.tfs[a:b]
+            doc_term_ids.append(s)
+            doc_counts.append(np.asarray(tf, np.float64).astype(np.int64))
+        tc = TokenizedCorpus(doc_term_ids=doc_term_ids,
+                             doc_counts=doc_counts,
+                             term_hashes=self._hashes.copy(),
+                             num_docs=len(live_ids))
+        return tc, live_ids

@@ -210,6 +210,22 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
         raise ValueError(f"unknown engine: {engine!r}")
     if mode not in ("candidates", "dense"):
         raise ValueError(f"unknown fused-engine mode: {mode!r}")
+    from repro.core.live_index import SegmentedIndex  # avoid import cycle
+    if isinstance(index, SegmentedIndex):
+        # multi-segment path: one fused candidate launch per sealed
+        # segment + static-shape delta scoring + host candidate merge
+        # (the index handles its own per-segment jit caching)
+        if max_pairs is not None:
+            raise ValueError(
+                "max_pairs is not configurable for a SegmentedIndex — "
+                "each sealed segment carries its own exact (size-class "
+                "quantized) route_pairs_max budget")
+        def live_scorer(query_hashes: Array):
+            return index.topk(query_hashes, k, cap=cap,
+                              rank_blend=rank_blend, engine=engine,
+                              mode=mode, backend=backend,
+                              return_stats=return_stats)
+        return live_scorer
     if engine == "pallas":
         from repro.core.layouts import BlockedIndex, PackedCsrIndex
         if not isinstance(index, (BlockedIndex, PackedCsrIndex)):
@@ -228,6 +244,105 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
                                    rank_blend=rank_blend)
             stats = {"pair_overflow": jnp.int32(0)}
         return (result, stats) if return_stats else result
+    return scorer
+
+
+# ---------------------------------------------------------------------------
+# adaptive routing budgets (fused engine's max_pairs, learned online)
+# ---------------------------------------------------------------------------
+
+
+def _pow2_at_least(n: int, floor: int = 8) -> int:
+    """Power-of-two budget quantizer — the ONE geometric size-class
+    quantizer (layouts.size_class) at growth 2, so budget quantization
+    and segment size classes can never silently diverge."""
+    from repro.core.layouts import size_class
+    return size_class(n, base=floor, growth=2)
+
+
+class AdaptiveRoutingBudget:
+    """Per-``n_terms`` routing-pair budgets learned from the fused
+    engine's overflow counter and a rolling query-stream sample.
+
+    The static ``max_pairs`` budget trades compile-time shape against
+    dropped postings: too small and the engine overflows (surfaced, but
+    work is lost), too large and every launch pays for routing slots the
+    workload never fills.  Instead of the worst-case build-time bound,
+    this tracks the OBSERVED demand per query width: when a batch
+    overflows, the true demand is exactly ``budget + overflow`` (the
+    counter reports dropped pairs), so one growth step reaches a
+    sufficient budget; a rolling window of recent demands lets quiet
+    buckets shrink back.  Budgets quantize to powers of two so the
+    compile set stays logarithmic in demand (each distinct value is one
+    jit signature).
+    """
+
+    def __init__(self, initial: int = 64, window: int = 64,
+                 shrink_ratio: int = 4):
+        self.initial = int(initial)
+        self.window = int(window)
+        self.shrink_ratio = int(shrink_ratio)
+        self._budgets: dict[int, int] = {}
+        self._demands: dict[int, list] = {}
+        self.overflows = 0          # batches that overflowed (telemetry)
+
+    def budget(self, n_terms: int) -> int:
+        return self._budgets.setdefault(
+            int(n_terms), _pow2_at_least(self.initial))
+
+    def observe(self, n_terms: int, used_budget: int,
+                overflow: int) -> None:
+        """Record one batch: ``overflow`` pairs were dropped beyond
+        ``used_budget``, so the exact demand was their sum."""
+        n_terms = int(n_terms)
+        demand = int(used_budget) + int(overflow)
+        hist = self._demands.setdefault(n_terms, [])
+        hist.append(demand)
+        del hist[:-self.window]
+        cur = self.budget(n_terms)
+        if overflow > 0:
+            self.overflows += 1
+            # grow past the exact demand by one doubling of headroom so
+            # batch-to-batch demand jitter doesn't overflow again at the
+            # next power-of-two boundary
+            self._budgets[n_terms] = _pow2_at_least(demand) * 2
+        elif (len(hist) >= self.window and
+              _pow2_at_least(max(hist)) * self.shrink_ratio <= cur):
+            # sustained quiet: shrink toward the sampled demand (one
+            # headroom doubling), at most one recompile per window
+            self._budgets[n_terms] = _pow2_at_least(max(hist)) * 2
+
+
+def make_adaptive_scorer(index: Any, k: int, cap: int,
+                         budget: AdaptiveRoutingBudget | None = None,
+                         **scorer_kw):
+    """Fused-engine scorer whose ``max_pairs`` follows the workload.
+
+    Batches are bucketed by their widest query (unique present terms);
+    each bucket's budget starts small and converges via the overflow
+    counter — an overflowing workload reaches zero overflow within a
+    growth step per bucket (regression-tested).  Returns
+    ``fn(query_hashes) -> (QueryResult, stats)`` with the budget object
+    on ``fn.budget`` for introspection.
+    """
+    budget = budget if budget is not None else AdaptiveRoutingBudget()
+    scorers: dict[int, Callable] = {}
+
+    def scorer(query_hashes: Array):
+        import numpy as np
+        qh = np.asarray(query_hashes)
+        deduped = np.asarray(dedup_query_hashes(jnp.asarray(qh)))
+        n_terms = max(int((deduped != 0).sum(axis=-1).max()), 1)
+        mp = budget.budget(n_terms)
+        if mp not in scorers:
+            scorers[mp] = make_scorer(index, k=k, cap=cap,
+                                      engine="pallas", max_pairs=mp,
+                                      return_stats=True, **scorer_kw)
+        result, stats = scorers[mp](query_hashes)
+        budget.observe(n_terms, mp, int(stats["pair_overflow"]))
+        return result, stats
+
+    scorer.budget = budget
     return scorer
 
 

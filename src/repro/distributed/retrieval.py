@@ -461,6 +461,183 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# document-partitioned segment stacks (the live index's serving tier)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentStackShards:
+    """Per-shard stacks of sealed live-index segments, size-class
+    aligned and stacked ``[S, G, ...]`` (G = deepest stack, empty slots
+    inert).  Each shard owns WHOLE segments — the ODYS-style partition-
+    by-run layout — so a query runs one fused candidate kernel per local
+    segment and the global answer is a candidate merge, exactly the
+    single-node live path with shards playing the role of stacks."""
+    sorted_hash: np.ndarray    # u32[S, G, Wc]   per-segment vocab (era'd)
+    block_offsets: np.ndarray  # i32[S, G, Wc+1]
+    block_docs: np.ndarray     # i32[S, G, NBc, BLOCK]  segment-LOCAL ids
+    block_tfs: np.ndarray     # f32[S, G, NBc, BLOCK]
+    tile_first: np.ndarray     # i32[S, G, NBc]
+    tile_count: np.ndarray     # i32[S, G, NBc]
+    norm: np.ndarray           # f32[S, G, Dc]   current (tombstones = 0)
+    doc_base: np.ndarray       # i32[S, G]
+    vocab_hash: np.ndarray     # u32[W] unified, hash-sorted (replicated)
+    vocab_df: np.ndarray       # i32[W] LIVE global df (replicated)
+    n_shards: int
+    n_slots: int               # G
+    live_docs: int             # D behind idf
+    d_pad: int                 # Dc: common padded local doc space
+    tile: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
+    """Distribute a SegmentedIndex's sealed stack across ``n_shards``
+    (round-robin by stack position).  The delta must be sealed first —
+    the serving tier replicates immutable runs only."""
+    if live_index.delta_postings or live_index._delta.n_docs:
+        raise ValueError("seal() the delta before sharding the stack")
+    segs = live_index.segments()
+    if not segs:
+        raise ValueError("no sealed segments to shard")
+    # contiguous runs per shard (NOT round-robin): the all-gather
+    # candidate merge concatenates shard 0's candidates first, so shards
+    # must cover ascending doc-id ranges for exact score ties to break
+    # on lowest global doc id, like the single-node live index
+    splits = np.array_split(np.arange(len(segs)), n_shards)
+    shards = [[segs[i] for i in idx] for idx in splits]
+    g_max = max(len(st) for st in shards)
+    wc = max(int(s.index.sorted_hash.shape[0]) for s in segs)
+    nbc = max(int(s.index.block_docs.shape[0]) for s in segs)
+    dc = max(int(s.index.docs.num_docs) for s in segs)
+    block = segs[0].index.block
+    S, G = n_shards, g_max
+    sh = np.full((S, G, wc), 0xFFFFFFFF, np.uint32)
+    offs = np.zeros((S, G, wc + 1), np.int32)
+    bd = np.full((S, G, nbc, block), -1, np.int32)
+    bt = np.zeros((S, G, nbc, block), np.float32)
+    tf = np.zeros((S, G, nbc), np.int32)
+    tc = np.zeros((S, G, nbc), np.int32)
+    norm = np.zeros((S, G, dc), np.float32)
+    base = np.zeros((S, G), np.int32)
+    for s, stack in enumerate(shards):
+        for g, seg in enumerate(stack):
+            ix = seg.index
+            w = int(ix.sorted_hash.shape[0])
+            nb = int(ix.block_docs.shape[0])
+            d = int(ix.docs.num_docs)
+            sh[s, g, :w] = np.asarray(ix.sorted_hash)
+            offs[s, g, :w + 1] = np.asarray(ix.block_offsets)
+            offs[s, g, w + 1:] = offs[s, g, w]
+            bd[s, g, :nb] = np.asarray(ix.block_docs)
+            bt[s, g, :nb] = np.asarray(ix.block_tfs)
+            tf[s, g, :nb] = np.asarray(ix.tile_first)
+            tc[s, g, :nb] = np.asarray(ix.tile_count)
+            norm[s, g, :d] = np.asarray(ix.docs.norm)
+            base[s, g] = seg.doc_base
+    order = np.argsort(live_index.term_hashes, kind="stable")
+    return SegmentStackShards(
+        sorted_hash=sh, block_offsets=offs, block_docs=bd, block_tfs=bt,
+        tile_first=tf, tile_count=tc, norm=norm, doc_base=base,
+        vocab_hash=live_index.term_hashes[order].astype(np.uint32),
+        vocab_df=np.asarray(live_index._df)[order].astype(np.int32),
+        n_shards=S, n_slots=G, live_docs=live_index.live_doc_count,
+        d_pad=dc, tile=segs[0].index.route_tile,
+        max_blocks_per_term=max(s.index.max_blocks_per_term for s in segs),
+        route_span_max=max(s.index.route_span_max for s in segs),
+        route_pairs_max=max(s.index.route_pairs_max for s in segs))
+
+
+def make_doc_sharded_segment_scorer(index: SegmentStackShards, mesh: Mesh,
+                                    axis: str, k: int = 10):
+    """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
+
+    Every shard walks its local segment stack, runs the fused candidate
+    kernel per segment (idf from the replicated LIVE global df, so a
+    shard scores exactly as the single-node live index does), shifts
+    tile candidates to global ids via the per-segment doc_base, and the
+    usual all-gather candidate merge yields the global top-k.  Deleted
+    docs ride in as norm == 0 per segment — tombstones work unchanged
+    at cluster scale."""
+    from repro.distributed.topk import local_candidate_merge
+    from repro.kernels.fused_decode_score import (
+        Q_PAD, build_batched_pairs, default_k_tile,
+        fused_topk_blocked_pallas)
+    from repro.kernels.ops import expand_block_candidates
+
+    if mesh.shape[axis] != index.n_shards:
+        raise ValueError(
+            f"stack was built for {index.n_shards} shards but mesh axis "
+            f"{axis!r} has {mesh.shape[axis]} devices — shard_map would "
+            f"silently drop whole per-shard stacks")
+    arrs = index.device_arrays()
+    d_pad, tile, G = index.d_pad, index.tile, index.n_slots
+    n_tiles = max(-(-d_pad // tile), 1)
+    num_docs = index.live_docs
+    m_blocks = max(index.max_blocks_per_term, 1)
+    k_tile = default_k_tile(k, tile)
+
+    sharded = {n: P(axis) for n in
+               ("sorted_hash", "block_offsets", "block_docs", "block_tfs",
+                "tile_first", "tile_count", "norm", "doc_base")}
+    sharded["vocab_hash"] = P()
+    sharded["vocab_df"] = P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
+    def score(ix, qh):
+        sq = {n: (v[0] if n not in ("vocab_hash", "vocab_df") else v)
+              for n, v in ix.items()}             # drop shard dim
+        qh = dedup_query_hashes(qh)
+        t = qh.shape[0]
+        # global idf from the replicated live vocabulary stats
+        vpos = jnp.searchsorted(sq["vocab_hash"], qh).astype(jnp.int32)
+        vpos = jnp.clip(vpos, 0, sq["vocab_hash"].shape[0] - 1)
+        vhit = (sq["vocab_hash"][vpos] == qh) & (qh != 0)
+        w = idf_fn(jnp.where(vhit, sq["vocab_df"][vpos], 0), num_docs)
+        qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
+        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
+        max_pairs = max(min(index.route_pairs_max,
+                            t * m_blocks * max(index.route_span_max, 1)),
+                        8)
+        all_v, all_i = [], []
+        for g in range(G):                        # static stack depth
+            pos = jnp.searchsorted(sq["sorted_hash"][g],
+                                   qh).astype(jnp.int32)
+            pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[1] - 1)
+            hit = (sq["sorted_hash"][g][pos] == qh) & (qh != 0)
+            tid = jnp.where(hit, pos, -1)
+            cand_block, cand_valid, cand_q, cand_w, _ = \
+                expand_block_candidates(sq["block_offsets"][g], tid[None],
+                                        w[None], m_blocks,
+                                        sq["block_docs"].shape[-1])
+            pb, pt, pqw, pcap, _ovf = build_batched_pairs(
+                cand_block, cand_valid, cand_q, cand_w,
+                sq["tile_first"][g], sq["tile_count"][g], n_tiles, 1,
+                max_pairs)
+            pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+            vals, ids = fused_topk_blocked_pallas(
+                sq["block_docs"][g], sq["block_tfs"][g], pb, pt, pqw,
+                pcap, sq["norm"][g], jnp.zeros_like(sq["norm"][g]), qn,
+                d_pad, k_tile, tile=tile)
+            all_v.append(vals[0])
+            all_i.append(jnp.where(ids[0] >= 0,
+                                   ids[0] + sq["doc_base"][g], -1))
+        return local_candidate_merge(jnp.concatenate(all_v),
+                                     jnp.concatenate(all_i), k, axis)
+
+    return jax.jit(lambda qh: score(arrs, qh))
+
+
+# ---------------------------------------------------------------------------
 # term-partitioned, fused Pallas engine (HOR blocks per vocab shard)
 # ---------------------------------------------------------------------------
 

@@ -22,11 +22,38 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.shmap import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 Array = jax.Array
+
+
+def merge_topk_candidates_host(values, ids, k: int):
+    """numpy twin of ``merge_topk_candidates`` for host-side merges.
+
+    ``values`` / ``ids``: lists of per-source candidate arrays
+    ``[..., C_i]`` (ragged last axes allowed), concatenated in source
+    order.  The segmented live index merges its per-segment candidate
+    lists here so the merge tier never enters jit — the set of sealed
+    segments can change every batch without triggering a recompile.
+
+    Tie-breaking matches ``jax.lax.top_k`` (earliest candidate among
+    equal values): a stable descending sort keeps the first occurrence
+    first, so with sources ordered by ascending doc-id range the merged
+    ranking tie-breaks on lowest global doc id, like the dense oracle.
+    """
+    v = np.concatenate([np.asarray(x, np.float32) for x in values], axis=-1)
+    i = np.concatenate([np.asarray(x, np.int32) for x in ids], axis=-1)
+    c = v.shape[-1]
+    if c < k:
+        pad = [(0, 0)] * (v.ndim - 1) + [(0, k - c)]
+        v = np.pad(v, pad, constant_values=-np.inf)
+        i = np.pad(i, pad, constant_values=-1)
+    order = np.argsort(-v, axis=-1, kind="stable")[..., :k]
+    return (np.take_along_axis(v, order, axis=-1),
+            np.take_along_axis(i, order, axis=-1))
 
 
 def merge_topk_candidates(values: Array, ids: Array, k: int

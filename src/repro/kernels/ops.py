@@ -333,6 +333,132 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
 
 
 # ---------------------------------------------------------------------------
+# per-segment engines for the segmented live index (core/live_index.py)
+# ---------------------------------------------------------------------------
+#
+# One sealed segment == one BlockedIndex padded to a static size class
+# (layouts.pad_blocked_to_class).  These module-level jitted entry points
+# take the segment as a pytree ARGUMENT (not a captured constant), so a
+# freshly sealed segment of an already-warm class reuses the compiled
+# executable — the live index's recompile-avoidance contract.  Each
+# returns per-tile candidate lists of FINAL scores with GLOBAL doc ids
+# (segment-local ids shifted by the traced ``doc_base`` scalar), merged
+# host-side by ``distributed.topk.merge_topk_candidates_host``.
+#
+# ``idf_w`` carries GLOBAL idf weights (live df over live docs, computed
+# by the live index) — a segment never scores with its local df, so the
+# multi-segment ranking matches a from-scratch rebuild exactly.  Slots
+# whose term is absent from THIS segment still contribute to the query
+# norm (it is a property of the query, not the segment) but gate no
+# posting blocks.
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
+def fused_segment_topk(index: BlockedIndex, query_hashes: Array,
+                       idf_w: Array, doc_base: Array, *, k_tile: int,
+                       cap: int, max_pairs: int, rank_blend: float = 0.0,
+                       tile: int = TILE, backend: Backend = "pallas"):
+    """Candidate engine over one segment: fused decode-and-score kernel
+    with in-kernel per-tile top-k (tombstones ride in as norm == 0)."""
+    present = query_hashes != 0
+    tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
+    vals, ids, overflow = fused_batched_topk(
+        index, tids, idf_w, cap, k=k_tile, rank_blend=rank_blend,
+        max_pairs=max_pairs, tile=tile, k_tile=k_tile, backend=backend)
+    gids = jnp.where(ids >= 0, ids + doc_base, -1)
+    return vals, gids, overflow
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
+def fused_segment_dense_topk(index: BlockedIndex, query_hashes: Array,
+                             idf_w: Array, doc_base: Array, *, k_tile: int,
+                             cap: int, max_pairs: int,
+                             rank_blend: float = 0.0, tile: int = TILE,
+                             backend: Backend = "pallas"):
+    """Dense engine over one segment (PR-1 tail): full local score rows,
+    then the jnp mirror of the per-tile candidate reduction."""
+    present = query_hashes != 0
+    tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
+    scores, overflow = fused_batched_scores(
+        index, tids, idf_w, cap, max_pairs=max_pairs, tile=tile,
+        backend=backend)
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
+    final = final_scores(scores, index.docs.norm, index.docs.rank, qnorm,
+                         rank_blend)
+    vals, ids = extract_tile_candidates(final, tile, k_tile)
+    gids = jnp.where(ids >= 0, ids + doc_base, -1)
+    return vals, gids, overflow
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_tile", "cap", "rank_blend", "tile"))
+def jnp_segment_topk(index, query_hashes: Array, idf_w: Array,
+                     doc_base: Array, *, k_tile: int, cap: int,
+                     rank_blend: float = 0.0, tile: int = TILE):
+    """Pure-jnp oracle engine over one segment (gather + scatter-add),
+    reduced to the same per-tile candidate lists as the fused kernels."""
+    from repro.core.query import accumulate_scores
+    num_docs = index.docs.num_docs
+
+    def one(qh, w):
+        present = qh != 0
+        tids = jnp.where(present, index.lookup_terms(qh), -1)
+        d, tf, valid = index.gather_postings(tids, cap)
+        return accumulate_scores(d, tf * w[:, None], valid, num_docs)
+
+    scores = jax.vmap(one)(query_hashes, idf_w)
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
+    final = final_scores(scores, index.docs.norm, index.docs.rank, qnorm,
+                         rank_blend)
+    vals, ids = extract_tile_candidates(final, tile, k_tile)
+    gids = jnp.where(ids >= 0, ids + doc_base, -1)
+    return vals, gids, jnp.int32(0)
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "cap", "tile"))
+def jnp_segment_conjunctive(index, query_hashes: Array, idf_w: Array,
+                            needed: Array, doc_base: Array, *, k_tile: int,
+                            cap: int, tile: int = TILE):
+    """AND-semantics membership counts + scores over one segment for a
+    SINGLE query; a doc lives in exactly one segment, so its local count
+    is its global count.  Returns (vals, gids, truncated_terms) where
+    ``truncated_terms`` counts terms whose LOCAL posting list exceeds
+    ``cap`` — the live index SUMS this across segments (the stats-
+    plumbing fix: truncation in any segment is surfaced, not just the
+    last one scored)."""
+    from repro.core.query import accumulate_counts, accumulate_scores
+    num_docs = index.docs.num_docs
+    present = query_hashes != 0
+    tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
+    df_local = index.term_df(tids)
+    d, tf, valid = index.gather_postings(tids, cap)
+    scores = accumulate_scores(d, tf * idf_w[:, None], valid, num_docs)
+    counts = accumulate_counts(d, valid, num_docs)
+    truncated = jnp.sum(((df_local > cap) & (tids >= 0)).astype(jnp.int32))
+    ok = counts >= needed
+    final = jnp.where(ok & (index.docs.norm > 0),
+                      scores / jnp.maximum(index.docs.norm, 1e-12),
+                      -jnp.inf)
+    vals, ids = extract_tile_candidates(final[None], tile, k_tile)
+    gids = jnp.where(ids[0] >= 0, ids[0] + doc_base, -1)
+    return vals[0], gids, truncated
+
+
+def segment_scorer_cache_sizes() -> dict:
+    """jit-cache sizes of the per-segment engines — the live index's
+    churn test asserts these stop growing once every size class is warm
+    (new compilations would mean the size-class contract broke)."""
+    return {
+        "fused_segment_topk": fused_segment_topk._cache_size(),
+        "fused_segment_dense_topk": fused_segment_dense_topk._cache_size(),
+        "jnp_segment_topk": jnp_segment_topk._cache_size(),
+        "jnp_segment_conjunctive": jnp_segment_conjunctive._cache_size(),
+    }
+
+
+# ---------------------------------------------------------------------------
 # packed-posting decode
 # ---------------------------------------------------------------------------
 

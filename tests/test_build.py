@@ -26,6 +26,54 @@ def test_bulk_equals_incremental():
     np.testing.assert_allclose(merged.norm, full.norm, rtol=1e-6)
 
 
+def test_merge_vocab_vectorized():
+    """The searchsorted remap matches the legacy dict-loop semantics:
+    found hashes map to old ids, new hashes append in first-appearance
+    order."""
+    old = np.array([50, 10, 30], np.uint32)
+    new = np.array([30, 7, 10, 99, 7], np.uint32)
+    merged, remap = build.merge_vocab(old, new)
+    # reference: the pre-vectorization dict loop
+    hash_to_old = {int(h): i for i, h in enumerate(old)}
+    ref_remap, extra = [], []
+    for h in new:
+        j = hash_to_old.get(int(h))
+        if j is None:
+            j = len(old) + len(extra)
+            extra.append(h)
+        ref_remap.append(j)
+    np.testing.assert_array_equal(remap, ref_remap)
+    np.testing.assert_array_equal(
+        merged, np.concatenate([old, np.array(extra, np.uint32)]))
+    # empty-old edge
+    merged2, remap2 = build.merge_vocab(np.zeros(0, np.uint32), new)
+    np.testing.assert_array_equal(merged2, new)
+    np.testing.assert_array_equal(remap2, np.arange(len(new)))
+    # all-found edge
+    merged3, remap3 = build.merge_vocab(old, old[::-1].copy())
+    np.testing.assert_array_equal(merged3, old)
+    np.testing.assert_array_equal(remap3, [2, 1, 0])
+
+
+def test_add_documents_with_new_terms_matches_legacy_merge():
+    """The live-index compat wrapper reproduces the legacy one-shot
+    merge exactly, including vocabulary growth (new hashes appended)."""
+    tc1 = corpus.generate(corpus.CorpusSpec(num_docs=80, vocab=250,
+                                            avg_distinct=15, seed=7))
+    tc2 = corpus.generate(corpus.CorpusSpec(num_docs=50, vocab=290,
+                                            avg_distinct=15, seed=8))
+    host = build.bulk_build(tc1)
+    got = build.add_documents(host, tc2)               # wrapper path
+    ref = build._merge_documents(host, tc2, host.num_docs)  # legacy path
+    np.testing.assert_array_equal(got.term_hashes, ref.term_hashes)
+    assert got.num_terms > host.num_terms              # vocab grew
+    np.testing.assert_array_equal(got.df, ref.df)
+    np.testing.assert_array_equal(got.offsets, ref.offsets)
+    np.testing.assert_array_equal(got.doc_ids, ref.doc_ids)
+    np.testing.assert_allclose(got.tfs, ref.tfs)
+    np.testing.assert_allclose(got.norm, ref.norm, rtol=1e-6)
+
+
 def test_corpus_stats(small_host):
     st = build.corpus_stats(small_host)
     assert st.D == small_host.num_docs
