@@ -6,7 +6,10 @@ Emits (CSV rows via benchmarks.common.emit):
   churn/rebuild_ingest     us per batch for the §3.6 merge-everything
                            path (the pre-live-index ``add_documents``)
   churn/query_segments_N   fused multi-segment query latency with N
-                           sealed segments on the stack
+                           sealed segments on the stack (value = p50;
+                           derived carries p50/p99/mean — percentile
+                           reporting shared with benchmarks/serving.py
+                           via common.latency_summary)
   churn/amplification      posting-merge work ratio rebuild/live —
                            cumulative postings touched per path (the
                            ISSUE's >= 10x criterion is on the per-batch
@@ -62,9 +65,12 @@ def main() -> None:
             si.delete(np.arange(0, si.num_docs, max(si.num_docs // 64, 1)))
         ingest_time += time.perf_counter() - t1
         if i in checkpoints:
-            us = common.time_call(lambda: si.topk(qh, k=10), reps=3,
-                                  warmup=1)
-            common.emit(f"churn/query_segments_{si.num_segments}", us,
+            reps = 5 if smoke else 20
+            samples = common.time_samples(lambda: si.topk(qh, k=10),
+                                          reps=reps, warmup=1)
+            common.emit(f"churn/query_segments_{si.num_segments}",
+                        float(np.median(samples)),
+                        f"{common.latency_summary(samples)} "
                         f"delta_docs={si._delta.n_docs}")
     live_us = ingest_time / n_batches * 1e6
     common.emit("churn/live_ingest", live_us,

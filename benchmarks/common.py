@@ -44,8 +44,10 @@ def bench_host(spec: corpus.CorpusSpec | None = None):
     return _HOST_CACHE[key]
 
 
-def time_call(fn: Callable, *args, reps: int = 10, warmup: int = 2) -> float:
-    """Median wall-time per call in microseconds (jit-warmed)."""
+def time_samples(fn: Callable, *args, reps: int = 10,
+                 warmup: int = 2) -> np.ndarray:
+    """Per-call wall times in microseconds (jit-warmed), one sample per
+    rep — feed to ``latency_summary`` for percentile reporting."""
     for _ in range(warmup):
         out = fn(*args)
         jax.tree.map(lambda x: x.block_until_ready()
@@ -57,7 +59,26 @@ def time_call(fn: Callable, *args, reps: int = 10, warmup: int = 2) -> float:
         jax.tree.map(lambda x: x.block_until_ready()
                      if hasattr(x, "block_until_ready") else x, out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return np.asarray(ts) * 1e6
+
+
+def time_call(fn: Callable, *args, reps: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit-warmed)."""
+    return float(np.median(time_samples(fn, *args, reps=reps,
+                                        warmup=warmup)))
+
+
+def latency_summary(samples_us) -> str:
+    """``p50=..us p99=..us mean=..us`` derived-column fragment — the ONE
+    latency-reporting format, shared by churn and the serving benchmark
+    (percentile math lives in repro.serve.metrics so the benchmarks and
+    the QueryServer's own metrics can never disagree)."""
+    from repro.serve.metrics import percentiles
+    p = percentiles(samples_us, (50, 99))
+    mean = float(np.mean(np.asarray(list(samples_us), np.float64))) \
+        if len(samples_us) else 0.0
+    return (f"p50={p['p50']:.1f}us p99={p['p99']:.1f}us "
+            f"mean={mean:.1f}us")
 
 
 def time_host(fn: Callable, *args, reps: int = 3) -> float:

@@ -8,6 +8,8 @@
   roofline   §Roofline terms from the dry-run artifacts (if present)
   churn    live-index ingest/churn: docs/sec, latency vs segment count,
            posting-merge amplification vs full rebuild
+  serving  QueryServer offered-QPS sweep: request latency p50/p99,
+           achieved QPS, cache hit rate, maintenance-thread lifecycle
 
 ``--smoke`` runs every suite on a CI-sized corpus (plumbing check, not
 representative numbers).
@@ -20,11 +22,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import churn, common, expansion, partitioned, \
-        roofline, table5_size, table6_index, table7_query
+        roofline, serving, table5_size, table6_index, table7_query
     suites = [("table5", table5_size.main), ("table6", table6_index.main),
               ("table7", table7_query.main), ("expansion", expansion.main),
               ("partitioned", partitioned.main),
-              ("roofline", roofline.main), ("churn", churn.main)]
+              ("roofline", roofline.main), ("churn", churn.main),
+              ("serving", serving.main)]
     args = [a for a in sys.argv[1:]]
     if "--smoke" in args:
         args.remove("--smoke")

@@ -1,0 +1,137 @@
+"""Serving benchmark: offered-QPS sweep over the QueryServer.
+
+A closed-loop driver paces single-query submissions at each offered
+rate while the worker thread micro-batches them and a maintenance
+thread seals/compacts behind pinned epochs; a background ingest stream
+advances the epoch so the cache invalidation path is exercised, and the
+query stream draws from a finite pool so repeats produce cache hits.
+
+Emits (CSV rows via benchmarks.common.emit):
+
+  serving/qps_N     value = p50 request latency at offered rate N;
+                    derived = p50/p99/mean (common.latency_summary, the
+                    same helper churn.py reports with) + achieved QPS,
+                    cache hit rate, batch fill, epochs served
+  serving/lifecycle seals/compactions the maintenance thread ran and
+                    the final segment count
+
+``--smoke`` (or run.py --smoke) shrinks the sweep to a plumbing check;
+the long sweep is exercised by the slow-marked test in
+tests/test_serve.py (the daily full-suite job).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import build, compaction
+from repro.core.live_index import SegmentedIndex
+from repro.serve import IndexMaintenance, QueryServer, ServerConfig
+from repro.text import corpus
+
+
+def _build_live_index(tc, holdback_frac=0.25, delta_docs=128):
+    """Ingest all but a holdback slice (streamed during the drive)."""
+    n = tc.num_docs
+    first = int(n * (1 - holdback_frac))
+    si = SegmentedIndex(
+        term_hashes=tc.term_hashes, delta_doc_capacity=delta_docs,
+        delta_posting_capacity=delta_docs * 64,
+        policy=compaction.TieredPolicy(size_ratio=8.0, min_run=4))
+    step = max(first // 8, 1)
+    for a in range(0, first, step):
+        b = min(a + step, first)
+        si.add_batch(build.TokenizedCorpus(tc.doc_term_ids[a:b],
+                                           tc.doc_counts[a:b],
+                                           tc.term_hashes, b - a))
+    return si, first
+
+
+def run_sweep(rates, n_requests, *, pool_size=64, ingest_every=64,
+              tc=None, host=None, seed=11):
+    """Drive the server at each offered rate; returns one summary dict
+    per rate (keys: offered_qps + ServerMetrics.summary fields)."""
+    if tc is None or host is None:
+        tc, host = common.bench_host()
+    si, ingested = _build_live_index(tc)
+    cfg = ServerConfig(batch_size=8, n_terms_budget=8, k=10)
+    server = QueryServer(si, cfg)
+    maint = IndexMaintenance(si, server.index_lock, seal_fill=0.5,
+                             interval_s=0.001)
+    server.warmup()
+    pool = corpus.sample_query_terms(host.df, host.term_hashes,
+                                     pool_size, 3,
+                                     num_docs=host.num_docs, seed=seed)
+    rng = np.random.default_rng(seed)
+    holdback = list(range(ingested, tc.num_docs,
+                          max((tc.num_docs - ingested) // 16, 1)))
+
+    results = []
+    server.start()
+    maint.start()
+    try:
+        for rate in rates:
+            server.metrics.reset()
+            server.cache.reset_counters()
+            gap = 1.0 / rate if rate > 0 else 0.0
+            tickets = []
+            next_ingest = ingest_every
+            for i in range(n_requests):
+                tickets.append(server.submit(pool[rng.integers(pool_size)]))
+                if i == next_ingest and holdback:
+                    # one ingest batch mid-drive: epoch advances, cache
+                    # entries of older epochs become unreachable
+                    a = holdback.pop(0)
+                    b = min(a + 16, tc.num_docs)
+                    with server.index_lock:
+                        si.add_batch(build.TokenizedCorpus(
+                            tc.doc_term_ids[a:b], tc.doc_counts[a:b],
+                            tc.term_hashes, b - a))
+                    next_ingest += ingest_every
+                if gap:
+                    time.sleep(gap)
+            for t in tickets:
+                t.result(timeout=120.0)
+            s = server.metrics.summary(server.cache)
+            s["offered_qps"] = rate
+            s["samples_us"] = server.metrics.latency.samples_us()
+            results.append(s)
+    finally:
+        maint.stop()
+        server.stop()
+    results.append({"lifecycle": {"maint_seals": maint.stats.seals,
+                                  "maint_compactions":
+                                      maint.stats.compactions,
+                                  "segments": si.num_segments,
+                                  "epoch": si.epoch}})
+    return results
+
+
+def main() -> None:
+    tc, host = common.bench_host()
+    smoke = common.is_smoke()
+    rates = [100, 400] if smoke else [50, 200, 800, 3200]
+    n_requests = 96 if smoke else 512
+    results = run_sweep(rates, n_requests, tc=tc, host=host)
+    for s in results:
+        if "lifecycle" in s:
+            lc = s["lifecycle"]
+            common.emit("serving/lifecycle", 0.0,
+                        f"maint_seals={lc['maint_seals']} "
+                        f"maint_compactions={lc['maint_compactions']} "
+                        f"segments={lc['segments']} epoch={lc['epoch']}")
+            continue
+        common.emit(
+            f"serving/qps_{s['offered_qps']}", s["p50_us"],
+            f"{common.latency_summary(s['samples_us'])} "
+            f"achieved_qps={s['qps']:.0f} "
+            f"hit_rate={s['cache_hit_rate']:.2f} "
+            f"batch_fill={s['batch_fill']:.2f} "
+            f"epochs={s['epochs_served']}")
+
+
+if __name__ == "__main__":
+    common.set_smoke()
+    main()

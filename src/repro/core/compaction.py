@@ -44,6 +44,12 @@ class TieredPolicy:
         stack order (oldest first)."""
         return pick_compaction(sizes, self.size_ratio, self.min_run)
 
+    def due(self, sizes: list[int]) -> bool:
+        """True when the stack has a mergeable run.  The serving tier's
+        maintenance thread checks this BEFORE taking the index write
+        lock, so an idle stack costs queries no lock contention."""
+        return self.pick(sizes) is not None
+
 
 def pick_compaction(sizes: list[int], size_ratio: float = 4.0,
                     min_run: int = 4) -> tuple[int, int] | None:

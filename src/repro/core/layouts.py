@@ -580,14 +580,22 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
     NB = int(block_offsets[-1])
     bd = np.full((NB, block), -1, dtype=np.int32)
     bt = np.zeros((NB, block), dtype=np.float32)
-    for newpos, old in enumerate(order):
-        s, e = h.offsets[old], h.offsets[old + 1]
-        n = e - s
-        b0 = block_offsets[newpos]
-        flat_d = bd[b0:block_offsets[newpos + 1]].reshape(-1)
-        flat_t = bt[b0:block_offsets[newpos + 1]].reshape(-1)
-        flat_d[:n] = h.doc_ids[s:e]
-        flat_t[:n] = h.tfs[s:e]
+    P = h.num_postings
+    if P:
+        # vectorized block fill (one fancy-index scatter instead of a
+        # per-term python loop — that loop dominated live-index seal
+        # wall time): every posting's destination (block row, lane) is a
+        # pure function of its rank within its (hash-sorted) term
+        new_offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+        np.cumsum(lengths, out=new_offsets[1:])
+        starts_src = h.offsets[order].astype(np.int64)   # old slab starts
+        within = np.arange(P, dtype=np.int64) - np.repeat(new_offsets[:-1],
+                                                          lengths)
+        src = np.repeat(starts_src, lengths) + within
+        brow = np.repeat(block_offsets[:-1], lengths) + within // block
+        lane = within % block
+        bd[brow, lane] = h.doc_ids[src]
+        bt[brow, lane] = h.tfs[src]
     bmin = np.where((bd >= 0).any(axis=1),
                     np.where(bd >= 0, bd, np.iinfo(np.int32).max).min(axis=1),
                     0).astype(np.int32)
@@ -670,6 +678,53 @@ def pad_blocked_to_class(ix: BlockedIndex, nb_pad: int, w_pad: int,
         tile_count=jnp.pad(ix.tile_count, (0, dn)),
         max_posting_len=int(max_posting_len),
         max_blocks_per_term=int(max_blocks_per_term),
+        route_pairs_max=int(route_pairs_max),
+        route_span_max=int(route_span_max),
+    )
+
+
+def pad_packed_to_class(ix: "PackedCsrIndex", nb_pad: int, w_pad: int,
+                        max_posting_len: int, words_per_block: int,
+                        route_pairs_max: int, route_span_max: int
+                        ) -> "PackedCsrIndex":
+    """Pad a PackedCsrIndex to a static size class (the packed twin of
+    ``pad_blocked_to_class``, for delta+bit-packed sealed segments).
+
+    Padding blocks are inert: bit width 1 (in-distribution for the
+    decoder), count 0 (every lane decodes invalid), tile_count 0 (never
+    routed).  ``words_per_block`` is shape-bearing (the packed array's
+    lane dim), so it quantizes like the other statics.
+    """
+    w, nb = ix.num_terms, int(ix.packed.shape[0])
+    wpb = int(ix.packed.shape[1])
+    if nb_pad < nb or w_pad < w or words_per_block < wpb:
+        raise ValueError(f"size class ({nb_pad}, {w_pad}, {words_per_block})"
+                         f" below actual ({nb}, {w}, {wpb})")
+    if (max_posting_len < ix.max_posting_len
+            or route_pairs_max < ix.route_pairs_max
+            or route_span_max < ix.route_span_max):
+        raise ValueError("quantized static bounds must cover the actual "
+                         "index statics")
+    dn, dw = nb_pad - nb, w_pad - w
+    last = ix.block_offsets[-1]
+    return dataclasses.replace(
+        ix,
+        sorted_hash=jnp.pad(ix.sorted_hash, (0, dw),
+                            constant_values=HASH_EMPTY),
+        df=jnp.pad(ix.df, (0, dw)),
+        block_offsets=jnp.pad(ix.block_offsets, (0, dw),
+                              constant_values=last),
+        block_bits=jnp.pad(ix.block_bits, (0, dn), constant_values=1),
+        block_base=jnp.pad(ix.block_base, (0, dn)),
+        block_count=jnp.pad(ix.block_count, (0, dn)),
+        packed=jnp.pad(ix.packed, ((0, dn), (0, words_per_block - wpb))),
+        block_tfs=jnp.pad(ix.block_tfs, ((0, dn), (0, 0))),
+        block_min=jnp.pad(ix.block_min, (0, dn)),
+        block_max=jnp.pad(ix.block_max, (0, dn), constant_values=-1),
+        tile_first=jnp.pad(ix.tile_first, (0, dn)),
+        tile_count=jnp.pad(ix.tile_count, (0, dn)),
+        max_posting_len=int(max_posting_len),
+        words_per_block=int(words_per_block),
         route_pairs_max=int(route_pairs_max),
         route_span_max=int(route_span_max),
     )

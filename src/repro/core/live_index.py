@@ -72,6 +72,22 @@ posting EVERY batch.  Norm refresh is a separate vectorized
 O(live postings) bincount per mutation batch (counted apart in
 ``postings_norm_refreshed``; it is metadata maintenance, not index
 merge work, and never re-sorts or rebuilds posting structures).
+
+Epochs and pinned views (the serving-tier hook)
+-----------------------------------------------
+
+Every query-visible mutation (add, delete, seal, compact) advances a
+monotonic ``epoch`` counter; ``view()`` returns an immutable
+``LiveView`` pinned to the current epoch — shallow-pinned segment
+indexes (segment replacement never mutates the old pytree), the delta's
+device mirror (rebuilt, never mutated, on change), and copies of the
+in-place-mutated global state (df, live mask).  A pinned view answers
+``topk``/``conjunctive`` bit-identically to the live index AT THAT
+EPOCH no matter what lands afterwards, which is what lets the serving
+tier (``repro/serve``) micro-batch queries against a consistent index
+while ingest and background maintenance run.  ``view()`` itself must be
+called serially with writers (the serving tier holds a write lock for
+the pin, never for the query).
 """
 from __future__ import annotations
 
@@ -200,6 +216,20 @@ def _dedup_np(qh: np.ndarray) -> np.ndarray:
     return out
 
 
+def _lookup_sorted(hash_sorted: np.ndarray, hash_order: np.ndarray,
+                   qh: np.ndarray) -> np.ndarray:
+    """u32[...] hashes -> unified term ids (i64, -1 absent/empty) via a
+    host binary search over the sorted vocabulary."""
+    w = len(hash_sorted)
+    if w == 0:
+        return np.full(qh.shape, -1, np.int64)
+    flat = qh.reshape(-1)
+    pos = np.searchsorted(hash_sorted, flat)
+    posc = np.minimum(pos, w - 1)
+    hit = (hash_sorted[posc] == flat) & (flat != 0)
+    return np.where(hit, hash_order[posc], -1).reshape(qh.shape)
+
+
 # ---------------------------------------------------------------------------
 # stats / delta / segment containers
 # ---------------------------------------------------------------------------
@@ -285,6 +315,197 @@ class Segment:
 
 
 # ---------------------------------------------------------------------------
+# epoch-pinned immutable view (the serving tier's unit of consistency)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveView:
+    """An immutable snapshot of the query-visible index state at one
+    epoch.
+
+    Pinning is cheap: sealed segment indexes are immutable pytrees
+    (compaction and norm refresh REPLACE them, never mutate), the
+    delta's device mirror is rebuilt — not mutated — on change, and only
+    the in-place-mutated host state (df, live mask, delta tail) is
+    copied.  A view answers ``topk``/``conjunctive`` exactly as the
+    ``SegmentedIndex`` did at pin time, and ``export_live_corpus``
+    produces the matching oracle corpus — so a response served from a
+    pinned view can be checked bit-identical against the jnp oracle OF
+    ITS EPOCH even while writers churn the live index.
+    """
+    epoch: int
+    segments: tuple            # pinned shallow copies of Segment
+    delta_dev: dict            # capacity-padded device arrays
+    delta_terms: np.ndarray    # host delta tail, trimmed copies
+    delta_tfs: np.ndarray
+    delta_doc_of: np.ndarray
+    delta_doc_offsets: np.ndarray   # i64[delta_n_docs + 1]
+    delta_doc_base: int
+    delta_n_docs: int
+    hashes: np.ndarray         # unified vocabulary (replaced on growth)
+    hash_sorted: np.ndarray
+    hash_order: np.ndarray
+    df: np.ndarray             # i64[W] live global df (copy)
+    live: np.ndarray           # bool[num_docs] (copy)
+    live_docs: int
+    num_docs: int
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    # -- query path (identical op sequence to the live index) --------------
+
+    def _prep(self, qh: np.ndarray):
+        qh = _dedup_np(np.asarray(qh, np.uint32))
+        tids = _lookup_sorted(self.hash_sorted, self.hash_order, qh)
+        if len(self.df):
+            df = np.where(tids >= 0, self.df[np.maximum(tids, 0)],
+                          0).astype(np.int32)
+        else:
+            df = np.zeros(qh.shape, np.int32)
+        idf_w, qnorm = _query_weights(
+            jnp.asarray(df), jnp.asarray(np.float32(self.live_docs)))
+        return qh, tids, idf_w, qnorm
+
+    def topk(self, query_hashes, k: int, *, cap: int | None = None,
+             rank_blend: float = 0.0, engine: str = "pallas",
+             mode: str = "candidates", backend: str = "pallas",
+             return_stats: bool = False):
+        """Batched top-k over this view's delta + sealed segments — the
+        same contract as ``SegmentedIndex.topk``, evaluated against the
+        pinned epoch."""
+        if engine not in ("pallas", "jnp"):
+            raise ValueError(f"unknown engine: {engine!r}")
+        if mode not in ("candidates", "dense"):
+            raise ValueError(f"unknown fused-engine mode: {mode!r}")
+        qh = np.asarray(query_hashes, np.uint32)
+        if qh.ndim != 2:
+            raise ValueError("query_hashes must be [B, T]")
+        qh, tids, idf_w, qnorm = self._prep(qh)
+        qh_dev = jnp.asarray(qh)
+        k_tile = default_k_tile(k)
+        vals, ids, overflows = [], [], []
+        for seg in self.segments:
+            c = int(cap) if cap is not None else seg.index.max_posting_len
+            b = jnp.asarray(np.int32(seg.doc_base))
+            if engine == "jnp":
+                v, g, o = ops.jnp_segment_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    rank_blend=rank_blend)
+            elif mode == "dense":
+                v, g, o = ops.fused_segment_dense_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    max_pairs=seg.index.route_pairs_max,
+                    rank_blend=rank_blend, backend=backend)
+            else:
+                v, g, o = ops.fused_segment_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
+                    max_pairs=seg.index.route_pairs_max,
+                    rank_blend=rank_blend, backend=backend)
+            # keep device arrays until every segment is dispatched —
+            # transferring here would serialize the per-segment launches
+            vals.append(v)
+            ids.append(g)
+            overflows.append(o)
+        dev = self.delta_dev
+        dv, dg = _delta_candidates(
+            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
+            dev["rank"], jnp.asarray(tids.astype(np.int32)), idf_w, qnorm,
+            jnp.asarray(np.int32(self.delta_doc_base)), k_tile=k_tile,
+            rank_blend=rank_blend)
+        vals.append(dv)
+        ids.append(dg)
+        overflow = sum(int(o) for o in overflows)
+        mv, mi = merge_topk_candidates_host(vals, ids, k)
+        hit = np.isfinite(mv)
+        result = QueryResult(
+            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
+            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
+        if return_stats:
+            return result, {"pair_overflow": overflow}
+        return result
+
+    def conjunctive(self, query_hashes, k: int, cap: int):
+        """AND semantics over the pinned index for ONE query [T]; see
+        ``SegmentedIndex.conjunctive`` for the stats contract."""
+        qh = _dedup_np(np.asarray(query_hashes, np.uint32).reshape(1, -1))
+        needed = int((qh != 0).sum())
+        qh1, tids, idf_w, _qnorm = self._prep(qh)
+        qh_dev = jnp.asarray(qh1[0])
+        k_tile = default_k_tile(k)
+        vals, ids, truncs = [], [], []
+        for seg in self.segments:
+            v, g, t = ops.jnp_segment_conjunctive(
+                seg.index, qh_dev, idf_w[0], jnp.asarray(np.int32(needed)),
+                jnp.asarray(np.int32(seg.doc_base)), k_tile=k_tile,
+                cap=int(cap))
+            vals.append(v)
+            ids.append(g)
+            truncs.append(t)
+        truncated = sum(int(t) for t in truncs)
+        dev = self.delta_dev
+        dv, dg = _delta_conjunctive(
+            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
+            jnp.asarray(tids[0].astype(np.int32)), idf_w[0],
+            jnp.asarray(np.int32(needed)),
+            jnp.asarray(np.int32(self.delta_doc_base)), k_tile=k_tile)
+        vals.append(np.asarray(dv))
+        ids.append(np.asarray(dg))
+        mv, mi = merge_topk_candidates_host(vals, ids, k)
+        hit = np.isfinite(mv)
+        result = QueryResult(
+            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
+            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
+        return result, {"truncated_terms": truncated}
+
+    # -- oracle support -----------------------------------------------------
+
+    def _owner(self, d: int):
+        """Segment position owning global doc id d (None = the delta)."""
+        if d >= self.delta_doc_base:
+            return None
+        bases = [s.doc_base for s in self.segments]
+        i = bisect.bisect_right(bases, d) - 1
+        seg = self.segments[i]
+        assert seg.doc_base <= d < seg.doc_base + seg.doc_span
+        return i
+
+    def export_live_corpus(self):
+        """The equivalent live corpus AT THIS EPOCH over the pinned
+        vocabulary, plus the ascending global ids of its docs — exactly
+        what a parity oracle should ``bulk_build`` against this view."""
+        live_ids = np.flatnonzero(self.live)
+        doc_term_ids, doc_counts = [], []
+        for d in live_ids:
+            o = self._owner(int(d))
+            if o is None:
+                local = int(d) - self.delta_doc_base
+                if local >= self.delta_n_docs:
+                    t = np.zeros(0, np.int64)
+                    tf = np.zeros(0, np.float64)
+                else:
+                    a, b = (self.delta_doc_offsets[local],
+                            self.delta_doc_offsets[local + 1])
+                    t = self.delta_terms[a:b]
+                    tf = self.delta_tfs[a:b]
+            else:
+                seg = self.segments[o]
+                local = int(d) - seg.doc_base
+                a, b = seg.doc_offsets[local], seg.doc_offsets[local + 1]
+                t = seg.terms[a:b]
+                tf = seg.tfs[a:b]
+            doc_term_ids.append(np.asarray(t, np.int64))
+            doc_counts.append(np.asarray(tf, np.float64).astype(np.int64))
+        tc = TokenizedCorpus(doc_term_ids=doc_term_ids,
+                             doc_counts=doc_counts,
+                             term_hashes=self.hashes.copy(),
+                             num_docs=len(live_ids))
+        return tc, live_ids
+
+
+# ---------------------------------------------------------------------------
 # the live index
 # ---------------------------------------------------------------------------
 
@@ -301,7 +522,9 @@ class SegmentedIndex:
                  delta_doc_capacity: int = 512,
                  delta_posting_capacity: int | None = None,
                  policy: compaction.TieredPolicy | None = None,
-                 rank_seed: int = 7):
+                 rank_seed: int = 7, seal_layout: str = "hor"):
+        if seal_layout not in ("hor", "packed"):
+            raise ValueError(f"unknown seal layout: {seal_layout!r}")
         self._hashes = (np.asarray(term_hashes, np.uint32).copy()
                         if term_hashes is not None
                         else np.zeros(0, np.uint32))
@@ -320,6 +543,9 @@ class SegmentedIndex:
         self._delta_dirty = True
         self._policy = policy or compaction.TieredPolicy()
         self._rng = np.random.default_rng(rank_seed)
+        self._seal_layout = seal_layout
+        self._epoch = 0
+        self._view: LiveView | None = None
         self.stats = LiveIndexStats()
 
     # -- introspection ------------------------------------------------------
@@ -359,6 +585,51 @@ class SegmentedIndex:
     def delta_postings(self) -> int:
         return self._delta.n_postings
 
+    @property
+    def policy(self) -> compaction.TieredPolicy:
+        return self._policy
+
+    @property
+    def delta_fill(self) -> float:
+        """Fill fraction of the mutable delta (docs or postings,
+        whichever is closer to capacity) — the maintenance thread's
+        seal trigger."""
+        dl = self._delta
+        return max(dl.n_docs / dl.doc_cap, dl.n_postings / dl.post_cap)
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic counter of query-visible state changes.  The
+        serving tier keys result caches on it: a cached (query, k,
+        epoch) entry is valid iff the epoch still matches."""
+        return self._epoch
+
+    def _bump_epoch(self) -> None:
+        self._epoch += 1
+
+    def view(self) -> LiveView:
+        """The epoch-pinned immutable view of the current state (cached
+        per epoch).  Must be called serially with mutators — the serving
+        tier holds its write lock for the pin, never for the query."""
+        if self._view is not None and self._view.epoch == self._epoch:
+            return self._view
+        dl = self._delta
+        n_p = dl.n_postings
+        self._view = LiveView(
+            epoch=self._epoch,
+            segments=tuple(dataclasses.replace(s) for s in self._segments),
+            delta_dev=self._delta_device(),
+            delta_terms=dl.terms[:n_p].copy(),
+            delta_tfs=dl.tfs[:n_p].copy(),
+            delta_doc_of=dl.doc_of[:n_p].copy(),
+            delta_doc_offsets=dl.doc_offsets[:dl.n_docs + 1].copy(),
+            delta_doc_base=dl.doc_base, delta_n_docs=dl.n_docs,
+            hashes=self._hashes, hash_sorted=self._hash_sorted,
+            hash_order=self._hash_order, df=self._df.copy(),
+            live=self._live.copy(), live_docs=self._live_docs,
+            num_docs=self.num_docs)
+        return self._view
+
     # -- vocabulary ---------------------------------------------------------
 
     def _rebuild_lookup(self) -> None:
@@ -366,16 +637,9 @@ class SegmentedIndex:
                                       kind="stable").astype(np.int64)
         self._hash_sorted = self._hashes[self._hash_order]
 
-    def _lookup_np(self, qh: np.ndarray) -> np.ndarray:
+    def lookup_np(self, qh: np.ndarray) -> np.ndarray:
         """u32[...] hashes -> unified term ids (i64, -1 absent/empty)."""
-        w = len(self._hashes)
-        if w == 0:
-            return np.full(qh.shape, -1, np.int64)
-        flat = qh.reshape(-1)
-        pos = np.searchsorted(self._hash_sorted, flat)
-        posc = np.minimum(pos, w - 1)
-        hit = (self._hash_sorted[posc] == flat) & (flat != 0)
-        return np.where(hit, self._hash_order[posc], -1).reshape(qh.shape)
+        return _lookup_sorted(self._hash_sorted, self._hash_order, qh)
 
     # -- mutation: add ------------------------------------------------------
 
@@ -452,6 +716,7 @@ class SegmentedIndex:
         self._delta_dirty = True
         self._refresh_norms()
         self._maybe_compact()
+        self._bump_epoch()
 
     def _direct_seal(self, terms: np.ndarray, tfs: np.ndarray) -> None:
         """Seal one oversized doc straight to a segment, bypassing the
@@ -467,6 +732,7 @@ class SegmentedIndex:
         self._delta = _Delta(self._delta.doc_cap, self._delta.post_cap,
                              base + 1)
         self._delta_dirty = True
+        self._bump_epoch()
 
     # -- mutation: delete ---------------------------------------------------
 
@@ -493,6 +759,7 @@ class SegmentedIndex:
         self._live_docs -= int(ids.size)
         self.stats.deletes += int(ids.size)
         self._refresh_norms()
+        self._bump_epoch()
 
     def _owner(self, d: int):
         """Segment index owning global doc id d, or None for the delta."""
@@ -520,11 +787,16 @@ class SegmentedIndex:
 
     # -- seal / compact -----------------------------------------------------
 
-    def seal(self) -> None:
-        """Flush the delta into a sealed segment (no-op when empty)."""
-        self._seal_delta()
+    def seal(self, layout: str | None = None) -> None:
+        """Flush the delta into a sealed segment (no-op when empty).
 
-    def _seal_delta(self) -> None:
+        ``layout`` overrides the index's ``seal_layout`` for this seal:
+        ``"hor"`` emits 128-lane HOR blocks, ``"packed"`` emits
+        delta+bit-packed blocks (same size-class quantization, same
+        fused-engine entry points, parity-tested against HOR)."""
+        self._seal_delta(layout=layout)
+
+    def _seal_delta(self, layout: str | None = None) -> None:
         dl = self._delta
         if dl.n_docs == 0:
             return
@@ -536,19 +808,24 @@ class SegmentedIndex:
         if not live.all():
             doc_of, terms, tfs = doc_of[live], terms[live], tfs[live]
         seg = self._build_segment(dl.doc_base, dl.n_docs, doc_of, terms,
-                                  tfs)
+                                  tfs, layout=layout)
         self._segments.append(seg)
         self.stats.postings_sealed += n_p
         self.stats.seals += 1
         self._delta = _Delta(dl.doc_cap, dl.post_cap,
                              dl.doc_base + dl.n_docs)
         self._delta_dirty = True
+        self._bump_epoch()
 
     def _build_segment(self, base: int, span: int, doc_of: np.ndarray,
-                       terms: np.ndarray, tfs: np.ndarray) -> Segment:
+                       terms: np.ndarray, tfs: np.ndarray,
+                       layout: str | None = None) -> Segment:
         """Bulk-build one sealed segment over LOCAL doc ids and pad it to
         its size class.  ``doc_of``/``terms``/``tfs`` must be (doc,
         term)-sorted."""
+        layout = layout or self._seal_layout
+        if layout not in ("hor", "packed"):
+            raise ValueError(f"unknown seal layout: {layout!r}")
         w = len(self._hashes)
         d_pad = layouts.size_class(span, base=layouts.ROUTE_TILE)
         order = np.lexsort((doc_of, terms))          # term-major for bulk
@@ -565,17 +842,31 @@ class SegmentedIndex:
             offsets=offsets, doc_ids=doc_of[order].astype(np.int32),
             tfs=tfs[order].astype(np.float32), num_docs=d_pad,
             norm=norm_pad, rank=rank_pad)
-        ix = layouts.build_blocked(host)
-        nb = int(ix.block_docs.shape[0])
-        mpl_q = layouts.size_class(ix.max_posting_len)
-        ix = layouts.pad_blocked_to_class(
-            ix,
-            nb_pad=layouts.size_class(nb),
-            w_pad=layouts.size_class(w, base=256),
-            max_posting_len=mpl_q,
-            max_blocks_per_term=mpl_q // layouts.BLOCK,
-            route_pairs_max=layouts.size_class(ix.route_pairs_max),
-            route_span_max=layouts.size_class(ix.route_span_max, base=8))
+        if layout == "packed":
+            ix = layouts.build_packed_csr(host)
+            ix = layouts.pad_packed_to_class(
+                ix,
+                nb_pad=layouts.size_class(int(ix.packed.shape[0])),
+                w_pad=layouts.size_class(w, base=256),
+                max_posting_len=layouts.size_class(ix.max_posting_len),
+                words_per_block=layouts.size_class(ix.words_per_block,
+                                                   base=8),
+                route_pairs_max=layouts.size_class(ix.route_pairs_max),
+                route_span_max=layouts.size_class(ix.route_span_max,
+                                                  base=8))
+        else:
+            ix = layouts.build_blocked(host)
+            nb = int(ix.block_docs.shape[0])
+            mpl_q = layouts.size_class(ix.max_posting_len)
+            ix = layouts.pad_blocked_to_class(
+                ix,
+                nb_pad=layouts.size_class(nb),
+                w_pad=layouts.size_class(w, base=256),
+                max_posting_len=mpl_q,
+                max_blocks_per_term=mpl_q // layouts.BLOCK,
+                route_pairs_max=layouts.size_class(ix.route_pairs_max),
+                route_span_max=layouts.size_class(ix.route_span_max,
+                                                  base=8))
         doc_offsets = np.zeros(span + 1, np.int64)
         np.cumsum(np.bincount(doc_of.astype(np.int64), minlength=span),
                   out=doc_offsets[1:])
@@ -628,6 +919,7 @@ class SegmentedIndex:
         self._segments[lo:hi] = [seg]
         self.stats.postings_compacted += touched
         self.stats.compactions += 1
+        self._bump_epoch()
         return True
 
     def _maybe_compact(self) -> None:
@@ -705,18 +997,6 @@ class SegmentedIndex:
 
     # -- queries ------------------------------------------------------------
 
-    def _prep(self, qh: np.ndarray):
-        qh = _dedup_np(np.asarray(qh, np.uint32))
-        tids = self._lookup_np(qh)
-        if len(self._df):
-            df = np.where(tids >= 0, self._df[np.maximum(tids, 0)],
-                          0).astype(np.int32)
-        else:
-            df = np.zeros(qh.shape, np.int32)
-        idf_w, qnorm = _query_weights(
-            jnp.asarray(df), jnp.asarray(np.float32(self._live_docs)))
-        return qh, tids, idf_w, qnorm
-
     def topk(self, query_hashes, k: int, *, cap: int | None = None,
              rank_blend: float = 0.0, engine: str = "pallas",
              mode: str = "candidates", backend: str = "pallas",
@@ -729,57 +1009,13 @@ class SegmentedIndex:
         gather oracle) + one static-shape delta evaluation; per-segment
         candidate lists merge on the host with the oracle's tie order.
         ``cap`` defaults to each segment's (quantized) full posting
-        length — the exact-parity setting."""
-        if engine not in ("pallas", "jnp"):
-            raise ValueError(f"unknown engine: {engine!r}")
-        if mode not in ("candidates", "dense"):
-            raise ValueError(f"unknown fused-engine mode: {mode!r}")
-        qh = np.asarray(query_hashes, np.uint32)
-        if qh.ndim != 2:
-            raise ValueError("query_hashes must be [B, T]")
-        qh, tids, idf_w, qnorm = self._prep(qh)
-        qh_dev = jnp.asarray(qh)
-        k_tile = default_k_tile(k)
-        vals, ids, overflows = [], [], []
-        for seg in self._segments:
-            c = int(cap) if cap is not None else seg.index.max_posting_len
-            b = jnp.asarray(np.int32(seg.doc_base))
-            if engine == "jnp":
-                v, g, o = ops.jnp_segment_topk(
-                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
-                    rank_blend=rank_blend)
-            elif mode == "dense":
-                v, g, o = ops.fused_segment_dense_topk(
-                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
-                    max_pairs=seg.index.route_pairs_max,
-                    rank_blend=rank_blend, backend=backend)
-            else:
-                v, g, o = ops.fused_segment_topk(
-                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
-                    max_pairs=seg.index.route_pairs_max,
-                    rank_blend=rank_blend, backend=backend)
-            # keep device arrays until every segment is dispatched —
-            # transferring here would serialize the per-segment launches
-            vals.append(v)
-            ids.append(g)
-            overflows.append(o)
-        dev = self._delta_device()
-        dv, dg = _delta_candidates(
-            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
-            dev["rank"], jnp.asarray(tids.astype(np.int32)), idf_w, qnorm,
-            jnp.asarray(np.int32(self._delta.doc_base)), k_tile=k_tile,
-            rank_blend=rank_blend)
-        vals.append(dv)
-        ids.append(dg)
-        overflow = sum(int(o) for o in overflows)
-        mv, mi = merge_topk_candidates_host(vals, ids, k)
-        hit = np.isfinite(mv)
-        result = QueryResult(
-            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
-            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
-        if return_stats:
-            return result, {"pair_overflow": overflow}
-        return result
+        length — the exact-parity setting.  Evaluates against the
+        current epoch's pinned view (``view()``), which is also what the
+        serving tier queries directly."""
+        return self.view().topk(query_hashes, k, cap=cap,
+                                rank_blend=rank_blend, engine=engine,
+                                mode=mode, backend=backend,
+                                return_stats=return_stats)
 
     def conjunctive(self, query_hashes, k: int, cap: int):
         """AND semantics over the whole live index for ONE query [T].
@@ -789,35 +1025,7 @@ class SegmentedIndex:
         own cap-truncation count; ``stats["truncated_terms"]``
         AGGREGATES across segments — truncation in ANY segment is
         surfaced, not just the last one scored."""
-        qh = _dedup_np(np.asarray(query_hashes, np.uint32).reshape(1, -1))
-        needed = int((qh != 0).sum())
-        qh1, tids, idf_w, _qnorm = self._prep(qh)
-        qh_dev = jnp.asarray(qh1[0])
-        k_tile = default_k_tile(k)
-        vals, ids, truncs = [], [], []
-        for seg in self._segments:
-            v, g, t = ops.jnp_segment_conjunctive(
-                seg.index, qh_dev, idf_w[0], jnp.asarray(np.int32(needed)),
-                jnp.asarray(np.int32(seg.doc_base)), k_tile=k_tile,
-                cap=int(cap))
-            vals.append(v)
-            ids.append(g)
-            truncs.append(t)
-        truncated = sum(int(t) for t in truncs)
-        dev = self._delta_device()
-        dv, dg = _delta_conjunctive(
-            dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
-            jnp.asarray(tids[0].astype(np.int32)), idf_w[0],
-            jnp.asarray(np.int32(needed)),
-            jnp.asarray(np.int32(self._delta.doc_base)), k_tile=k_tile)
-        vals.append(np.asarray(dv))
-        ids.append(np.asarray(dg))
-        mv, mi = merge_topk_candidates_host(vals, ids, k)
-        hit = np.isfinite(mv)
-        result = QueryResult(
-            doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
-            scores=jnp.asarray(np.where(hit, mv, 0.0).astype(np.float32)))
-        return result, {"truncated_terms": truncated}
+        return self.view().conjunctive(query_hashes, k, cap)
 
     # -- import / export ----------------------------------------------------
 
@@ -847,6 +1055,7 @@ class SegmentedIndex:
         si._delta = _Delta(si._delta.doc_cap, si._delta.post_cap,
                            host.num_docs)
         si._refresh_norms()
+        si._bump_epoch()
         return si
 
     def _live_triples(self):
@@ -894,26 +1103,4 @@ class SegmentedIndex:
         the ascending global ids of its docs — exactly what the parity
         oracle should ``bulk_build`` (compact renumbering preserves doc
         order, so tie-breaking maps 1:1)."""
-        live_ids = np.flatnonzero(self._live)
-        doc_term_ids, doc_counts = [], []
-        for d in live_ids:
-            t = self._doc_terms(int(d))
-            s, tf = np.asarray(t, np.int64), None
-            o = self._owner(int(d))
-            if o is None:
-                dl = self._delta
-                local = int(d) - dl.doc_base
-                a, b = dl.doc_offsets[local], dl.doc_offsets[local + 1]
-                tf = dl.tfs[a:b]
-            else:
-                seg = self._segments[o]
-                local = int(d) - seg.doc_base
-                a, b = seg.doc_offsets[local], seg.doc_offsets[local + 1]
-                tf = seg.tfs[a:b]
-            doc_term_ids.append(s)
-            doc_counts.append(np.asarray(tf, np.float64).astype(np.int64))
-        tc = TokenizedCorpus(doc_term_ids=doc_term_ids,
-                             doc_counts=doc_counts,
-                             term_hashes=self._hashes.copy(),
-                             num_docs=len(live_ids))
-        return tc, live_ids
+        return self.view().export_live_corpus()

@@ -499,14 +499,37 @@ class SegmentStackShards:
 
 
 def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
-    """Distribute a SegmentedIndex's sealed stack across ``n_shards``
-    (round-robin by stack position).  The delta must be sealed first —
-    the serving tier replicates immutable runs only."""
-    if live_index.delta_postings or live_index._delta.n_docs:
-        raise ValueError("seal() the delta before sharding the stack")
-    segs = live_index.segments()
+    """Distribute a SegmentedIndex's sealed stack across ``n_shards``.
+    The delta must be sealed first — the serving tier replicates
+    immutable runs only.
+
+    Also accepts an epoch-pinned ``LiveView`` (``SegmentedIndex.view()``
+    / ``serve.snapshot.pin``): the sharded serving tier then snapshots a
+    CONSISTENT epoch — build the stacks from a pin while ingest keeps
+    landing, and the sharded scorer answers exactly as the single-node
+    pinned view does, no quiesce needed.  Sealed segments must be HOR
+    blocks (``seal_layout="hor"``); packed stacks are a follow-up."""
+    from repro.core.live_index import LiveView
+    if isinstance(live_index, LiveView):
+        if live_index.delta_n_docs:
+            raise ValueError("pin a view with a sealed delta before "
+                             "sharding the stack")
+        segs = list(live_index.segments)
+        vocab_hashes = live_index.hashes
+        vocab_df = np.asarray(live_index.df)
+        live_docs = live_index.live_docs
+    else:
+        if live_index.delta_postings or live_index._delta.n_docs:
+            raise ValueError("seal() the delta before sharding the stack")
+        segs = live_index.segments()
+        vocab_hashes = live_index.term_hashes
+        vocab_df = np.asarray(live_index._df)
+        live_docs = live_index.live_doc_count
     if not segs:
         raise ValueError("no sealed segments to shard")
+    if not all(isinstance(s.index, layouts.BlockedIndex) for s in segs):
+        raise ValueError("segment-stack sharding supports HOR sealed "
+                         "segments only (seal_layout='hor')")
     # contiguous runs per shard (NOT round-robin): the all-gather
     # candidate merge concatenates shard 0's candidates first, so shards
     # must cover ascending doc-id ranges for exact score ties to break
@@ -542,13 +565,13 @@ def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
             tc[s, g, :nb] = np.asarray(ix.tile_count)
             norm[s, g, :d] = np.asarray(ix.docs.norm)
             base[s, g] = seg.doc_base
-    order = np.argsort(live_index.term_hashes, kind="stable")
+    order = np.argsort(vocab_hashes, kind="stable")
     return SegmentStackShards(
         sorted_hash=sh, block_offsets=offs, block_docs=bd, block_tfs=bt,
         tile_first=tf, tile_count=tc, norm=norm, doc_base=base,
-        vocab_hash=live_index.term_hashes[order].astype(np.uint32),
-        vocab_df=np.asarray(live_index._df)[order].astype(np.int32),
-        n_shards=S, n_slots=G, live_docs=live_index.live_doc_count,
+        vocab_hash=vocab_hashes[order].astype(np.uint32),
+        vocab_df=vocab_df[order].astype(np.int32),
+        n_shards=S, n_slots=G, live_docs=live_docs,
         d_pad=dc, tile=segs[0].index.route_tile,
         max_blocks_per_term=max(s.index.max_blocks_per_term for s in segs),
         route_span_max=max(s.index.route_span_max for s in segs),

@@ -355,12 +355,19 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
 
 @functools.partial(jax.jit, static_argnames=(
     "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
-def fused_segment_topk(index: BlockedIndex, query_hashes: Array,
+def fused_segment_topk(index: BlockedIndex | PackedCsrIndex,
+                       query_hashes: Array,
                        idf_w: Array, doc_base: Array, *, k_tile: int,
                        cap: int, max_pairs: int, rank_blend: float = 0.0,
                        tile: int = TILE, backend: Backend = "pallas"):
     """Candidate engine over one segment: fused decode-and-score kernel
-    with in-kernel per-tile top-k (tombstones ride in as norm == 0)."""
+    with in-kernel per-tile top-k (tombstones ride in as norm == 0).
+
+    Accepts either sealed-segment layout — HOR blocks (``seal_layout=
+    "hor"``) or delta+bit-packed blocks (``"packed"``); the pytree
+    STRUCTURE is part of the jit key, so the two layouts compile
+    separately but segments of one layout still share warm size-class
+    entries."""
     present = query_hashes != 0
     tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     vals, ids, overflow = fused_batched_topk(
@@ -372,7 +379,8 @@ def fused_segment_topk(index: BlockedIndex, query_hashes: Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
-def fused_segment_dense_topk(index: BlockedIndex, query_hashes: Array,
+def fused_segment_dense_topk(index: BlockedIndex | PackedCsrIndex,
+                             query_hashes: Array,
                              idf_w: Array, doc_base: Array, *, k_tile: int,
                              cap: int, max_pairs: int,
                              rank_blend: float = 0.0, tile: int = TILE,

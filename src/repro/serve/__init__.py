@@ -1,0 +1,33 @@
+"""Online query-serving subsystem over the segmented live index.
+
+The paper stops at query evaluation; ODYS (PAPERS.md) shows what sits
+between an index and real traffic: a serving tier.  This package is
+that tier for ``core/live_index.SegmentedIndex``:
+
+  server.py      QueryServer — admission queue + micro-batching into
+                 the static (Q_pad, n_terms_budget) shapes the fused
+                 kernels already compile for, per-request latency
+                 accounting
+  snapshot.py    epoch-pinned immutable views (queries score a
+                 consistent index while writes land) + host
+                 serialize/restore for failover
+  cache.py       query-result cache keyed (query, k, epoch) —
+                 invalidated by epoch advance, hit rate in metrics
+  maintenance.py background thread sealing full deltas and running
+                 tiered compaction between batches against pinned
+                 epochs
+  metrics.py     latency percentiles (p50/p99), QPS, batch fill
+"""
+from repro.serve.cache import ResultCache
+from repro.serve.maintenance import IndexMaintenance
+from repro.serve.metrics import LatencyWindow, ServerMetrics, percentiles
+from repro.serve.server import QueryServer, ServerConfig
+from repro.serve.snapshot import (load_segmented, pin, restore_segmented,
+                                  save_segmented, serialize_segmented)
+
+__all__ = [
+    "QueryServer", "ServerConfig", "ResultCache", "IndexMaintenance",
+    "LatencyWindow", "ServerMetrics", "percentiles", "pin",
+    "serialize_segmented", "restore_segmented", "save_segmented",
+    "load_segmented",
+]

@@ -1,0 +1,73 @@
+"""Query-result cache keyed on (query signature, k, epoch).
+
+The epoch in the key IS the invalidation protocol: any query-visible
+mutation of the live index advances its epoch, so entries written at
+older epochs can never satisfy a lookup at the current one — stale
+results are unreachable by construction, not by a scan-and-evict pass.
+``purge_below`` exists only to reclaim their memory eagerly; the LRU
+bound would get there anyway.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+class ResultCache:
+    """Bounded LRU of (doc_ids, scores) responses.
+
+    Keys are ``(tuple(padded query row), k, epoch)``; values are
+    defensive copies, so a cached response is immutable no matter what
+    the caller does with the arrays it gets back.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = int(capacity)
+        self._store: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @staticmethod
+    def make_key(query_row: np.ndarray, k: int, epoch: int) -> tuple:
+        return (tuple(np.asarray(query_row, np.uint32).tolist()),
+                int(k), int(epoch))
+
+    def get(self, key: tuple):
+        """(doc_ids, scores) copies, or None.  Counts the hit/miss."""
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return hit[0].copy(), hit[1].copy()
+
+    def put(self, key: tuple, doc_ids: np.ndarray,
+            scores: np.ndarray) -> None:
+        self._store[key] = (np.asarray(doc_ids).copy(),
+                            np.asarray(scores).copy())
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def purge_below(self, epoch: int) -> int:
+        """Drop entries pinned to epochs older than ``epoch`` (they are
+        already unreachable — keys carry their epoch); returns the
+        number reclaimed."""
+        stale = [k for k in self._store if k[2] < epoch]
+        for k in stale:
+            del self._store[k]
+        return len(stale)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_counters(self) -> None:
+        self.hits = 0
+        self.misses = 0

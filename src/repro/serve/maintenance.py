@@ -1,0 +1,108 @@
+"""Background index maintenance: seal full deltas, tiered compaction.
+
+PR 3 made ``compact()`` safe to call between query batches but left it
+synchronous on the caller.  This module is the background half: a
+thread that watches the delta's fill fraction and the compaction
+policy's trigger, and runs seal/compact UNDER THE WRITE LOCK while the
+query path keeps serving pinned epochs (the QueryServer probes that
+lock non-blockingly — a batch never waits on maintenance, it just
+scores one epoch staler).
+
+Cheap-check-then-lock: both triggers are read without the lock first
+(``delta_fill`` is two integer divides, ``TieredPolicy.due`` a pure
+function of posting counts), so an idle index costs queries no lock
+contention at all; the trigger is re-checked under the lock before
+acting because a writer may have raced in between.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from repro.core.live_index import SegmentedIndex
+
+
+@dataclasses.dataclass
+class MaintenanceStats:
+    runs: int = 0            # run_once invocations that checked triggers
+    seals: int = 0
+    compactions: int = 0
+
+
+class IndexMaintenance:
+    """Seal-and-compact runner, callable inline or as a thread.
+
+    ``run_once`` is the whole policy (deterministic, what the tests
+    drive); ``start``/``stop`` wrap it in a polling thread for real
+    serving loops.  ``seal_fill`` is the delta fill fraction that
+    triggers a seal — 1.0 means "only when ingest would have sealed
+    anyway", lower values trade delta scan width for seal frequency.
+    ``max_compactions_per_run`` bounds lock hold time per run; the
+    policy re-fires next run if more merges are due.
+    """
+
+    def __init__(self, index: SegmentedIndex, lock: threading.RLock, *,
+                 seal_fill: float = 0.75, interval_s: float = 0.002,
+                 max_compactions_per_run: int = 1,
+                 seal_layout: str | None = None):
+        self.index = index
+        self.lock = lock
+        self.seal_fill = float(seal_fill)
+        self.interval_s = float(interval_s)
+        self.max_compactions_per_run = int(max_compactions_per_run)
+        self.seal_layout = seal_layout
+        self.stats = MaintenanceStats()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _due(self) -> bool:
+        ix = self.index
+        return (ix.delta_fill >= self.seal_fill
+                or ix.policy.due(ix.segment_postings()))
+
+    def run_once(self) -> dict:
+        """One maintenance step: seal if the delta is full enough,
+        then up to ``max_compactions_per_run`` policy-picked merges.
+        Returns what happened (for tests and telemetry)."""
+        self.stats.runs += 1
+        did = {"sealed": False, "compacted": 0}
+        if not self._due():                 # unlocked cheap check
+            return did
+        with self.lock:
+            ix = self.index
+            if ix.delta_fill >= self.seal_fill and ix._delta.n_docs > 0:
+                ix.seal(layout=self.seal_layout)
+                self.stats.seals += 1
+                did["sealed"] = True
+            for _ in range(self.max_compactions_per_run):
+                if not ix.policy.due(ix.segment_postings()):
+                    break
+                if not ix.compact():
+                    break
+                self.stats.compactions += 1
+                did["compacted"] += 1
+        return did
+
+    # -- thread -----------------------------------------------------------
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self.run_once()
+                self._stop.wait(timeout=self.interval_s)
+
+        self._thread = threading.Thread(target=loop,
+                                        name="index-maintenance",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=30.0)
+        self._thread = None

@@ -1,0 +1,122 @@
+"""Serving metrics: latency percentiles, throughput, batch fill.
+
+One percentile implementation for the whole repo — the serving tier's
+in-process metrics AND the benchmark reporting (``benchmarks/common``)
+both call :func:`percentiles`, so a p99 printed by ``churn.py`` and a
+p99 served from ``QueryServer.metrics`` can never disagree on
+definition (linear-interpolated, numpy semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+def percentiles(samples, qs=(50, 99)) -> dict:
+    """``{"p50": ..., "p99": ...}`` over ``samples`` (any iterable of
+    numbers); empty input yields zeros rather than NaNs so callers can
+    format unconditionally."""
+    a = np.asarray(list(samples), np.float64)
+    if a.size == 0:
+        return {f"p{int(q)}": 0.0 for q in qs}
+    return {f"p{int(q)}": float(np.percentile(a, q)) for q in qs}
+
+
+class LatencyWindow:
+    """Per-request latency samples over one serving window.
+
+    ``record`` is called at response time with the request's measured
+    latency; QPS is completions over the wall span from the first to
+    the last response in the window.
+    """
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self._us: list[float] = []
+        self._first: float | None = None
+        self._last: float | None = None
+
+    def record(self, latency_us: float) -> None:
+        now = time.perf_counter()
+        if self._first is None:
+            self._first = now
+        self._last = now
+        self._us.append(float(latency_us))
+
+    @property
+    def count(self) -> int:
+        return len(self._us)
+
+    def samples_us(self) -> np.ndarray:
+        return np.asarray(self._us, np.float64)
+
+    def qps(self) -> float:
+        if self.count < 2 or self._last is None or self._first is None:
+            return 0.0
+        span = self._last - self._first
+        if span <= 0:
+            return 0.0
+        # completions after the first mark the span's throughput
+        return (self.count - 1) / span
+
+    def summary(self) -> dict:
+        p = percentiles(self._us, (50, 99))
+        mean = float(np.mean(self._us)) if self._us else 0.0
+        return {"count": self.count, "p50_us": p["p50"],
+                "p99_us": p["p99"], "mean_us": mean, "qps": self.qps()}
+
+
+@dataclasses.dataclass
+class ServerMetrics:
+    """QueryServer counters + the latency window.
+
+    ``padded_slots`` counts batch slots filled with padding (a measure
+    of micro-batch efficiency: fill = batched_queries /
+    (batched_queries + padded_slots)); cache hits bypass batching
+    entirely and appear only in ``requests`` and the cache's own
+    counters.
+    """
+    requests: int = 0
+    batches: int = 0
+    batched_queries: int = 0      # requests that went through a kernel
+    padded_slots: int = 0
+    epochs_served: int = 0        # distinct epochs observed at batch time
+    latency: LatencyWindow = dataclasses.field(default_factory=LatencyWindow)
+    _last_epoch: int | None = dataclasses.field(default=None, repr=False)
+
+    def observe_epoch(self, epoch: int) -> None:
+        if epoch != self._last_epoch:
+            self.epochs_served += 1
+            self._last_epoch = epoch
+
+    def record_response(self, latency_us: float) -> None:
+        self.requests += 1
+        self.latency.record(latency_us)
+
+    def batch_fill(self) -> float:
+        total = self.batched_queries + self.padded_slots
+        return self.batched_queries / total if total else 0.0
+
+    def reset(self) -> None:
+        self.requests = 0
+        self.batches = 0
+        self.batched_queries = 0
+        self.padded_slots = 0
+        self.epochs_served = 0
+        self._last_epoch = None
+        self.latency.reset()
+
+    def summary(self, cache=None) -> dict:
+        out = {"requests": self.requests, "batches": self.batches,
+               "batch_fill": self.batch_fill(),
+               "epochs_served": self.epochs_served}
+        out.update(self.latency.summary())
+        if cache is not None:
+            out["cache_hit_rate"] = cache.hit_rate
+            out["cache_hits"] = cache.hits
+            out["cache_misses"] = cache.misses
+        return out

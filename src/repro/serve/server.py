@@ -1,0 +1,280 @@
+"""QueryServer: admission queue + micro-batched fused evaluation.
+
+Single queries arrive one at a time; the fused engines want batches of
+a STATIC shape (every distinct (B, T) is an XLA compilation).  The
+server bridges the two: requests admission-queue, and each pump drains
+up to ``batch_size`` of them into one ``(batch_size, n_terms_budget)``
+pad-and-mask evaluation — the exact shapes the per-segment kernels are
+already warm for, so steady-state serving adds ZERO jit cache entries
+(asserted the same way as the PR-3 churn test).
+
+Consistency: each micro-batch pins the index's current epoch view
+(``LiveView``) and scores every request in the batch against it — a
+response is bit-identical to the jnp oracle evaluated over the live
+corpus AT THAT EPOCH, regardless of what ingest or background
+maintenance does meanwhile.  The pin itself takes the write lock
+NON-blockingly: if a writer holds it (mid-seal, mid-compact), the batch
+serves from the previous pinned epoch instead of waiting — churn never
+blocks the query path, it only delays epoch freshness by one
+maintenance step.
+
+Caching: results key on (padded query row, k, epoch).  An epoch advance
+makes every older entry unreachable (see serve/cache.py), so hits are
+always consistent with the epoch they will be reported against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.live_index import LiveView, SegmentedIndex
+from repro.serve.cache import ResultCache
+from repro.serve.metrics import ServerMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Static serving shapes + engine selection.
+
+    ``batch_size`` and ``n_terms_budget`` ARE the compiled shapes: every
+    micro-batch is padded to exactly (batch_size, n_terms_budget), and
+    ``k`` fixes the candidate width — together with the live index's
+    size classes that is the whole jit signature space of the serving
+    path.  Queries wider than ``n_terms_budget`` are rejected at
+    admission (never silently truncated).
+    """
+    batch_size: int = 8
+    n_terms_budget: int = 8
+    k: int = 10
+    cap: int | None = None
+    rank_blend: float = 0.0
+    engine: str = "pallas"
+    mode: str = "candidates"
+    backend: str = "pallas"
+    cache_capacity: int = 4096
+
+
+class Response:
+    """One served result: top-k ids/scores + serving metadata."""
+    __slots__ = ("doc_ids", "scores", "epoch", "latency_us", "cached")
+
+    def __init__(self, doc_ids, scores, epoch, latency_us, cached):
+        self.doc_ids = doc_ids
+        self.scores = scores
+        self.epoch = epoch
+        self.latency_us = latency_us
+        self.cached = cached
+
+
+class Ticket:
+    """Admission handle: resolves to a Response when its batch lands."""
+
+    def __init__(self, row: np.ndarray):
+        self.row = row
+        self.t_submit = time.perf_counter()
+        self.response: Response | None = None
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> Response:
+        if not self._done.wait(timeout):
+            raise TimeoutError("query not served within timeout")
+        return self.response
+
+
+class QueryServer:
+    """Micro-batched server over a SegmentedIndex.
+
+    Drive it either synchronously (``submit`` + ``pump`` from one
+    thread — deterministic, what the parity tests do) or with the
+    worker thread (``start``/``stop``) while a ``serve.maintenance``
+    thread churns the index in the background.  Writers (ingest,
+    maintenance) must hold ``index_lock``; the server takes it only to
+    pin a fresh view, and falls back to the previous pin when a writer
+    has it.
+    """
+
+    def __init__(self, index: SegmentedIndex,
+                 config: ServerConfig | None = None,
+                 lock: threading.RLock | None = None):
+        self.index = index
+        self.config = config or ServerConfig()
+        self.index_lock = lock if lock is not None else threading.RLock()
+        self.cache = ResultCache(self.config.cache_capacity)
+        self.metrics = ServerMetrics()
+        self._queue: deque[Ticket] = deque()
+        self._qlock = threading.Lock()
+        self._work = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        with self.index_lock:
+            self._pinned: LiveView = index.view()
+        self._purged_epoch = self._pinned.epoch
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, query_hashes) -> Ticket:
+        """Enqueue one query (u32 term-hash vector, <= n_terms_budget
+        wide; it is zero-padded to the budget).  Returns a Ticket."""
+        qh = np.atleast_1d(np.asarray(query_hashes, np.uint32))
+        if qh.ndim != 1:
+            raise ValueError(
+                f"submit takes ONE query (a 1-D hash vector), got shape "
+                f"{qh.shape} — submit batch rows individually; the server "
+                "does the batching")
+        t = self.config.n_terms_budget
+        if qh.shape[0] > t:
+            raise ValueError(
+                f"query has {qh.shape[0]} term slots > n_terms_budget={t} "
+                "(widen the budget; truncation would drop terms silently)")
+        row = np.zeros(t, np.uint32)
+        row[:qh.shape[0]] = qh
+        ticket = Ticket(row)
+        with self._qlock:
+            self._queue.append(ticket)
+        self._work.set()
+        return ticket
+
+    def query(self, query_hashes, timeout: float = 60.0) -> Response:
+        """Synchronous convenience: submit, then either wait on the
+        worker thread or pump inline until served."""
+        ticket = self.submit(query_hashes)
+        if self._thread is None:
+            while not ticket.done():
+                if self.pump() == 0 and not ticket.done():
+                    raise RuntimeError("queue drained without serving "
+                                       "the submitted ticket")
+        return ticket.result(timeout)
+
+    @property
+    def pending(self) -> int:
+        with self._qlock:
+            return len(self._queue)
+
+    # -- view pinning ---------------------------------------------------
+
+    def refresh_view(self) -> LiveView:
+        """Pin the freshest view available WITHOUT waiting on writers:
+        non-blocking lock probe, fall back to the previous pinned epoch
+        when a writer is mid-mutation."""
+        if self.index_lock.acquire(blocking=False):
+            try:
+                self._pinned = self.index.view()
+            finally:
+                self.index_lock.release()
+        return self._pinned
+
+    @property
+    def pinned_epoch(self) -> int:
+        return self._pinned.epoch
+
+    # -- the micro-batch loop -------------------------------------------
+
+    def pump(self, max_batches: int = 1) -> int:
+        """Serve up to ``max_batches`` micro-batches from the queue;
+        returns the number of requests answered."""
+        served = 0
+        for _ in range(max_batches):
+            batch = self._take_batch()
+            if not batch:
+                break
+            self._serve_batch(batch)
+            served += len(batch)
+        return served
+
+    def _take_batch(self) -> list[Ticket]:
+        with self._qlock:
+            n = min(len(self._queue), self.config.batch_size)
+            batch = [self._queue.popleft() for _ in range(n)]
+            if not self._queue:
+                self._work.clear()
+        return batch
+
+    def _serve_batch(self, batch: list[Ticket]) -> None:
+        cfg = self.config
+        view = self.refresh_view()
+        epoch = view.epoch
+        self.metrics.observe_epoch(epoch)
+        if epoch != self._purged_epoch:
+            # stale-epoch entries are already unreachable (keys carry
+            # their epoch); reclaim them once per advance, not per batch
+            self.cache.purge_below(epoch)
+            self._purged_epoch = epoch
+        pending: list[tuple[Ticket, tuple]] = []
+        for ticket in batch:
+            key = self.cache.make_key(ticket.row, cfg.k, epoch)
+            hit = self.cache.get(key)
+            if hit is not None:
+                self._respond(ticket, hit[0], hit[1], epoch, cached=True)
+            else:
+                pending.append((ticket, key))
+        if pending:
+            qb = np.zeros((cfg.batch_size, cfg.n_terms_budget), np.uint32)
+            for i, (ticket, _) in enumerate(pending):
+                qb[i] = ticket.row
+            result = view.topk(qb, cfg.k, cap=cfg.cap,
+                               rank_blend=cfg.rank_blend, engine=cfg.engine,
+                               mode=cfg.mode, backend=cfg.backend)
+            ids = np.asarray(result.doc_ids)
+            scores = np.asarray(result.scores)
+            for i, (ticket, key) in enumerate(pending):
+                self.cache.put(key, ids[i], scores[i])
+                self._respond(ticket, ids[i].copy(), scores[i].copy(),
+                              epoch, cached=False)
+            self.metrics.batches += 1
+            self.metrics.batched_queries += len(pending)
+            self.metrics.padded_slots += cfg.batch_size - len(pending)
+
+    def _respond(self, ticket: Ticket, doc_ids, scores, epoch: int,
+                 cached: bool) -> None:
+        latency_us = (time.perf_counter() - ticket.t_submit) * 1e6
+        ticket.response = Response(doc_ids, scores, epoch, latency_us,
+                                   cached)
+        self.metrics.record_response(latency_us)
+        ticket._done.set()
+
+    # -- warmup ---------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile the serving path's static shapes: one full-width
+        batch of empty queries through the current view (shapes do not
+        depend on query content).  Call again after the index mints a
+        NEW size class if strict zero-compile serving matters; warm
+        classes stay warm."""
+        view = self.refresh_view()
+        cfg = self.config
+        qb = np.zeros((cfg.batch_size, cfg.n_terms_budget), np.uint32)
+        view.topk(qb, cfg.k, cap=cfg.cap, rank_blend=cfg.rank_blend,
+                  engine=cfg.engine, mode=cfg.mode, backend=cfg.backend)
+
+    # -- worker thread ---------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the worker thread (idempotent)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.pump(max_batches=4) == 0:
+                    self._work.wait(timeout=0.005)
+            self.pump(max_batches=1_000_000)   # drain on shutdown
+
+        self._thread = threading.Thread(target=loop, name="query-server",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._work.set()
+        self._thread.join(timeout=30.0)
+        self._thread = None

@@ -1,0 +1,151 @@
+"""Epoch-pinned snapshots + host serialize/restore of a SegmentedIndex.
+
+Two consistency mechanisms, two lifetimes:
+
+  * ``pin`` — an in-process, zero-copy-where-possible ``LiveView``
+    (core/live_index.py): queries score a consistent index at one epoch
+    while writes land.  This is what the QueryServer batches against.
+
+  * ``serialize_segmented`` / ``restore_segmented`` — a host-side flat
+    ``{name: ndarray}`` state (savez-compatible) holding the canonical
+    postings, global scoring state, delta tail, policy, and rng state.
+    Restore rebuilds every sealed segment through the SAME bulk build +
+    size-class padding path as live sealing, so a restored index
+    answers queries bit-identically to the one that was saved (the
+    PR-3 failover follow-up), and — because the rank rng state rides
+    along — keeps answering identically under identical future
+    mutation schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import compaction
+from repro.core.live_index import (LiveIndexStats, LiveView, SegmentedIndex,
+                                   _Delta)
+
+_FORMAT_VERSION = 1
+
+
+def pin(index: SegmentedIndex) -> LiveView:
+    """The current epoch's immutable view (see ``LiveView``).  Callers
+    running writers concurrently must hold their write lock for this
+    call — the serving tier does (and only for the pin, never the
+    query)."""
+    return index.view()
+
+
+def serialize_segmented(index: SegmentedIndex, lock=None) -> dict:
+    """Flat ``{name: np.ndarray}`` snapshot of the full index state.
+
+    Layout: a JSON manifest (uint8 bytes under ``"meta"``) for scalars
+    and per-segment shapes, plus one array per global table and per
+    segment postings column.  Everything needed to rebuild — vocabulary,
+    live df, live mask, ranks, norms, per-segment canonical triples,
+    the delta tail, compaction policy, and the rank rng state.
+
+    The state is gathered in several passes, so like ``view()`` this
+    must run serially with writers: pass the serving tier's write lock
+    as ``lock`` (held for the whole gather), or otherwise guarantee no
+    ingest/maintenance runs concurrently — a torn snapshot would
+    restore to a corrupt index.
+    """
+    if lock is not None:
+        with lock:
+            return serialize_segmented(index, lock=None)
+    dl = index._delta
+    n_p = dl.n_postings
+    meta = {
+        "version": _FORMAT_VERSION,
+        "live_docs": int(index._live_docs),
+        "epoch": int(index._epoch),
+        "seal_layout": index._seal_layout,
+        "delta": {"doc_cap": dl.doc_cap, "post_cap": dl.post_cap,
+                  "doc_base": dl.doc_base, "n_docs": dl.n_docs},
+        "policy": {"size_ratio": index._policy.size_ratio,
+                   "min_run": index._policy.min_run},
+        "rng_state": index._rng.bit_generator.state,
+        "stats": dataclasses.asdict(index.stats),
+        "segments": [{"doc_base": s.doc_base, "doc_span": s.doc_span,
+                      "n_postings": s.n_postings}
+                     for s in index._segments],
+    }
+    state = {
+        "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
+        "hashes": index._hashes.copy(),
+        "df": index._df.copy(),
+        "live": index._live.copy(),
+        "rank": index._rank.copy(),
+        "norm": index._norm.copy(),
+        "delta_terms": dl.terms[:n_p].copy(),
+        "delta_tfs": dl.tfs[:n_p].copy(),
+        "delta_lens": np.diff(dl.doc_offsets[:dl.n_docs + 1]),
+    }
+    for i, s in enumerate(index._segments):
+        state[f"seg{i}_doc_of"] = s.doc_of.copy()
+        state[f"seg{i}_terms"] = s.terms.copy()
+        state[f"seg{i}_tfs"] = s.tfs.copy()
+    return state
+
+
+def restore_segmented(state: dict) -> SegmentedIndex:
+    """Rebuild a SegmentedIndex from ``serialize_segmented`` output.
+
+    Global tables restore verbatim; sealed segments rebuild through
+    ``_build_segment`` (bulk build + size-class pad) from their stored
+    canonical triples — the same path live sealing takes, so device
+    structures come out identical up to vocabulary width (terms added
+    after a segment sealed appear as posting-less vocab entries, which
+    gate nothing and change no result bit).
+    """
+    meta = json.loads(bytes(np.asarray(state["meta"])).decode())
+    if meta["version"] != _FORMAT_VERSION:
+        raise ValueError(f"unknown snapshot version {meta['version']}")
+    si = SegmentedIndex(
+        term_hashes=np.asarray(state["hashes"], np.uint32),
+        delta_doc_capacity=meta["delta"]["doc_cap"],
+        delta_posting_capacity=meta["delta"]["post_cap"],
+        policy=compaction.TieredPolicy(**meta["policy"]),
+        seal_layout=meta["seal_layout"])
+    si._df = np.asarray(state["df"], np.int64).copy()
+    si._live = np.asarray(state["live"], bool).copy()
+    si._rank = np.asarray(state["rank"], np.float32).copy()
+    si._norm = np.asarray(state["norm"], np.float32).copy()
+    si._live_docs = int(meta["live_docs"])
+    si._rng.bit_generator.state = meta["rng_state"]
+    # norms are already restored, so segment builds pad the exact values
+    for i, sm in enumerate(meta["segments"]):
+        seg = si._build_segment(
+            int(sm["doc_base"]), int(sm["doc_span"]),
+            np.asarray(state[f"seg{i}_doc_of"], np.int64),
+            np.asarray(state[f"seg{i}_terms"], np.int64),
+            np.asarray(state[f"seg{i}_tfs"], np.float32))
+        si._segments.append(seg)
+    dl = _Delta(meta["delta"]["doc_cap"], meta["delta"]["post_cap"],
+                meta["delta"]["doc_base"])
+    lens = np.asarray(state["delta_lens"], np.int64)
+    if lens.size:
+        dl.append(lens, np.asarray(state["delta_terms"], np.int32),
+                  np.asarray(state["delta_tfs"], np.float32))
+    si._delta = dl
+    si._delta_dirty = True
+    si.stats = LiveIndexStats(**meta["stats"])
+    si._epoch = int(meta["epoch"])
+    return si
+
+
+def save_segmented(index: SegmentedIndex, path, lock=None) -> None:
+    """Snapshot to an ``.npz`` file (compressed).  ``lock`` as in
+    ``serialize_segmented`` — hold the write lock when writers may be
+    live (only the state gather runs under it, not the file write)."""
+    state = serialize_segmented(index, lock=lock)
+    np.savez_compressed(path, **state)
+
+
+def load_segmented(path) -> SegmentedIndex:
+    """Restore from ``save_segmented`` output."""
+    with np.load(path) as z:
+        return restore_segmented({k: z[k] for k in z.files})

@@ -105,3 +105,89 @@ def test_gather_postings_sorted_and_valid(small_host):
     d0 = np.asarray(d[0])[np.asarray(v[0])]
     assert (np.diff(d0) > 0).all()          # doc-sorted within a term
     assert not np.asarray(v[2]).any()       # absent term -> all invalid
+
+
+def _fill_blocks_reference(h, block):
+    """The pre-vectorization per-term python packing loop, kept verbatim
+    as the byte-level reference for ``build_blocked``'s fill."""
+    order = np.argsort(h.term_hashes, kind="stable")
+    lengths = np.diff(h.offsets)[order]
+    nblocks = -(-lengths // block)
+    nblocks = np.maximum(nblocks, (lengths > 0).astype(nblocks.dtype))
+    block_offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+    np.cumsum(nblocks, out=block_offsets[1:])
+    NB = int(block_offsets[-1])
+    bd = np.full((NB, block), -1, dtype=np.int32)
+    bt = np.zeros((NB, block), dtype=np.float32)
+    for newpos, old in enumerate(order):
+        s, e = h.offsets[old], h.offsets[old + 1]
+        n = e - s
+        b0 = block_offsets[newpos]
+        flat_d = bd[b0:block_offsets[newpos + 1]].reshape(-1)
+        flat_t = bt[b0:block_offsets[newpos + 1]].reshape(-1)
+        flat_d[:n] = h.doc_ids[s:e]
+        flat_t[:n] = h.tfs[s:e]
+    return block_offsets, bd, bt
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_build_blocked_vectorized_fill_matches_loop(small_host, block):
+    """The np-bucketing block packer (seal hot path) emits byte-identical
+    blocks to the old per-term python loop."""
+    ref_offs, ref_bd, ref_bt = _fill_blocks_reference(small_host, block)
+    ix = layouts.build_blocked(small_host, block=block)
+    np.testing.assert_array_equal(np.asarray(ix.block_offsets),
+                                  ref_offs.astype(np.int32))
+    assert np.asarray(ix.block_docs).tobytes() == ref_bd.tobytes()
+    assert np.asarray(ix.block_tfs).tobytes() == ref_bt.tobytes()
+
+
+def test_build_blocked_vectorized_fill_edge_cases():
+    """Empty terms, empty corpus, single oversized term."""
+    hashes = np.array([7, 3, 9], np.uint32)
+    # term 1 (hash 3) empty; term 2 spans 3 blocks of 4
+    offsets = np.array([0, 2, 2, 12], np.int64)
+    doc_ids = np.arange(12, dtype=np.int32)
+    h = layouts.PostingsHost(
+        term_hashes=hashes, df=np.array([2, 0, 10], np.int32),
+        offsets=offsets, doc_ids=doc_ids,
+        tfs=np.ones(12, np.float32), num_docs=16,
+        norm=np.ones(16, np.float32), rank=np.zeros(16, np.float32))
+    ref_offs, ref_bd, ref_bt = _fill_blocks_reference(h, 4)
+    ix = layouts.build_blocked(h, block=4)
+    assert np.asarray(ix.block_docs).tobytes() == ref_bd.tobytes()
+    assert np.asarray(ix.block_tfs).tobytes() == ref_bt.tobytes()
+    # empty corpus
+    h0 = layouts.PostingsHost(
+        term_hashes=np.zeros(0, np.uint32), df=np.zeros(0, np.int32),
+        offsets=np.zeros(1, np.int64), doc_ids=np.zeros(0, np.int32),
+        tfs=np.zeros(0, np.float32), num_docs=0,
+        norm=np.zeros(0, np.float32), rank=np.zeros(0, np.float32))
+    ix0 = layouts.build_blocked(h0)
+    assert ix0.block_docs.shape[0] == 0
+
+
+def test_pad_packed_to_class_roundtrip(small_host, query_hashes):
+    """A size-class-padded packed index answers queries identically to
+    the unpadded build (inert padding blocks, quantized statics)."""
+    pk = layouts.build_packed_csr(small_host)
+    nb = int(pk.packed.shape[0])
+    padded = layouts.pad_packed_to_class(
+        pk, nb_pad=layouts.size_class(nb),
+        w_pad=layouts.size_class(pk.num_terms, base=256),
+        max_posting_len=layouts.size_class(pk.max_posting_len),
+        words_per_block=layouts.size_class(pk.words_per_block, base=8),
+        route_pairs_max=layouts.size_class(pk.route_pairs_max),
+        route_span_max=layouts.size_class(pk.route_span_max, base=8))
+    cap = small_host.max_posting_len
+    ref = query.score_queries(pk, jnp.asarray(query_hashes), k=10, cap=cap)
+    got = query.score_queries(padded, jnp.asarray(query_hashes), k=10,
+                              cap=cap)
+    np.testing.assert_array_equal(np.asarray(got.doc_ids),
+                                  np.asarray(ref.doc_ids))
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(ref.scores), rtol=1e-6)
+    with pytest.raises(ValueError):
+        layouts.pad_packed_to_class(pk, nb_pad=1, w_pad=1,
+                                    max_posting_len=1, words_per_block=1,
+                                    route_pairs_max=1, route_span_max=1)

@@ -281,6 +281,54 @@ def test_ingest_merge_work_at_least_10x_below_rebuild():
     assert si.stats.postings_appended == total_postings
 
 
+def test_packed_seal_layout_parity():
+    """seal(layout="packed"): delta+bit-packed sealed segments answer
+    bit-identically to the oracle across a randomized add/delete/compact
+    schedule, agree with the HOR seal of the same schedule, and mix into
+    an HOR stack via the per-seal override."""
+    rng = np.random.default_rng(1)
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=360, vocab=300,
+                                           avg_distinct=18, seed=11))
+    batches = _slices(tc, [0, 60, 110, 180, 240, 300, 360])
+    kw = dict(delta_doc_capacity=48, delta_posting_capacity=2048,
+              policy=compaction.TieredPolicy(size_ratio=4.0, min_run=3))
+    si_p = SegmentedIndex(term_hashes=tc.term_hashes, seal_layout="packed",
+                          **kw)
+    si_h = SegmentedIndex(term_hashes=tc.term_hashes, **kw)
+    qh = corpus.sample_query_terms(build.bulk_build(tc).df, tc.term_hashes,
+                                   3, 3, num_docs=tc.num_docs, seed=5)
+    for step, b in enumerate(batches):
+        si_p.add_batch(b)
+        si_h.add_batch(b)
+        if step >= 1:
+            live = np.flatnonzero(si_p.live_mask())
+            kill = rng.choice(live, size=min(7, len(live)), replace=False)
+            si_p.delete(kill)
+            si_h.delete(kill)
+        if step == 3:
+            si_p.compact(all_segments=True)
+            si_h.compact(all_segments=True)
+        _assert_live_parity(si_p, qh, k=10)
+        got_p = si_p.topk(qh, k=10)
+        got_h = si_h.topk(qh, k=10)
+        np.testing.assert_array_equal(np.asarray(got_p.doc_ids),
+                                      np.asarray(got_h.doc_ids))
+        np.testing.assert_allclose(np.asarray(got_p.scores),
+                                   np.asarray(got_h.scores), rtol=1e-5)
+    assert si_p.stats.seals > 0 and si_p.stats.compactions > 0
+    from repro.core.layouts import PackedCsrIndex
+    assert all(isinstance(s.index, PackedCsrIndex)
+               for s in si_p.segments())
+    # mixed stack: one packed seal inside an otherwise-HOR index
+    assert si_h.delta_postings > 0     # schedule leaves a partial delta
+    si_h.seal(layout="packed")
+    layouts_seen = {type(s.index).__name__ for s in si_h.segments()}
+    assert layouts_seen == {"BlockedIndex", "PackedCsrIndex"}
+    _assert_live_parity(si_h, qh, k=10)
+    # the jnp engine agrees over packed segments too
+    _assert_live_parity(si_p, qh, k=10, engine="jnp")
+
+
 def test_pick_compaction_policy():
     """Size-tiered trigger: merges the newest similar-sized run, leaves
     graduated runs alone until enough peers accumulate."""
@@ -448,6 +496,22 @@ for q in qh:
                                np.asarray(ref.scores)[0], rtol=1e-5)
     assert not np.isin(np.asarray(ids), deleted).any()
 print("LIVE_SHARDED_OK")
+
+# sharding a PINNED VIEW: the stacks snapshot one epoch; later deletes
+# on the live index do not leak into the sharded serving tier
+view = si.view()
+si.delete([11, 222])
+stacks_v = retrieval.stack_segment_shards(view, 4)
+scorer_v = retrieval.make_doc_sharded_segment_scorer(stacks_v, mesh,
+                                                     "data", k=10)
+for q in qh[:2]:
+    vv, ids = scorer_v(jnp.asarray(q))
+    ref = view.topk(q[None], k=10)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ref.doc_ids)[0])
+    np.testing.assert_allclose(np.asarray(vv),
+                               np.asarray(ref.scores)[0], rtol=1e-5)
+print("VIEW_SHARDED_OK")
 """
 
 
@@ -462,3 +526,4 @@ def test_doc_sharded_segment_stack_scorer():
                          env=env, capture_output=True, text=True,
                          timeout=500)
     assert "LIVE_SHARDED_OK" in out.stdout, out.stderr[-3000:]
+    assert "VIEW_SHARDED_OK" in out.stdout, out.stderr[-3000:]
