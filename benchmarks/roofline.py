@@ -217,20 +217,9 @@ def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4,
     packed = layouts.build_packed_csr(host)
     qh = corpus.sample_query_terms(host.df, host.term_hashes, n_queries,
                                    n_terms, num_docs=host.num_docs, seed=7)
-    sorted_hash = np.asarray(hor.sorted_hash)
-    offsets = np.asarray(hor.block_offsets)
-    blocks = set()
-    for q in qh:
-        for h in q:
-            pos = int(np.searchsorted(sorted_hash, h))
-            if pos < len(sorted_hash) and sorted_hash[pos] == h:
-                blocks.update(range(offsets[pos], offsets[pos + 1]))
-    blocks = np.array(sorted(blocks), dtype=np.int64)
-    block = hor.block
-    hor_bytes = len(blocks) * (block * 4 + block * 4)
-    bits = np.asarray(packed.block_bits)[blocks]
-    packed_bytes = int(np.sum((block * bits + 31) // 32 * 4)
-                       + len(blocks) * (block * 2 + 12))
+    blocks = _touched_blocks(hor, qh)
+    hor_bytes = _blocked_payload_bytes(hor, blocks)
+    packed_bytes = _packed_payload_bytes(packed, blocks)
     ratio = packed_bytes / max(hor_bytes, 1)
     emit("roofline/query_bytes/hor", 0.0,
          f"bytes_per_query={hor_bytes / n_queries:.0f};"
@@ -238,6 +227,8 @@ def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4,
     emit("roofline/query_bytes/packed", 0.0,
          f"bytes_per_query={packed_bytes / n_queries:.0f};"
          f"ratio_vs_hor={ratio:.3f}")
+
+    sharded_query_hbm_bytes(host, qh, n_queries)
 
     # score-WRITE bytes per query: dense [Q, num_docs] f32 vs the
     # candidate engine's per-tile (f32 value, i32 doc id) pairs
@@ -252,6 +243,105 @@ def query_hbm_bytes(n_queries: int = 8, n_terms: int = 4,
          f"bytes_per_query={cand_bytes};n_tiles={n_tiles};"
          f"k_tile={k_tile};k={k};"
          f"ratio_vs_dense={cand_bytes / max(dense_bytes, 1):.4f}")
+
+
+def _blocked_payload_bytes(ix, blocks: np.ndarray) -> int:
+    """HOR posting payload for a set of touched blocks: raw int32 doc
+    ids + f32 tfs, 8 B per lane."""
+    block = ix.block
+    return len(blocks) * (block * 4 + block * 4)
+
+
+def _packed_payload_bytes(ix, blocks: np.ndarray) -> int:
+    """Packed posting payload for a set of touched blocks: the
+    bit-packed words + f16 tfs + 12 B of per-block decode scalars
+    (bits/base/count) — the bytes the in-VMEM decoder actually streams."""
+    block = ix.block
+    bits = np.asarray(ix.block_bits)[blocks]
+    return int(np.sum((block * bits + 31) // 32 * 4)
+               + len(blocks) * (block * 2 + 12))
+
+
+def _touched_blocks(ix, qh: np.ndarray) -> np.ndarray:
+    """Unique posting blocks a query batch touches in one (sub-)index —
+    cross-query dedup, exactly like the fused engine's pair dedup."""
+    sorted_hash = np.asarray(ix.sorted_hash)
+    offsets = np.asarray(ix.block_offsets)
+    blocks = set()
+    for q in qh:
+        for h in q:
+            pos = int(np.searchsorted(sorted_hash, h))
+            if pos < len(sorted_hash) and sorted_hash[pos] == h:
+                blocks.update(range(offsets[pos], offsets[pos + 1]))
+    return np.array(sorted(blocks), dtype=np.int64)
+
+
+def sharded_query_hbm_bytes(host, qh: np.ndarray, n_queries: int,
+                            n_shards: int = 4) -> None:
+    """Posting-HBM bytes per query for the SHARDED fused engines, per
+    layout per sharding mode.
+
+    TERM-sharded: each vocab shard re-compresses its whole posting
+    lists (global doc ids) — a query streams the touched blocks of the
+    shards owning its terms; bytes are summed over shards.  DOC-sharded:
+    every shard re-packs its document slice (local ids, so packed deltas
+    shrink) and a query broadcasts to ALL shards.  In both modes the
+    packed/HOR ratio should hold at <= ~0.5 — the acceptance bar for the
+    compressed layout being a first-class citizen of the distributed
+    tier, not just the single-node engine.
+    """
+    from benchmarks.common import emit
+    from repro.core import layouts
+    from repro.core.layouts import PostingsHost
+
+    # -- term-sharded: per-vocab-shard re-compression (whole lists) ------
+    from repro.distributed.retrieval import _term_shard_subhosts
+    subs, _ = _term_shard_subhosts(host, n_shards)
+    totals = {"hor": 0, "packed": 0}
+    for sub in subs:
+        hor = layouts.build_blocked(sub)
+        packed = layouts.build_packed_csr(sub)
+        blocks = _touched_blocks(hor, qh)
+        totals["hor"] += _blocked_payload_bytes(hor, blocks)
+        totals["packed"] += _packed_payload_bytes(packed, blocks)
+    emit("roofline/query_bytes/term_sharded_hor", 0.0,
+         f"bytes_per_query={totals['hor'] / n_queries:.0f};"
+         f"shards={n_shards}")
+    emit("roofline/query_bytes/term_sharded_packed", 0.0,
+         f"bytes_per_query={totals['packed'] / n_queries:.0f};"
+         f"ratio_vs_hor={totals['packed'] / max(totals['hor'], 1):.3f}")
+
+    # -- doc-sharded: per-doc-slice re-pack (local ids, smaller deltas) --
+    bounds = np.linspace(0, host.num_docs, n_shards + 1).astype(np.int64)
+    term_of = np.repeat(np.arange(host.num_terms, dtype=np.int64),
+                        np.diff(host.offsets))
+    totals = {"hor": 0, "packed": 0}
+    for s in range(n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        m = (host.doc_ids >= lo) & (host.doc_ids < hi)
+        order = np.lexsort((host.doc_ids[m], term_of[m]))
+        df_l = np.bincount(term_of[m],
+                           minlength=host.num_terms).astype(np.int64)
+        offs = np.zeros(host.num_terms + 1, dtype=np.int64)
+        np.cumsum(df_l, out=offs[1:])
+        sub = PostingsHost(
+            term_hashes=host.term_hashes, df=df_l.astype(np.int32),
+            offsets=offs,
+            doc_ids=(host.doc_ids[m][order] - lo).astype(np.int32),
+            tfs=host.tfs[m][order].astype(np.float32),
+            num_docs=int(hi - lo), norm=host.norm[lo:hi],
+            rank=host.rank[lo:hi])
+        hor = layouts.build_blocked(sub)
+        packed = layouts.build_packed_csr(sub)
+        blocks = _touched_blocks(hor, qh)
+        totals["hor"] += _blocked_payload_bytes(hor, blocks)
+        totals["packed"] += _packed_payload_bytes(packed, blocks)
+    emit("roofline/query_bytes/doc_sharded_hor", 0.0,
+         f"bytes_per_query={totals['hor'] / n_queries:.0f};"
+         f"shards={n_shards}")
+    emit("roofline/query_bytes/doc_sharded_packed", 0.0,
+         f"bytes_per_query={totals['packed'] / n_queries:.0f};"
+         f"ratio_vs_hor={totals['packed'] / max(totals['hor'], 1):.3f}")
 
 
 def main(out_dir: str = "experiments/dryrun",

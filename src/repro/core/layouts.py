@@ -775,6 +775,15 @@ class PackedCsrIndex:
     def num_terms(self) -> int:
         return self.df.shape[0]
 
+    @property
+    def max_blocks_per_term(self) -> int:
+        """Worst-case posting blocks one term spans — the BlockedIndex
+        field's packed twin, derived from the (possibly size-class
+        quantized) posting-length bound.  Used as the per-term candidate
+        fan-out bound by the sharded fused engines, which accept either
+        layout."""
+        return max(-(-self.max_posting_len // self.block), 1)
+
     def lookup_terms(self, hashes: Array) -> Array:
         pos = jnp.searchsorted(self.sorted_hash, hashes).astype(jnp.int32)
         pos = jnp.clip(pos, 0, self.sorted_hash.shape[0] - 1)

@@ -304,7 +304,7 @@ class Segment:
     (global id = local + doc_base); the host arrays are the (doc, term)-
     sorted forward canonical used for norm refresh, per-doc delete
     lookups, and compaction merges."""
-    index: layouts.BlockedIndex
+    index: layouts.BlockedIndex | layouts.PackedCsrIndex
     doc_base: int
     doc_span: int              # allocated local id range (may have holes)
     doc_of: np.ndarray         # i32[P] local doc ids, doc-major
@@ -312,6 +312,15 @@ class Segment:
     tfs: np.ndarray            # f32[P]
     doc_offsets: np.ndarray    # i64[doc_span + 1] forward CSR
     n_postings: int
+
+    @property
+    def layout(self) -> str:
+        """The sealed layout this segment was built with — ``"hor"`` or
+        ``"packed"``.  Snapshots record it per segment so a mixed-layout
+        stack restores each segment in its ORIGINAL layout (bitwise
+        round-trip), and the sharded stack groups on it."""
+        return ("packed" if isinstance(self.index, layouts.PackedCsrIndex)
+                else "hor")
 
 
 # ---------------------------------------------------------------------------

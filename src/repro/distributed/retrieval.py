@@ -22,6 +22,15 @@ pattern (this is the multi-pod story for the paper's own workload):
 
 Both are shard_map programs over stacked, padded per-shard CSR arrays
 (the paper's OR layout, sliced and re-packed per shard).
+
+The fused engines make the compressed (delta+bit-packed) layout a
+first-class citizen of EVERY distributed path: the term-sharded tier
+re-compresses each vocab shard's posting lists
+(``build_term_sharded_packed``) and the doc-sharded serving tier stacks
+packed — or mixed hor+packed — sealed segments
+(``stack_segment_shards``), in both cases decoding blocks IN VMEM inside
+the fused kernel so only compressed bytes cross HBM per shard — the
+paper's §4.3 layout-determines-I/O argument at cluster scale.
 """
 from __future__ import annotations
 
@@ -465,37 +474,144 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class SegmentStackShards:
-    """Per-shard stacks of sealed live-index segments, size-class
-    aligned and stacked ``[S, G, ...]`` (G = deepest stack, empty slots
-    inert).  Each shard owns WHOLE segments — the ODYS-style partition-
-    by-run layout — so a query runs one fused candidate kernel per local
-    segment and the global answer is a candidate merge, exactly the
-    single-node live path with shards playing the role of stacks."""
-    sorted_hash: np.ndarray    # u32[S, G, Wc]   per-segment vocab (era'd)
-    block_offsets: np.ndarray  # i32[S, G, Wc+1]
-    block_docs: np.ndarray     # i32[S, G, NBc, BLOCK]  segment-LOCAL ids
-    block_tfs: np.ndarray     # f32[S, G, NBc, BLOCK]
-    tile_first: np.ndarray     # i32[S, G, NBc]
-    tile_count: np.ndarray     # i32[S, G, NBc]
-    norm: np.ndarray           # f32[S, G, Dc]   current (tombstones = 0)
-    doc_base: np.ndarray       # i32[S, G]
-    vocab_hash: np.ndarray     # u32[W] unified, hash-sorted (replicated)
-    vocab_df: np.ndarray       # i32[W] LIVE global df (replicated)
-    n_shards: int
-    n_slots: int               # G
-    live_docs: int             # D behind idf
-    d_pad: int                 # Dc: common padded local doc space
-    tile: int
+@dataclasses.dataclass(frozen=True)
+class StackGroupMeta:
+    """Static signature of one ``(size_class, layout)`` group of sealed
+    segments in a sharded stack.
+
+    Sealing already quantizes every shape- and budget-bearing static to
+    a geometric size class (``layouts.pad_blocked_to_class`` /
+    ``pad_packed_to_class``); grouping the stack on the full tuple means
+    two stacks whose segments fall into the same classes produce
+    IDENTICAL jit signatures — the sharded twin of the live index's
+    recompile-avoidance contract.  ``n_slots`` (the group's stack depth)
+    is itself pow2-quantized so sealing one more same-class segment
+    reuses the compiled scorer."""
+    layout: str              # "hor" | "packed"
+    w_pad: int               # vocab slots per segment (size class)
+    nb_pad: int              # posting-block rows per segment
+    d_pad: int               # padded local doc span
+    block: int
+    words_per_block: int     # packed word lanes (0 for hor)
+    n_slots: int             # G: per-shard stack depth (pow2, inert pads)
     max_blocks_per_term: int
     route_span_max: int
     route_pairs_max: int
 
+
+def _segment_group_key(ix) -> StackGroupMeta:
+    """The (size_class, layout) bucket a sealed segment stacks into.
+    ``n_slots`` is filled in later (it is a property of the stack, not
+    of one segment)."""
+    if isinstance(ix, layouts.PackedCsrIndex):
+        return StackGroupMeta(
+            layout="packed", w_pad=int(ix.sorted_hash.shape[0]),
+            nb_pad=int(ix.packed.shape[0]), d_pad=int(ix.docs.num_docs),
+            block=ix.block, words_per_block=ix.words_per_block, n_slots=0,
+            max_blocks_per_term=ix.max_blocks_per_term,
+            route_span_max=ix.route_span_max,
+            route_pairs_max=ix.route_pairs_max)
+    if isinstance(ix, layouts.BlockedIndex):
+        return StackGroupMeta(
+            layout="hor", w_pad=int(ix.sorted_hash.shape[0]),
+            nb_pad=int(ix.block_docs.shape[0]), d_pad=int(ix.docs.num_docs),
+            block=ix.block, words_per_block=0, n_slots=0,
+            max_blocks_per_term=ix.max_blocks_per_term,
+            route_span_max=ix.route_span_max,
+            route_pairs_max=ix.route_pairs_max)
+    raise ValueError(f"unknown sealed-segment layout: {type(ix).__name__}")
+
+
+def _group_array_names(layout: str) -> tuple:
+    common = ("sorted_hash", "block_offsets", "tile_first", "tile_count",
+              "norm", "doc_base")
+    if layout == "packed":
+        return common + ("packed", "block_tfs", "block_bits", "block_base",
+                         "block_count")
+    return common + ("block_docs", "block_tfs")
+
+
+def _empty_group_arrays(meta: StackGroupMeta, n_shards: int) -> dict:
+    """Inert [S, G, ...] arrays for one group: absent-hash vocab slots,
+    tile_count 0 (never routed), and — for packed — bit width 1 with
+    count 0, so padding slots are in-distribution for the decoder and
+    contribute nothing."""
+    S, G = n_shards, meta.n_slots
+    w, nb, b = meta.w_pad, meta.nb_pad, meta.block
+    arrays = {
+        "sorted_hash": np.full((S, G, w), 0xFFFFFFFF, np.uint32),
+        "block_offsets": np.zeros((S, G, w + 1), np.int32),
+        "tile_first": np.zeros((S, G, nb), np.int32),
+        "tile_count": np.zeros((S, G, nb), np.int32),
+        "norm": np.zeros((S, G, meta.d_pad), np.float32),
+        "doc_base": np.zeros((S, G), np.int32),
+    }
+    if meta.layout == "packed":
+        arrays.update({
+            "packed": np.zeros((S, G, nb, meta.words_per_block), np.uint32),
+            "block_tfs": np.zeros((S, G, nb, b), np.float16),
+            "block_bits": np.ones((S, G, nb), np.int32),
+            "block_base": np.zeros((S, G, nb), np.int32),
+            "block_count": np.zeros((S, G, nb), np.int32),
+        })
+    else:
+        arrays.update({
+            "block_docs": np.full((S, G, nb, b), -1, np.int32),
+            "block_tfs": np.zeros((S, G, nb, b), np.float32),
+        })
+    return arrays
+
+
+def _fill_group_slot(arrays: dict, s: int, g: int, seg) -> None:
+    ix = seg.index
+    arrays["sorted_hash"][s, g] = np.asarray(ix.sorted_hash)
+    arrays["block_offsets"][s, g] = np.asarray(ix.block_offsets)
+    arrays["tile_first"][s, g] = np.asarray(ix.tile_first)
+    arrays["tile_count"][s, g] = np.asarray(ix.tile_count)
+    arrays["norm"][s, g] = np.asarray(ix.docs.norm)
+    arrays["doc_base"][s, g] = seg.doc_base
+    if isinstance(ix, layouts.PackedCsrIndex):
+        arrays["packed"][s, g] = np.asarray(ix.packed)
+        arrays["block_tfs"][s, g] = np.asarray(ix.block_tfs)
+        arrays["block_bits"][s, g] = np.asarray(ix.block_bits)
+        arrays["block_base"][s, g] = np.asarray(ix.block_base)
+        arrays["block_count"][s, g] = np.asarray(ix.block_count)
+    else:
+        arrays["block_docs"][s, g] = np.asarray(ix.block_docs)
+        arrays["block_tfs"][s, g] = np.asarray(ix.block_tfs)
+
+
+@dataclasses.dataclass
+class SegmentStackShards:
+    """Per-shard stacks of sealed live-index segments, grouped by
+    ``(size_class, layout)`` and stacked ``[S, G, ...]`` per group
+    (G = the group's deepest per-shard stack, pow2-padded; empty slots
+    inert).  Each shard owns WHOLE segments — the ODYS-style partition-
+    by-run layout — so a query runs one fused candidate kernel per local
+    segment and the global answer is a candidate merge, exactly the
+    single-node live path with shards playing the role of stacks.  HOR
+    and delta+bit-packed sealed segments mix freely: each group carries
+    its own layout and the candidate lists are canonicalized (ascending
+    doc id) before the merge, so ties still break on lowest global id."""
+    groups: list               # [(StackGroupMeta, {name: np [S, G, ...]})]
+    vocab_hash: np.ndarray     # u32[Wp] unified, hash-sorted (replicated)
+    vocab_df: np.ndarray       # i32[Wp] LIVE global df (replicated)
+    n_shards: int
+    live_docs: int             # D behind idf (traced at query time)
+    tile: int
+
+    def signature(self) -> tuple:
+        """Hashable static structure: the jit-cache key component."""
+        return tuple(meta for meta, _ in self.groups)
+
     def device_arrays(self) -> dict:
-        return {f.name: jnp.asarray(getattr(self, f.name))
-                for f in dataclasses.fields(self)
-                if isinstance(getattr(self, f.name), np.ndarray)}
+        return {
+            "groups": [{n: jnp.asarray(v) for n, v in arrays.items()}
+                       for _, arrays in self.groups],
+            "vocab_hash": jnp.asarray(self.vocab_hash),
+            "vocab_df": jnp.asarray(self.vocab_df),
+            "live_docs": jnp.float32(self.live_docs),
+        }
 
 
 def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
@@ -507,8 +623,12 @@ def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
     / ``serve.snapshot.pin``): the sharded serving tier then snapshots a
     CONSISTENT epoch — build the stacks from a pin while ingest keeps
     landing, and the sharded scorer answers exactly as the single-node
-    pinned view does, no quiesce needed.  Sealed segments must be HOR
-    blocks (``seal_layout="hor"``); packed stacks are a follow-up."""
+    pinned view does, no quiesce needed.  Sealed segments may be HOR
+    blocks (``seal_layout="hor"``), delta+bit-packed blocks
+    (``"packed"``), or any per-seal mixture: segments stack into
+    per-``(size_class, layout)`` groups, so a warm
+    ``make_doc_sharded_segment_scorer`` jit cache sees zero new entries
+    when a rebuilt stack hits the same group signatures."""
     from repro.core.live_index import LiveView
     if isinstance(live_index, LiveView):
         if live_index.delta_n_docs:
@@ -527,137 +647,175 @@ def stack_segment_shards(live_index, n_shards: int) -> SegmentStackShards:
         live_docs = live_index.live_doc_count
     if not segs:
         raise ValueError("no sealed segments to shard")
-    if not all(isinstance(s.index, layouts.BlockedIndex) for s in segs):
-        raise ValueError("segment-stack sharding supports HOR sealed "
-                         "segments only (seal_layout='hor')")
+    tiles = {s.index.route_tile for s in segs}
+    if len(tiles) != 1:
+        raise ValueError(f"segments disagree on route_tile: {tiles}")
     # contiguous runs per shard (NOT round-robin): the all-gather
     # candidate merge concatenates shard 0's candidates first, so shards
     # must cover ascending doc-id ranges for exact score ties to break
     # on lowest global doc id, like the single-node live index
     splits = np.array_split(np.arange(len(segs)), n_shards)
     shards = [[segs[i] for i in idx] for idx in splits]
-    g_max = max(len(st) for st in shards)
-    wc = max(int(s.index.sorted_hash.shape[0]) for s in segs)
-    nbc = max(int(s.index.block_docs.shape[0]) for s in segs)
-    dc = max(int(s.index.docs.num_docs) for s in segs)
-    block = segs[0].index.block
-    S, G = n_shards, g_max
-    sh = np.full((S, G, wc), 0xFFFFFFFF, np.uint32)
-    offs = np.zeros((S, G, wc + 1), np.int32)
-    bd = np.full((S, G, nbc, block), -1, np.int32)
-    bt = np.zeros((S, G, nbc, block), np.float32)
-    tf = np.zeros((S, G, nbc), np.int32)
-    tc = np.zeros((S, G, nbc), np.int32)
-    norm = np.zeros((S, G, dc), np.float32)
-    base = np.zeros((S, G), np.int32)
-    for s, stack in enumerate(shards):
-        for g, seg in enumerate(stack):
-            ix = seg.index
-            w = int(ix.sorted_hash.shape[0])
-            nb = int(ix.block_docs.shape[0])
-            d = int(ix.docs.num_docs)
-            sh[s, g, :w] = np.asarray(ix.sorted_hash)
-            offs[s, g, :w + 1] = np.asarray(ix.block_offsets)
-            offs[s, g, w + 1:] = offs[s, g, w]
-            bd[s, g, :nb] = np.asarray(ix.block_docs)
-            bt[s, g, :nb] = np.asarray(ix.block_tfs)
-            tf[s, g, :nb] = np.asarray(ix.tile_first)
-            tc[s, g, :nb] = np.asarray(ix.tile_count)
-            norm[s, g, :d] = np.asarray(ix.docs.norm)
-            base[s, g] = seg.doc_base
+
+    # bucket by (size_class, layout); G = pow2-padded deepest stack
+    keys = sorted({_segment_group_key(s.index) for s in segs},
+                  key=lambda m: dataclasses.astuple(m))
+    groups = []
+    for key in keys:
+        depth = max(sum(1 for s in stack
+                        if _segment_group_key(s.index) == key)
+                    for stack in shards)
+        meta = dataclasses.replace(
+            key, n_slots=layouts.size_class(depth, base=1))
+        arrays = _empty_group_arrays(meta, n_shards)
+        for s, stack in enumerate(shards):
+            g = 0
+            for seg in stack:
+                if _segment_group_key(seg.index) == key:
+                    _fill_group_slot(arrays, s, g, seg)
+                    g += 1
+        groups.append((meta, arrays))
+
     order = np.argsort(vocab_hashes, kind="stable")
+    w = len(vocab_hashes)
+    w_pad = layouts.size_class(max(w, 1), base=256)
+    vh = np.full(w_pad, 0xFFFFFFFF, np.uint32)
+    vh[:w] = vocab_hashes[order].astype(np.uint32)
+    vdf = np.zeros(w_pad, np.int32)
+    vdf[:w] = vocab_df[order].astype(np.int32)
     return SegmentStackShards(
-        sorted_hash=sh, block_offsets=offs, block_docs=bd, block_tfs=bt,
-        tile_first=tf, tile_count=tc, norm=norm, doc_base=base,
-        vocab_hash=vocab_hashes[order].astype(np.uint32),
-        vocab_df=vocab_df[order].astype(np.int32),
-        n_shards=S, n_slots=G, live_docs=live_docs,
-        d_pad=dc, tile=segs[0].index.route_tile,
-        max_blocks_per_term=max(s.index.max_blocks_per_term for s in segs),
-        route_span_max=max(s.index.route_span_max for s in segs),
-        route_pairs_max=max(s.index.route_pairs_max for s in segs))
+        groups=groups, vocab_hash=vh, vocab_df=vdf, n_shards=n_shards,
+        live_docs=live_docs, tile=segs[0].index.route_tile)
+
+
+# compiled stack scorers, keyed on (mesh, axis, k, static stack
+# signature): rebuilding the stack at a new epoch with the same
+# (size_class, layout) group structure reuses the warm executable
+_STACK_SCORER_CACHE: dict = {}
+
+
+def stack_scorer_cache_sizes() -> dict:
+    """jit-cache counters for the sharded segment-stack scorer — the
+    sharded twin of ``live_index.scorer_cache_sizes`` (tests assert zero
+    growth across same-class stack rebuilds)."""
+    return {
+        "doc_sharded_segment_scorers": len(_STACK_SCORER_CACHE),
+        "doc_sharded_segment_entries":
+            sum(f._cache_size() for f in _STACK_SCORER_CACHE.values()),
+    }
+
+
+def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
+                        metas: tuple):
+    from repro.distributed.topk import (canonicalize_candidates,
+                                        local_candidate_merge)
+    from repro.kernels.fused_decode_score import (
+        Q_PAD, build_batched_pairs, default_k_tile,
+        fused_topk_blocked_pallas, fused_topk_packed_pallas)
+    from repro.kernels.ops import expand_block_candidates
+
+    k_tile = default_k_tile(k, tile)
+    group_specs = [{n: P(axis) for n in _group_array_names(m.layout)}
+                   for m in metas]
+    in_specs = ({"groups": group_specs, "vocab_hash": P(),
+                 "vocab_df": P(), "live_docs": P()}, P())
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=in_specs, out_specs=(P(), P()),
+        check_vma=False)
+    def score(ix, qh):
+        qh = dedup_query_hashes(qh)
+        t = qh.shape[0]
+        # global idf from the replicated live vocabulary stats; the live
+        # doc count is TRACED (same op sequence as the live index's
+        # _query_weights), so ingest between stack rebuilds changes no
+        # static — only array contents
+        vh, vdf = ix["vocab_hash"], ix["vocab_df"]
+        vpos = jnp.searchsorted(vh, qh).astype(jnp.int32)
+        vpos = jnp.clip(vpos, 0, vh.shape[0] - 1)
+        vhit = (vh[vpos] == qh) & (qh != 0)
+        w = idf_fn(jnp.where(vhit, vdf[vpos], 0), ix["live_docs"])
+        qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
+        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
+        all_v, all_i = [], []
+        for meta, g_arrs in zip(metas, ix["groups"]):
+            sq = {n: v[0] for n, v in g_arrs.items()}   # drop shard dim
+            n_tiles = max(-(-meta.d_pad // tile), 1)
+            m_blocks = max(meta.max_blocks_per_term, 1)
+            max_pairs = max(min(meta.route_pairs_max,
+                                t * m_blocks * max(meta.route_span_max, 1)),
+                            8)
+            for g in range(meta.n_slots):             # static stack depth
+                pos = jnp.searchsorted(sq["sorted_hash"][g],
+                                       qh).astype(jnp.int32)
+                pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[1] - 1)
+                hit = (sq["sorted_hash"][g][pos] == qh) & (qh != 0)
+                tid = jnp.where(hit, pos, -1)
+                cand_block, cand_valid, cand_q, cand_w, _ = \
+                    expand_block_candidates(sq["block_offsets"][g],
+                                            tid[None], w[None], m_blocks,
+                                            meta.block)
+                pb, pt, pqw, pcap, _ovf = build_batched_pairs(
+                    cand_block, cand_valid, cand_q, cand_w,
+                    sq["tile_first"][g], sq["tile_count"][g], n_tiles, 1,
+                    max_pairs)
+                pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+                if meta.layout == "packed":
+                    vals, ids = fused_topk_packed_pallas(
+                        sq["packed"][g], sq["block_tfs"][g], pb, pt, pqw,
+                        pcap, sq["block_bits"][g][pb],
+                        sq["block_base"][g][pb], sq["block_count"][g][pb],
+                        sq["norm"][g], jnp.zeros_like(sq["norm"][g]), qn,
+                        meta.d_pad, meta.block, k_tile, tile=tile)
+                else:
+                    vals, ids = fused_topk_blocked_pallas(
+                        sq["block_docs"][g], sq["block_tfs"][g], pb, pt,
+                        pqw, pcap, sq["norm"][g],
+                        jnp.zeros_like(sq["norm"][g]), qn, meta.d_pad,
+                        k_tile, tile=tile)
+                all_v.append(vals[0])
+                all_i.append(jnp.where(ids[0] >= 0,
+                                       ids[0] + sq["doc_base"][g], -1))
+        # group-major concatenation interleaves doc ranges (mixed
+        # layouts, multiple classes) — canonicalize so the merge
+        # tie-breaks on lowest global doc id regardless of group order
+        cv, ci = canonicalize_candidates(jnp.concatenate(all_v),
+                                         jnp.concatenate(all_i))
+        return local_candidate_merge(cv, ci, k, axis)
+
+    return jax.jit(score)
 
 
 def make_doc_sharded_segment_scorer(index: SegmentStackShards, mesh: Mesh,
                                     axis: str, k: int = 10):
     """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
 
-    Every shard walks its local segment stack, runs the fused candidate
-    kernel per segment (idf from the replicated LIVE global df, so a
-    shard scores exactly as the single-node live index does), shifts
-    tile candidates to global ids via the per-segment doc_base, and the
-    usual all-gather candidate merge yields the global top-k.  Deleted
-    docs ride in as norm == 0 per segment — tombstones work unchanged
-    at cluster scale."""
-    from repro.distributed.topk import local_candidate_merge
-    from repro.kernels.fused_decode_score import (
-        Q_PAD, build_batched_pairs, default_k_tile,
-        fused_topk_blocked_pallas)
-    from repro.kernels.ops import expand_block_candidates
+    Every shard walks its local segment stack — one fused candidate
+    kernel per segment, HOR blocks read in place, packed blocks decoded
+    IN VMEM (idf from the replicated LIVE global df, so a shard scores
+    exactly as the single-node live index does) — shifts tile candidates
+    to global ids via the per-segment doc_base, and the usual all-gather
+    candidate merge yields the global top-k.  Deleted docs ride in as
+    norm == 0 per segment — tombstones work unchanged at cluster scale.
 
+    The compiled program is cached on (mesh, axis, k, stack signature):
+    a stack rebuilt at a newer epoch whose segments fall into the same
+    ``(size_class, layout)`` groups reuses the warm executable — zero
+    new jit entries (``stack_scorer_cache_sizes``)."""
     if mesh.shape[axis] != index.n_shards:
         raise ValueError(
             f"stack was built for {index.n_shards} shards but mesh axis "
             f"{axis!r} has {mesh.shape[axis]} devices — shard_map would "
             f"silently drop whole per-shard stacks")
+    key = (mesh, axis, k, index.tile, index.n_shards,
+           int(index.vocab_hash.shape[0]), index.signature())
+    fn = _STACK_SCORER_CACHE.get(key)
+    if fn is None:
+        fn = _build_stack_scorer(mesh, axis, k, index.tile,
+                                 index.signature())
+        _STACK_SCORER_CACHE[key] = fn
     arrs = index.device_arrays()
-    d_pad, tile, G = index.d_pad, index.tile, index.n_slots
-    n_tiles = max(-(-d_pad // tile), 1)
-    num_docs = index.live_docs
-    m_blocks = max(index.max_blocks_per_term, 1)
-    k_tile = default_k_tile(k, tile)
-
-    sharded = {n: P(axis) for n in
-               ("sorted_hash", "block_offsets", "block_docs", "block_tfs",
-                "tile_first", "tile_count", "norm", "doc_base")}
-    sharded["vocab_hash"] = P()
-    sharded["vocab_df"] = P()
-
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
-    def score(ix, qh):
-        sq = {n: (v[0] if n not in ("vocab_hash", "vocab_df") else v)
-              for n, v in ix.items()}             # drop shard dim
-        qh = dedup_query_hashes(qh)
-        t = qh.shape[0]
-        # global idf from the replicated live vocabulary stats
-        vpos = jnp.searchsorted(sq["vocab_hash"], qh).astype(jnp.int32)
-        vpos = jnp.clip(vpos, 0, sq["vocab_hash"].shape[0] - 1)
-        vhit = (sq["vocab_hash"][vpos] == qh) & (qh != 0)
-        w = idf_fn(jnp.where(vhit, sq["vocab_df"][vpos], 0), num_docs)
-        qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
-        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
-        max_pairs = max(min(index.route_pairs_max,
-                            t * m_blocks * max(index.route_span_max, 1)),
-                        8)
-        all_v, all_i = [], []
-        for g in range(G):                        # static stack depth
-            pos = jnp.searchsorted(sq["sorted_hash"][g],
-                                   qh).astype(jnp.int32)
-            pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[1] - 1)
-            hit = (sq["sorted_hash"][g][pos] == qh) & (qh != 0)
-            tid = jnp.where(hit, pos, -1)
-            cand_block, cand_valid, cand_q, cand_w, _ = \
-                expand_block_candidates(sq["block_offsets"][g], tid[None],
-                                        w[None], m_blocks,
-                                        sq["block_docs"].shape[-1])
-            pb, pt, pqw, pcap, _ovf = build_batched_pairs(
-                cand_block, cand_valid, cand_q, cand_w,
-                sq["tile_first"][g], sq["tile_count"][g], n_tiles, 1,
-                max_pairs)
-            pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
-            vals, ids = fused_topk_blocked_pallas(
-                sq["block_docs"][g], sq["block_tfs"][g], pb, pt, pqw,
-                pcap, sq["norm"][g], jnp.zeros_like(sq["norm"][g]), qn,
-                d_pad, k_tile, tile=tile)
-            all_v.append(vals[0])
-            all_i.append(jnp.where(ids[0] >= 0,
-                                   ids[0] + sq["doc_base"][g], -1))
-        return local_candidate_merge(jnp.concatenate(all_v),
-                                     jnp.concatenate(all_i), k, axis)
-
-    return jax.jit(lambda qh: score(arrs, qh))
+    return lambda qh: fn(arrs, qh)
 
 
 # ---------------------------------------------------------------------------
@@ -697,30 +855,8 @@ class BlockedTermShardedIndex:
 
 def build_term_sharded_blocked(host: PostingsHost, n_shards: int
                                ) -> BlockedTermShardedIndex:
-    order = np.argsort(host.term_hashes, kind="stable")
-    W = host.num_terms
-    bounds = np.linspace(0, W, n_shards + 1).astype(np.int64)
-    wmax = int(np.max(np.diff(bounds)))
-
-    shards = []
-    for s in range(n_shards):
-        terms = order[bounds[s]:bounds[s + 1]]
-        lens = (host.offsets[terms + 1] - host.offsets[terms]).astype(np.int64)
-        offs = np.zeros(len(terms) + 1, dtype=np.int64)
-        np.cumsum(lens, out=offs[1:])
-        docs = np.zeros(int(offs[-1]), np.int32)
-        tfs = np.zeros(int(offs[-1]), np.float32)
-        for i, t in enumerate(terms):
-            a, bnd = host.offsets[t], host.offsets[t + 1]
-            docs[offs[i]:offs[i + 1]] = host.doc_ids[a:bnd]
-            tfs[offs[i]:offs[i + 1]] = host.tfs[a:bnd]
-        sub = PostingsHost(term_hashes=host.term_hashes[terms],
-                           df=host.df[terms].astype(np.int32),
-                           offsets=offs, doc_ids=docs, tfs=tfs,
-                           num_docs=host.num_docs,
-                           norm=host.norm, rank=host.rank)
-        shards.append(layouts.build_blocked(sub))
-
+    subs, wmax = _term_shard_subhosts(host, n_shards)
+    shards = [layouts.build_blocked(sub) for sub in subs]
     block = shards[0].block
     nbmax = max(int(ix.block_docs.shape[0]) for ix in shards)
     S = n_shards
@@ -753,43 +889,182 @@ def build_term_sharded_blocked(host: PostingsHost, n_shards: int
     )
 
 
-def make_term_sharded_fused_scorer(index: BlockedTermShardedIndex,
-                                   mesh: Mesh, axis: str, k: int = 10):
+@dataclasses.dataclass
+class PackedTermShardedIndex:
+    """Stacked per-vocab-shard delta+bit-packed arrays for the fused
+    engine — the compressed twin of ``BlockedTermShardedIndex``.
+
+    Each shard owns a contiguous hash range of the vocabulary as whole
+    posting lists, re-compressed per shard: doc-id deltas bit-packed at
+    a per-block width (GLOBAL doc ids, so the doc/tile space is the full
+    corpus and identical on every shard), f16 tfs, plus the per-block
+    decode scalars and the build-time (block -> doc-tile) routing cache.
+    The fused kernel decodes blocks IN VMEM, so the compressed words are
+    the only posting bytes a query moves across HBM per shard.
+    """
+    sorted_hash: np.ndarray    # u32[S, Wmax]  (padded with 0xFFFFFFFF)
+    df: np.ndarray             # i32[S, Wmax]  global df (terms are whole)
+    block_offsets: np.ndarray  # i32[S, Wmax+1]
+    packed: np.ndarray         # u32[S, NBmax, WPB]  bit-packed deltas
+    block_tfs: np.ndarray      # f16[S, NBmax, BLOCK]
+    block_bits: np.ndarray     # i32[S, NBmax]  (1 on padding blocks)
+    block_base: np.ndarray     # i32[S, NBmax]
+    block_count: np.ndarray    # i32[S, NBmax]  (0 on padding blocks)
+    tile_first: np.ndarray     # i32[S, NBmax]
+    tile_count: np.ndarray     # i32[S, NBmax]
+    norm: np.ndarray           # f32[D] (replicated)
+    n_shards: int
+    num_docs: int
+    tile: int
+    block: int
+    words_per_block: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def _term_shard_subhosts(host: PostingsHost, n_shards: int):
+    """Slice the global posting lists into per-vocab-shard PostingsHost
+    sub-indexes (contiguous hash ranges, whole lists, GLOBAL doc ids) —
+    the one slicing both term-sharded builders share, so the HOR and
+    packed structures see identical per-shard term order and block
+    boundaries (that is what makes the two engines bit-identical)."""
+    order = np.argsort(host.term_hashes, kind="stable")
+    W = host.num_terms
+    bounds = np.linspace(0, W, n_shards + 1).astype(np.int64)
+    subs = []
+    for s in range(n_shards):
+        terms = order[bounds[s]:bounds[s + 1]]
+        lens = (host.offsets[terms + 1] - host.offsets[terms]).astype(np.int64)
+        offs = np.zeros(len(terms) + 1, dtype=np.int64)
+        np.cumsum(lens, out=offs[1:])
+        docs = np.zeros(int(offs[-1]), np.int32)
+        tfs = np.zeros(int(offs[-1]), np.float32)
+        for i, t in enumerate(terms):
+            a, bnd = host.offsets[t], host.offsets[t + 1]
+            docs[offs[i]:offs[i + 1]] = host.doc_ids[a:bnd]
+            tfs[offs[i]:offs[i + 1]] = host.tfs[a:bnd]
+        subs.append(PostingsHost(term_hashes=host.term_hashes[terms],
+                                 df=host.df[terms].astype(np.int32),
+                                 offsets=offs, doc_ids=docs, tfs=tfs,
+                                 num_docs=host.num_docs,
+                                 norm=host.norm, rank=host.rank))
+    wmax = int(np.max(np.diff(bounds)))
+    return subs, wmax
+
+
+def build_term_sharded_packed(host: PostingsHost, n_shards: int
+                              ) -> PackedTermShardedIndex:
+    """Per-vocab-shard re-compression: slice the global posting lists
+    per hash range, then delta+bit-pack each shard's lists (global doc
+    ids, per-block minimal widths) — so the term-partitioned read path
+    streams compressed bytes only, like the single-node packed engine."""
+    subs, wmax = _term_shard_subhosts(host, n_shards)
+    shards = [layouts.build_packed_csr(sub) for sub in subs]
+    block = shards[0].block
+    nbmax = max(int(ix.packed.shape[0]) for ix in shards)
+    wpb = max(ix.words_per_block for ix in shards)
+    S = n_shards
+    sh_a = np.full((S, wmax), 0xFFFFFFFF, np.uint32)
+    df_a = np.zeros((S, wmax), np.int32)
+    offs_a = np.zeros((S, wmax + 1), np.int32)
+    pk = np.zeros((S, nbmax, wpb), np.uint32)
+    bt = np.zeros((S, nbmax, block), np.float16)
+    bits_a = np.ones((S, nbmax), np.int32)     # padding blocks decode inert
+    base_a = np.zeros((S, nbmax), np.int32)
+    cnt_a = np.zeros((S, nbmax), np.int32)
+    tf_a = np.zeros((S, nbmax), np.int32)
+    tc_a = np.zeros((S, nbmax), np.int32)
+    for s, ix in enumerate(shards):
+        w = int(ix.sorted_hash.shape[0])
+        nb = int(ix.packed.shape[0])
+        sh_a[s, :w] = np.asarray(ix.sorted_hash)
+        df_a[s, :w] = np.asarray(ix.df)
+        offs_a[s, :w + 1] = np.asarray(ix.block_offsets)
+        offs_a[s, w + 1:] = offs_a[s, w]
+        pk[s, :nb, :ix.words_per_block] = np.asarray(ix.packed)
+        bt[s, :nb] = np.asarray(ix.block_tfs)
+        bits_a[s, :nb] = np.asarray(ix.block_bits)
+        base_a[s, :nb] = np.asarray(ix.block_base)
+        cnt_a[s, :nb] = np.asarray(ix.block_count)
+        tf_a[s, :nb] = np.asarray(ix.tile_first)
+        tc_a[s, :nb] = np.asarray(ix.tile_count)
+    return PackedTermShardedIndex(
+        sorted_hash=sh_a, df=df_a, block_offsets=offs_a, packed=pk,
+        block_tfs=bt, block_bits=bits_a, block_base=base_a,
+        block_count=cnt_a, tile_first=tf_a, tile_count=tc_a,
+        norm=host.norm.astype(np.float32), n_shards=S,
+        num_docs=host.num_docs, tile=layouts.ROUTE_TILE, block=block,
+        words_per_block=wpb,
+        max_blocks_per_term=max(ix.max_blocks_per_term for ix in shards),
+        route_span_max=max(ix.route_span_max for ix in shards),
+        route_pairs_max=max(ix.route_pairs_max for ix in shards),
+    )
+
+
+def make_term_sharded_fused_scorer(
+        index: BlockedTermShardedIndex | PackedTermShardedIndex,
+        mesh: Mesh, axis: str, k: int = 10, cap: int | None = None,
+        return_stats: bool = False):
     """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
 
     Term-partitioned fused engine: each shard scores only the query
     terms it owns through the fused Pallas kernel (partial scores over
-    the GLOBAL doc space), pays the term-sharding tax — a full [D] psum
-    of partials — then the candidate tier takes over: every shard
-    reduces its 1/S slice of the doc-tile grid to per-tile candidates
-    and an all-gather candidate merge yields the global top-k, so the
-    post-psum ranking tail is candidate-sized instead of dense.
-    """
+    the GLOBAL doc space; HOR blocks read in place, packed blocks
+    decoded IN VMEM so only compressed bytes cross HBM), pays the
+    term-sharding tax — a full [D] psum of partials — then the candidate
+    tier takes over: every shard reduces its 1/S slice of the doc-tile
+    grid to per-tile candidates and an all-gather candidate merge yields
+    the global top-k, so the post-psum ranking tail is candidate-sized
+    instead of dense.
+
+    ``cap`` bounds postings read per term at posting granularity (the
+    oracle's gather cap); with ``return_stats=True`` the scorer returns
+    ``((scores, ids), stats)`` where ``stats["truncated_terms"]`` counts
+    query terms whose posting list exceeded ``cap`` — AGGREGATED across
+    shards with a psum, the same way the multi-segment conjunctive sums
+    its per-segment truncation counters, so truncation on ANY shard is
+    surfaced."""
     from repro.distributed.topk import local_candidate_merge
     from repro.kernels.fused_decode_score import (
         Q_PAD, build_batched_pairs, default_k_tile,
-        extract_tile_candidates, fused_score_blocked_pallas)
+        extract_tile_candidates, fused_score_blocked_pallas,
+        fused_score_packed_pallas)
     from repro.kernels.ops import (expand_block_candidates,
                                     warn_on_overflow)
 
+    packed_layout = isinstance(index, PackedTermShardedIndex)
     arrs = index.device_arrays()
     num_docs, tile = index.num_docs, index.tile
     n_tiles = max(-(-num_docs // tile), 1)
     S = index.n_shards
+    block = (index.block if packed_layout
+             else int(index.block_docs.shape[-1]))
     m_blocks = max(index.max_blocks_per_term, 1)
+    if cap is not None:
+        m_blocks = max(min(m_blocks, -(-cap // block)), 1)
     k_tile = default_k_tile(k, tile)
     # per-shard slice of the tile grid for candidate extraction
     tiles_per = -(-n_tiles // S)
     chunk = tiles_per * tile
 
-    sharded = {n: P(axis) for n in
-               ("sorted_hash", "df", "block_offsets", "block_docs",
-                "block_tfs", "tile_first", "tile_count")}
+    names = ("sorted_hash", "df", "block_offsets", "tile_first",
+             "tile_count")
+    names += (("packed", "block_tfs", "block_bits", "block_base",
+               "block_count") if packed_layout
+              else ("block_docs", "block_tfs"))
+    sharded = {n: P(axis) for n in names}
     sharded["norm"] = P()
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(sharded, P()), out_specs=(P(), P()), check_vma=False)
+        in_specs=(sharded, P()), out_specs=(P(), P(), P()),
+        check_vma=False)
     def score(ix, qh):
         sq = {n: (v[0] if n != "norm" else v) for n, v in ix.items()}
         qh = dedup_query_hashes(qh)
@@ -798,22 +1073,36 @@ def make_term_sharded_fused_scorer(index: BlockedTermShardedIndex,
         pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[0] - 1)
         hit = (sq["sorted_hash"][pos] == qh) & (qh != 0)
         tid = jnp.where(hit, pos, -1)       # terms NOT on this shard miss
-        w = idf_fn(jnp.where(hit, sq["df"][pos], 0), num_docs)
+        df = jnp.where(hit, sq["df"][pos], 0)
+        w = idf_fn(df, num_docs)
+        if cap is not None:
+            # cap truncation on ANY shard is surfaced, never swallowed:
+            # per-shard counts psum like the multi-segment conjunctive
+            trunc = jax.lax.psum(
+                jnp.sum((hit & (df > cap)).astype(jnp.int32)), axis)
+        else:
+            trunc = jnp.int32(0)
 
-        cand_block, cand_valid, cand_q, cand_w, _ = \
+        cand_block, cand_valid, cand_q, cand_w, cand_cap = \
             expand_block_candidates(sq["block_offsets"], tid[None],
-                                    w[None], m_blocks,
-                                    sq["block_docs"].shape[-1])
+                                    w[None], m_blocks, block, cap=cap)
         max_pairs = max(min(index.route_pairs_max,
                             t * m_blocks * max(index.route_span_max, 1)), 8)
         pb, pt, pqw, pcap, ovf = build_batched_pairs(
             cand_block, cand_valid, cand_q, cand_w,
-            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs)
+            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs,
+            cand_cap=cand_cap)
         warn_on_overflow(ovf, "term-sharded fused engine")
         pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
-        partial = fused_score_blocked_pallas(
-            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
-            num_docs, tile)[0]
+        if packed_layout:
+            partial = fused_score_packed_pallas(
+                sq["packed"], sq["block_tfs"], pb, pt, pqw, pcap,
+                sq["block_bits"][pb], sq["block_base"][pb],
+                sq["block_count"][pb], num_docs, block, tile)[0]
+        else:
+            partial = fused_score_blocked_pallas(
+                sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
+                num_docs, tile)[0]
         # THE term-partitioned cost: a full [D] psum across shards
         scores = jax.lax.psum(partial, axis)
         qn2 = jax.lax.psum(jnp.sum(w * w), axis)
@@ -828,6 +1117,13 @@ def make_term_sharded_fused_scorer(index: BlockedTermShardedIndex,
         local = jax.lax.dynamic_slice(fpad, (s_idx * chunk,), (chunk,))
         v, ids = extract_tile_candidates(local[None], tile, k_tile)
         gids = jnp.where(ids[0] >= 0, ids[0] + s_idx * chunk, -1)
-        return local_candidate_merge(v[0], gids, k, axis)
+        vv, ii = local_candidate_merge(v[0], gids, k, axis)
+        return vv, ii, trunc
 
-    return jax.jit(lambda qh: score(arrs, qh))
+    fn = jax.jit(lambda qh: score(arrs, qh))
+    if return_stats:
+        def with_stats(qh):
+            vv, ii, trunc = fn(qh)
+            return (vv, ii), {"truncated_terms": int(trunc)}
+        return with_stats
+    return lambda qh: fn(qh)[:2]

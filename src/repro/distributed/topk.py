@@ -56,6 +56,25 @@ def merge_topk_candidates_host(values, ids, k: int):
             np.take_along_axis(i, order, axis=-1))
 
 
+def canonicalize_candidates(values: Array, ids: Array
+                            ) -> tuple[Array, Array]:
+    """Sort candidate lists by ascending doc id on the last axis.
+
+    ``merge_topk_candidates`` tie-breaks on the EARLIEST candidate among
+    equal values, so exact-tie parity with the dense oracle needs the
+    concatenated lists in ascending doc-id order.  Sources that are
+    naturally ascending (per-tile lists, contiguous shard runs) get that
+    for free; sources that interleave doc ranges — the mixed hor+packed
+    segment-stack groups, whose group-major concatenation is NOT doc
+    ordered — must canonicalize first.  Invalid candidates (id -1,
+    value -inf) sort to the front, where they only ever tie other
+    -inf entries, so they cannot displace a real candidate.
+    """
+    order = jnp.argsort(ids, axis=-1, stable=True)
+    return (jnp.take_along_axis(values, order, axis=-1),
+            jnp.take_along_axis(ids, order, axis=-1))
+
+
 def merge_topk_candidates(values: Array, ids: Array, k: int
                           ) -> tuple[Array, Array]:
     """Pure top-k merge of candidate (value, id) lists on the last axis.

@@ -259,7 +259,9 @@ def fused_score_packed_pallas(packed: Array, block_tfs: Array,
                               interpret: bool | None = None) -> Array:
     """Packed path: packed u32[NB, Wpb] words + f16 tfs stay compressed in
     HBM; decode happens inside the scoring step.  Same routing contract
-    as the HOR path plus per-pair (bits, base, count) decode scalars."""
+    as the HOR path plus per-pair (bits, base, count) decode scalars.
+    The term-sharded packed engine runs this kernel per vocab shard
+    (partial scores over the GLOBAL doc space, ahead of the [D] psum)."""
     nb, wpb = packed.shape
     np_pairs, q = pair_qw.shape
     n_tiles = -(-num_docs // tile)

@@ -365,9 +365,12 @@ def fused_segment_topk(index: BlockedIndex | PackedCsrIndex,
 
     Accepts either sealed-segment layout — HOR blocks (``seal_layout=
     "hor"``) or delta+bit-packed blocks (``"packed"``); the pytree
-    STRUCTURE is part of the jit key, so the two layouts compile
-    separately but segments of one layout still share warm size-class
-    entries."""
+    STRUCTURE is part of the jit key, so compilations key on
+    ``(size_class, layout)``: the two layouts compile separately but
+    segments of one layout still share warm size-class entries.  The
+    sharded serving tier applies the same keying to whole stacks
+    (``distributed.retrieval.stack_segment_shards`` groups segments on
+    ``(size_class, layout)`` and memoizes the compiled stack scorer)."""
     present = query_hashes != 0
     tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     vals, ids, overflow = fused_batched_topk(

@@ -69,8 +69,11 @@ def serialize_segmented(index: SegmentedIndex, lock=None) -> dict:
                    "min_run": index._policy.min_run},
         "rng_state": index._rng.bit_generator.state,
         "stats": dataclasses.asdict(index.stats),
+        # per-segment layout: a mixed hor+packed stack (per-seal layout
+        # overrides) must restore each segment in its ORIGINAL layout,
+        # not the index-wide default, for a bitwise structural roundtrip
         "segments": [{"doc_base": s.doc_base, "doc_span": s.doc_span,
-                      "n_postings": s.n_postings}
+                      "n_postings": s.n_postings, "layout": s.layout}
                      for s in index._segments],
     }
     state = {
@@ -122,7 +125,8 @@ def restore_segmented(state: dict) -> SegmentedIndex:
             int(sm["doc_base"]), int(sm["doc_span"]),
             np.asarray(state[f"seg{i}_doc_of"], np.int64),
             np.asarray(state[f"seg{i}_terms"], np.int64),
-            np.asarray(state[f"seg{i}_tfs"], np.float32))
+            np.asarray(state[f"seg{i}_tfs"], np.float32),
+            layout=sm.get("layout", meta["seal_layout"]))
         si._segments.append(seg)
     dl = _Delta(meta["delta"]["doc_cap"], meta["delta"]["post_cap"],
                 meta["delta"]["doc_base"])

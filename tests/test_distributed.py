@@ -74,6 +74,42 @@ for q in qh:
     assert set(np.asarray(ti).tolist()) == \
         set(np.asarray(ref.doc_ids).tolist())
 
+# 2d) PACKED term-sharded fused engine: per-vocab-shard re-compression,
+#     in-VMEM decode, [D] psum, sharded candidate extraction — must be
+#     BIT-identical (values and ids, ties included) to the HOR
+#     term-sharded engine, which shares its slicing and block geometry
+tp = retrieval.build_term_sharded_packed(host, 8)
+tpscorer = retrieval.make_term_sharded_fused_scorer(tp, mesh, "data", k=10)
+for q in qh:
+    pv, pi = tpscorer(jnp.asarray(q))
+    hv, hi = tfscorer(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(np.asarray(pi).tolist()) == \
+        set(np.asarray(ref.doc_ids).tolist())
+
+# 2e) cap truncation surfaces ACROSS shards: truncated_terms is psum'd
+#     (like the multi-segment conjunctive sums per-segment counters),
+#     and the capped ranking matches the capped single-node oracle
+cap = 8
+qt = qh[0]
+dfg = np.asarray(host.df)
+expect_trunc = sum(
+    1 for h in np.unique(qt[qt != 0])
+    for pos in [np.flatnonzero(host.term_hashes == h)]
+    if len(pos) and dfg[pos[0]] > cap)
+capped = retrieval.make_term_sharded_fused_scorer(
+    tp, mesh, "data", k=10, cap=cap, return_stats=True)
+(cv, ci), st = capped(jnp.asarray(qt))
+assert st["truncated_terms"] == expect_trunc, st
+ref_c = query.score_query(ref_ix, jnp.asarray(qt), k=10, cap=cap)
+np.testing.assert_allclose(np.asarray(cv), np.asarray(ref_c.scores),
+                           rtol=1e-5)
+
 # 2c) term-sharded vs doc-sharded fused agreement on a 2x2 mesh: docs
 #     partitioned over axis "x", vocabulary over axis "y" — the two
 #     fused engines must return identical rankings
@@ -147,6 +183,233 @@ np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
                            atol=1e-5)
 print("DISTRIBUTED_ALL_OK")
 """
+
+
+MIXED_STACK_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.text import corpus
+from repro.core import build, compaction
+from repro.core.build import TokenizedCorpus
+from repro.core.live_index import SegmentedIndex
+from repro.distributed import retrieval
+
+mesh = jax.make_mesh((4,), ("data",))
+tc = corpus.generate(corpus.CorpusSpec(num_docs=600, vocab=400,
+                                       avg_distinct=20, seed=13))
+si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=128,
+                    delta_posting_capacity=8192,
+                    policy=compaction.TieredPolicy(min_run=100))
+layouts_cycle = ["hor", "packed", "hor", "packed", "hor", "packed"]
+for i, a in enumerate(range(0, 600, 100)):
+    si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:a+100],
+                                 tc.doc_counts[a:a+100],
+                                 tc.term_hashes, 100))
+    si.seal(layout=layouts_cycle[i])
+si.delete([3, 155, 470, 599])
+
+stacks = retrieval.stack_segment_shards(si, 4)
+assert {m.layout for m, _ in stacks.groups} == {"hor", "packed"}
+scorer = retrieval.make_doc_sharded_segment_scorer(stacks, mesh, "data",
+                                                   k=10)
+qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes, 4, 3,
+                               num_docs=si.live_doc_count, seed=3)
+for q in qh:
+    vv, ids = scorer(jnp.asarray(q))
+    ref = si.topk(q[None], k=10)
+    # mixed hor+packed groups interleave doc ranges; the canonicalized
+    # candidate merge still reproduces the single-node ranking EXACTLY
+    # (ties included)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ref.doc_ids)[0])
+    np.testing.assert_allclose(np.asarray(vv),
+                               np.asarray(ref.scores)[0], rtol=1e-5)
+    assert not np.isin(np.asarray(ids), [3, 155, 470, 599]).any()
+print("MIXED_STACK_SHARDED_OK")
+
+# zero new jit entries on a same-class rebuild: seal one more segment
+# whose content is IDENTICAL to an earlier batch (so every quantized
+# static lands in an existing (size_class, layout) group), rebuild the
+# stack at the newer epoch, and the warm compiled scorer is reused
+snap = retrieval.stack_scorer_cache_sizes()
+si.add_batch(TokenizedCorpus(tc.doc_term_ids[0:100], tc.doc_counts[0:100],
+                             tc.term_hashes, 100))
+si.seal(layout="packed")
+stacks2 = retrieval.stack_segment_shards(si, 4)
+assert stacks2.signature() == stacks.signature(), (
+    stacks2.signature(), stacks.signature())
+scorer2 = retrieval.make_doc_sharded_segment_scorer(stacks2, mesh, "data",
+                                                    k=10)
+for q in qh[:2]:
+    vv, ids = scorer2(jnp.asarray(q))
+    ref = si.topk(q[None], k=10)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ref.doc_ids)[0])
+assert retrieval.stack_scorer_cache_sizes() == snap, (
+    snap, retrieval.stack_scorer_cache_sizes())
+print("MIXED_STACK_CACHE_OK")
+"""
+
+
+def test_mixed_stack_sharded_serving():
+    """Packed and mixed hor+packed sealed-segment stacks shard across 4
+    host devices, answer bit-identically to the single-node live index,
+    and a same-class stack rebuild reuses the warm compiled scorer
+    (zero new jit entries) — the PR-job guard on the packed distributed
+    tier."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", MIXED_STACK_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    assert "MIXED_STACK_SHARDED_OK" in out.stdout, out.stderr[-3000:]
+    assert "MIXED_STACK_CACHE_OK" in out.stdout, out.stderr[-3000:]
+
+
+EDGE_CASE_SCRIPT = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import build, layouts, query
+from repro.core.build import TokenizedCorpus
+from repro.distributed import retrieval
+
+mesh = jax.make_mesh((2,), ("data",))
+
+# engineered corpus: 8 terms with ascending hashes (hash-sorted order ==
+# term id), 1024 docs == exactly 2 doc tiles == one tile per shard
+H = np.array([10, 20, 30, 40, 50, 60, 70, 80], np.uint32)
+D = 1024
+docs, counts = [], []
+for d in range(D):
+    t, c = [0], [1]                      # term 0 in EVERY doc: deltas
+    if 512 <= d < 640:                   #   of 1 -> 1-bit packed blocks
+        t.append(6); c.append(5)         # term 6: tile-1 docs, strong tf
+    if d in (0, 700):
+        t.append(5); c.append(2)         # term 5: one block, gap of 700
+    if 100 <= d < 110:
+        t.append(3); c.append(1)         # term 3: last term of shard 0
+    if 200 <= d < 210:
+        t.append(4); c.append(1)         # term 4: first term of shard 1
+    if 300 <= d < 330:
+        t.append(2); c.append(1)
+    if 900 <= d < 910:
+        t.append(7); c.append(1)
+    docs.append(np.asarray(t, np.int64))
+    counts.append(np.asarray(c, np.int64))
+host = build.bulk_build(TokenizedCorpus(docs, counts, H, D))
+ref_ix = layouts.build_csr(host)
+
+tb = retrieval.build_term_sharded_blocked(host, 2)
+tp = retrieval.build_term_sharded_packed(host, 2)
+# term 0's consecutive doc ids really did pack at width 1
+assert (np.asarray(tp.block_bits)[np.asarray(tp.block_count) > 0] == 1
+        ).any(), np.asarray(tp.block_bits)
+sh = retrieval.make_term_sharded_fused_scorer(tb, mesh, "data", k=10)
+sp = retrieval.make_term_sharded_fused_scorer(tp, mesh, "data", k=10)
+
+# a query whose terms sit on BOTH sides of the vocab-shard boundary
+# (term 3 = last term of shard 0, term 4 = first term of shard 1), plus
+# the 1-bit and wide-delta terms
+queries = [np.array([40, 50, 10], np.uint32),     # boundary straddle
+           np.array([10, 60, 0], np.uint32),      # 1-bit + gap block
+           np.array([70, 10, 0], np.uint32)]
+for q in queries:
+    hv, hi = sh(jnp.asarray(q))
+    pv, pi = sp(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+    ref = query.score_query(ref_ix, jnp.asarray(q), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(np.asarray(pi).tolist()) == \
+        set(np.asarray(ref.doc_ids).tolist())
+print("EDGE_PARITY_OK")
+
+# 32-bit delta width: re-encode term 5's single block (deltas [1, 700])
+# at the full 32-bit width — the format is width-agnostic, so the
+# re-encoded index must answer bit-identically
+spos = 1                 # term 5 (hash 60) is slot 1 of shard 1's vocab
+blk = int(np.asarray(tp.block_offsets)[1, spos])
+deltas = np.zeros(128, np.int64)
+deltas[0], deltas[1] = 1, 700            # doc 0 (base -1), then doc 700
+wide = layouts._pack_block_np(deltas, 32, 128)
+wpb32 = len(wide)
+pk = np.zeros((tp.packed.shape[0], tp.packed.shape[1], wpb32), np.uint32)
+pk[:, :, :tp.packed.shape[2]] = tp.packed
+pk[1, blk, :] = 0
+pk[1, blk, :wpb32] = wide
+bits = tp.block_bits.copy()
+bits[1, blk] = 32
+tp32 = dataclasses.replace(tp, packed=pk, block_bits=bits,
+                           words_per_block=wpb32)
+sp32 = retrieval.make_term_sharded_fused_scorer(tp32, mesh, "data", k=10)
+for q in queries:
+    pv, pi = sp(jnp.asarray(q))
+    wv, wi = sp32(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(wv), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(pi))
+print("EDGE_32BIT_OK")
+
+# an all-tombstoned tile "winning" a shard-local top-k: kill every doc
+# of shard 1's tile (512..1023) — exactly where term 6's strong hits
+# live; the dead tile's candidates are all (-inf, -1) and must never
+# displace live docs in the merge
+norm_dead = host.norm.copy()
+norm_dead[512:1024] = 0.0
+host_dead = dataclasses.replace(host, norm=norm_dead)
+tb_d = retrieval.build_term_sharded_blocked(host_dead, 2)
+tp_d = retrieval.build_term_sharded_packed(host_dead, 2)
+ref_d = layouts.build_csr(host_dead)
+sh_d = retrieval.make_term_sharded_fused_scorer(tb_d, mesh, "data", k=10)
+sp_d = retrieval.make_term_sharded_fused_scorer(tp_d, mesh, "data", k=10)
+q6 = np.array([70, 10, 0], np.uint32)
+for sc in (sh_d, sp_d):
+    dv, di = sc(jnp.asarray(q6))
+    di = np.asarray(di)
+    assert not ((di >= 512) & (di < 1024)).any(), di
+    ref = query.score_query(ref_d, jnp.asarray(q6), k=10,
+                            cap=host.max_posting_len)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(ref.scores),
+                               rtol=1e-5)
+    assert set(di.tolist()) == set(np.asarray(ref.doc_ids).tolist())
+# a query hitting ONLY the dead tile returns no hits at all
+q_only = np.array([70, 0, 0], np.uint32)
+dv, di = sp_d(jnp.asarray(q_only))
+assert (np.asarray(di) == -1).all(), np.asarray(di)
+print("EDGE_TOMBSTONE_OK")
+
+# k greater than the shard-local candidate count (one 512-wide tile per
+# shard, k_tile caps at 512): the merge clamps and pads with -inf / -1
+k_big = 600
+sp_k = retrieval.make_term_sharded_fused_scorer(tp, mesh, "data", k=k_big)
+bv, bi = sp_k(jnp.asarray(queries[0]))
+ref = query.score_query(ref_ix, jnp.asarray(queries[0]), k=k_big,
+                        cap=host.max_posting_len)
+hits = np.asarray(ref.doc_ids) >= 0
+np.testing.assert_allclose(np.asarray(bv)[hits],
+                           np.asarray(ref.scores)[hits], rtol=1e-5)
+assert set(np.asarray(bi)[hits].tolist()) == \
+    set(np.asarray(ref.doc_ids)[hits].tolist())
+print("EDGE_KBIG_OK")
+"""
+
+
+def test_packed_term_sharded_edge_cases():
+    """Engineered bit-width and boundary cases through the packed
+    term-sharded fused path: 1-bit and 32-bit delta widths, query terms
+    straddling the vocab-shard boundary, an all-tombstoned tile that
+    would have won a shard-local top-k, and k exceeding the shard-local
+    candidate count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", EDGE_CASE_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    for marker in ("EDGE_PARITY_OK", "EDGE_32BIT_OK",
+                   "EDGE_TOMBSTONE_OK", "EDGE_KBIG_OK"):
+        assert marker in out.stdout, (marker, out.stderr[-3000:])
 
 
 @pytest.mark.parametrize("n_dev", [8])

@@ -1,4 +1,8 @@
 """Hypothesis property tests on system invariants."""
+import os
+import subprocess
+import sys
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,6 +14,8 @@ from repro.core import build, layouts, query
 from repro.core.layouts import _pack_block_np
 from repro.kernels import ref
 from repro.text import corpus
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 @st.composite
@@ -82,6 +88,267 @@ def test_incremental_build_invariant(spec):
     np.testing.assert_array_equal(merged.doc_ids, full.doc_ids)
     np.testing.assert_array_equal(merged.df, full.df)
     np.testing.assert_allclose(merged.norm, full.norm, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layout-parity fuzz suite: random corpora + random add/delete/compact/
+# seal schedules with per-seal random layout, asserting multi-segment
+# top-k (ties included) is identical across {jnp oracle, single-host
+# fused, doc-sharded segment stacks, term-sharded} x {hor, packed,
+# mixed}.  slow-marked: the daily full suite runs it, the PR job keeps
+# the fixed-schedule subprocess tests (test_distributed.py) instead.
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def live_schedules(draw):
+    docs = draw(st.integers(80, 200))
+    spec = corpus.CorpusSpec(
+        num_docs=docs, vocab=draw(st.integers(40, 150)),
+        avg_distinct=draw(st.integers(4, 14)),
+        seed=draw(st.integers(0, 10_000)))
+    n_batches = draw(st.integers(2, 4))
+    cuts = sorted(draw(st.lists(st.integers(1, docs - 1),
+                                min_size=n_batches - 1,
+                                max_size=n_batches - 1, unique=True)))
+    bounds = [0] + cuts + [docs]
+    steps = []
+    for _ in range(n_batches):
+        steps.append({
+            "layout": draw(st.sampled_from(["hor", "packed"])),
+            "delete": draw(st.integers(0, 5)),
+            "compact": draw(st.booleans()),
+        })
+    return spec, bounds, steps, draw(st.integers(0, 1000))
+
+
+def _run_schedule(spec, bounds, steps, seed):
+    """Drive a SegmentedIndex through the drawn schedule; returns the
+    index (delta sealed) and an rng for query sampling."""
+    from repro.core import compaction
+    from repro.core.build import TokenizedCorpus
+    rng = np.random.default_rng(seed)
+    tc = corpus.generate(spec)
+    from repro.core.live_index import SegmentedIndex
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=48,
+                        delta_posting_capacity=4096,
+                        policy=compaction.TieredPolicy(size_ratio=4.0,
+                                                       min_run=3))
+    for (a, b), step in zip(zip(bounds[:-1], bounds[1:]), steps):
+        si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:b],
+                                     tc.doc_counts[a:b],
+                                     tc.term_hashes, b - a))
+        si.seal(layout=step["layout"])
+        if step["delete"]:
+            live = np.flatnonzero(si.live_mask())
+            kill = rng.choice(live, size=min(step["delete"], len(live)),
+                              replace=False)
+            si.delete(kill)
+        if step["compact"]:
+            si.compact()
+    si.seal()                      # stragglers (post-delete reseals)
+    return si, tc, rng
+
+
+def _oracle_host(si):
+    """bulk_build of the live corpus at the current epoch + the global
+    ids of its (compact-renumbered) docs."""
+    tc_live, live_ids = si.export_live_corpus()
+    return build.bulk_build(tc_live), live_ids
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(sched=live_schedules())
+def test_layout_parity_fuzz_single_host(sched):
+    """Random schedules with per-seal random layout: the fused pallas
+    engine (over the resulting hor/packed/mixed stack), the jnp oracle
+    engine, the doc-sharded segment-stack scorer, and both term-sharded
+    fused layouts all reproduce the bulk-build oracle's ranking —
+    doc-partitioned paths bit-identically (ties included), term-sharded
+    hor and packed bit-identical to EACH OTHER."""
+    import jax
+    from repro.distributed import retrieval
+    si, tc, rng = _run_schedule(*sched)
+    if (si.live_doc_count == 0 or si.num_segments == 0
+            or int(np.asarray(si._df).sum()) == 0):
+        return
+    host, live_ids = _oracle_host(si)
+    if host.num_postings == 0:
+        return
+    k = 10
+    qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                   3, 3, num_docs=si.live_doc_count,
+                                   seed=int(rng.integers(1000)))
+    # oracle over the live corpus, ids mapped back to global
+    ref = query.make_scorer(layouts.build_blocked(host), k=k,
+                            cap=max(host.max_posting_len, 1))(
+        jnp.asarray(qh))
+    oid = np.asarray(ref.doc_ids)
+    want_ids = np.where(oid >= 0, live_ids[np.maximum(oid, 0)],
+                        -1).astype(np.int32)
+    want_scores = np.asarray(ref.scores)
+
+    # single-host fused (pallas candidates) and jnp engines
+    for engine in ("pallas", "jnp"):
+        got = si.topk(qh, k=k, engine=engine)
+        np.testing.assert_array_equal(np.asarray(got.doc_ids), want_ids)
+        np.testing.assert_allclose(np.asarray(got.scores), want_scores,
+                                   rtol=1e-5, atol=1e-7)
+
+    # doc-sharded segment stack (mixed-layout groups) — bit-identical
+    mesh = jax.make_mesh((1,), ("data",))
+    stacks = retrieval.stack_segment_shards(si, 1)
+    scorer = retrieval.make_doc_sharded_segment_scorer(stacks, mesh,
+                                                       "data", k=k)
+    for i, q in enumerate(qh):
+        vv, ids = scorer(jnp.asarray(q))
+        hit = np.isfinite(np.asarray(vv))
+        np.testing.assert_array_equal(
+            np.where(hit, np.asarray(ids), -1), want_ids[i])
+        np.testing.assert_allclose(np.asarray(vv)[hit],
+                                   want_scores[i][hit], rtol=1e-5,
+                                   atol=1e-7)
+
+    # term-sharded fused, both layouts, over the SAME live corpus:
+    # hor == packed bitwise; both match the oracle's ranking
+    tb = retrieval.build_term_sharded_blocked(host, 1)
+    tp = retrieval.build_term_sharded_packed(host, 1)
+    sh = retrieval.make_term_sharded_fused_scorer(tb, mesh, "data", k=k)
+    sp = retrieval.make_term_sharded_fused_scorer(tp, mesh, "data", k=k)
+    for i, q in enumerate(qh):
+        hv, hi = sh(jnp.asarray(q))
+        pv, pi = sp(jnp.asarray(q))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+        hit = np.isfinite(np.asarray(pv))
+        mapped = np.where((np.asarray(pi) >= 0) & hit,
+                          live_ids[np.maximum(np.asarray(pi), 0)], -1)
+        np.testing.assert_array_equal(mapped.astype(np.int32),
+                                      want_ids[i])
+        np.testing.assert_allclose(np.asarray(pv)[hit],
+                                   want_scores[i][hit], rtol=1e-5,
+                                   atol=1e-7)
+
+
+SHARDED_FUZZ_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings, strategies as st
+from repro.text import corpus
+from repro.core import build, compaction, layouts, query
+from repro.core.build import TokenizedCorpus
+from repro.core.live_index import SegmentedIndex
+from repro.distributed import retrieval
+
+MESHES = {2: jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",)),
+          4: jax.make_mesh((4,), ("data",))}
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(docs=st.integers(150, 300), vocab=st.integers(60, 200),
+       avg=st.integers(5, 14), seed=st.integers(0, 5000),
+       n_shards=st.sampled_from([2, 4]),
+       layouts_seq=st.lists(st.sampled_from(["hor", "packed"]),
+                            min_size=4, max_size=4),
+       n_del=st.integers(0, 8))
+def fuzz(docs, vocab, avg, seed, n_shards, layouts_seq, n_del):
+    mesh = MESHES[n_shards]
+    rng = np.random.default_rng(seed)
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=docs, vocab=vocab,
+                                           avg_distinct=avg, seed=seed))
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=128,
+                        delta_posting_capacity=8192,
+                        policy=compaction.TieredPolicy(min_run=100))
+    step = docs // 4
+    for i, a in enumerate(range(0, step * 4, step)):
+        b = min(a + step, docs)
+        si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:b],
+                                     tc.doc_counts[a:b],
+                                     tc.term_hashes, b - a))
+        si.seal(layout=layouts_seq[i])
+    if n_del:
+        live = np.flatnonzero(si.live_mask())
+        si.delete(rng.choice(live, size=min(n_del, len(live)),
+                             replace=False))
+    si.seal()
+    if (si.num_segments < n_shards or si.live_doc_count == 0
+            or int(np.asarray(si._df).sum()) == 0):
+        return
+    k = 10
+    qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                   2, 3, num_docs=si.live_doc_count,
+                                   seed=seed)
+
+    # doc-sharded stacks (hor/packed/mixed): bit-identical to the
+    # single-node live index (which is itself oracle-parity-tested)
+    stacks = retrieval.stack_segment_shards(si, n_shards)
+    scorer = retrieval.make_doc_sharded_segment_scorer(stacks, mesh,
+                                                       "data", k=k)
+    for q in qh:
+        vv, ids = scorer(jnp.asarray(q))
+        ref = si.topk(q[None], k=k)
+        np.testing.assert_array_equal(np.asarray(ids),
+                                      np.asarray(ref.doc_ids)[0])
+        np.testing.assert_allclose(np.asarray(vv),
+                                   np.asarray(ref.scores)[0],
+                                   rtol=1e-5, atol=1e-7)
+
+    # term-sharded over the live corpus: hor == packed BITWISE; both
+    # match the oracle up to float-tie permutations (the [D] psum
+    # regroups float adds across shards)
+    tc_live, live_ids = si.export_live_corpus()
+    host = build.bulk_build(tc_live)
+    if host.num_postings == 0:
+        return
+    ref_sc = query.make_scorer(layouts.build_blocked(host), k=k,
+                               cap=max(host.max_posting_len, 1))
+    tb = retrieval.build_term_sharded_blocked(host, n_shards)
+    tp = retrieval.build_term_sharded_packed(host, n_shards)
+    sh = retrieval.make_term_sharded_fused_scorer(tb, mesh, "data", k=k)
+    sp = retrieval.make_term_sharded_fused_scorer(tp, mesh, "data", k=k)
+    for q in qh:
+        hv, hi = sh(jnp.asarray(q))
+        pv, pi = sp(jnp.asarray(q))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+        ref = ref_sc(jnp.asarray(q[None]))
+        rv = np.asarray(ref.scores)[0]
+        rid = np.asarray(ref.doc_ids)[0]
+        np.testing.assert_allclose(np.asarray(pv), rv, rtol=1e-5,
+                                   atol=1e-7)
+        # the [D] psum regroups float adds across shards, so near-ties
+        # AT the k-th score may legally permute: every ref doc strictly
+        # above the k-th score must still be present
+        hit = rid >= 0
+        if hit.any():
+            kth = rv[hit][-1]
+            strong = hit & (rv > kth + max(abs(kth) * 1e-5, 1e-7))
+            got = set(np.asarray(pi).tolist())
+            assert set(rid[strong].tolist()) <= got, (rid, pi)
+
+
+fuzz()
+print("SHARDED_FUZZ_OK")
+"""
+
+
+@pytest.mark.slow
+def test_layout_parity_fuzz_sharded():
+    """The multi-device half of the fuzz suite (daily CI): random
+    corpora and mixed-layout seal schedules across 2- and 4-shard
+    meshes, doc-sharded stacks bit-identical to the live index and
+    term-sharded hor/packed bit-identical to each other (subprocess:
+    XLA device count must be set before jax initializes)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", SHARDED_FUZZ_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert "SHARDED_FUZZ_OK" in out.stdout, out.stderr[-4000:]
 
 
 @settings(max_examples=15, deadline=None)
