@@ -1,0 +1,79 @@
+"""CI latency-regression gate over BENCH_smoke.json artifacts.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --current benchmarks/artifacts/BENCH_smoke.json \
+      --baseline benchmarks/baselines/BENCH_smoke.json [--factor 2.0]
+
+Compares the dedicated smoke-gate latency (``results.gate.p99_us``) of a
+fresh run against the committed baseline and exits non-zero if the
+fresh p99 exceeds ``factor`` times the baseline p99.  Both files must
+carry the current ``benchmarks.common.SCHEMA`` — a schema bump fails
+the gate loudly instead of comparing incompatible numbers.
+
+The default factor is deliberately loose (2x): shared CI runners are
+noisy, and the gate exists to catch order-of-magnitude kernel
+regressions (a geometry change that stops fusing, an accidental dense
+fallback), not single-digit percentages — the campaign artifacts track
+those.  Environments are fingerprinted (``env`` block); a backend
+mismatch between baseline and current is also a loud failure, since
+e.g. comparing a TPU baseline against a CPU run gates nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import common
+
+
+def check(current_path: str, baseline_path: str,
+          factor: float = 2.0) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    current = common.read_bench(current_path)
+    baseline = common.read_bench(baseline_path)
+    problems: list[str] = []
+    cb, bb = (current["env"].get("backend"), baseline["env"].get("backend"))
+    if cb != bb:
+        problems.append(f"backend mismatch: current={cb!r} "
+                        f"baseline={bb!r} — refusing to compare")
+        return problems
+    try:
+        cur_p99 = float(current["results"]["gate"]["p99_us"])
+        base_p99 = float(baseline["results"]["gate"]["p99_us"])
+    except KeyError as e:
+        problems.append(f"missing gate stats ({e}) — artifact layout "
+                        f"changed without a schema bump?")
+        return problems
+    if base_p99 <= 0:
+        problems.append(f"baseline p99 {base_p99} is not positive")
+        return problems
+    ratio = cur_p99 / base_p99
+    line = (f"smoke gate p99: current={cur_p99:.1f}us "
+            f"baseline={base_p99:.1f}us ratio={ratio:.2f} "
+            f"(limit {factor:.2f}x)")
+    print(line)
+    if ratio > factor:
+        problems.append(f"REGRESSION: {line}")
+    if current["results"].get("suites_failed"):
+        problems.append(
+            f"{current['results']['suites_failed']} benchmark suite(s) "
+            f"failed in the smoke run")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--factor", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    problems = check(args.current, args.baseline, args.factor)
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        raise SystemExit(1)
+    print("gate passed")
+
+
+if __name__ == "__main__":
+    main()

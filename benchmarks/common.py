@@ -1,6 +1,12 @@
-"""Shared benchmark utilities: corpus tiers, timing, CSV emission."""
+"""Shared benchmark utilities: corpus tiers, timing, CSV emission, and
+the schema-versioned ``BENCH_<name>.json`` artifact writer shared by the
+smoke gate (``run.py --smoke``) and the scale campaign
+(``benchmarks.campaign``)."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 from typing import Callable
 
@@ -9,6 +15,13 @@ import numpy as np
 
 from repro.core import build
 from repro.text import corpus
+
+# Version of the BENCH_*.json artifact layout.  Bump when a field
+# changes meaning; consumers (CI regression gate, trajectory plots)
+# refuse mismatched schemas instead of misreading them.
+SCHEMA = "repro-bench/1"
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
 # CPU-runnable tier calibrated to the paper's posting-length REGIME
 # (paper: N_d/W ~ 1100 postings/term, query df ~ 0.3*D): docs=20k,
@@ -90,5 +103,93 @@ def time_host(fn: Callable, *args, reps: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+# rows captured by emit() since the last reset — write_bench() snapshots
+# them into the artifact so every suite's CSV line lands in the JSON too
+_RECORDS: list[dict] = []
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": derived})
+
+
+def summary_stats(samples_us) -> dict:
+    """p50/p99/mean in microseconds — the JSON twin of
+    ``latency_summary`` (same percentile math)."""
+    from repro.serve.metrics import percentiles
+    a = np.asarray(list(samples_us), np.float64)
+    p = percentiles(a, (50, 99))
+    return {"p50_us": round(float(p["p50"]), 1),
+            "p99_us": round(float(p["p99"]), 1),
+            "mean_us": round(float(np.mean(a)) if len(a) else 0.0, 1),
+            "reps": int(len(a))}
+
+
+def bench_env() -> dict:
+    """Machine/backend fingerprint stamped into every artifact, so a
+    trajectory of BENCH files is only compared within like environments."""
+    from repro.kernels.runtime import resolve_interpret
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "interpret": bool(resolve_interpret(None)),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def write_bench(name: str, results: dict | None = None,
+                config: dict | None = None,
+                out_dir: str | None = None) -> str:
+    """Write ``BENCH_<name>.json``: schema header, environment, the
+    caller's structured results, and every CSV row emitted since the
+    last ``reset_records()``.  Returns the path written."""
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {
+        "schema": SCHEMA,
+        "name": name,
+        "env": bench_env(),
+        "config": config or {},
+        "results": results or {},
+        "rows": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path
+
+
+def read_bench(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    return doc
+
+
+def smoke_gate_stats(reps: int = 30) -> dict:
+    """The one number CI gates on: p50/p99 of the fused candidates
+    scorer over the smoke corpus (jit-warmed, single process)."""
+    import jax.numpy as jnp
+
+    from repro.core import layouts, query
+    tc, h = bench_host(SMOKE_SPEC)
+    ix = layouts.build_blocked(h)
+    qh = corpus.sample_query_terms(h.df, h.term_hashes, 8, 3,
+                                   num_docs=h.num_docs)
+    scorer = query.make_scorer(ix, k=10, cap=h.max_posting_len,
+                               engine="pallas", backend="xla",
+                               mode="candidates")
+    samples = time_samples(scorer, jnp.asarray(qh), reps=reps, warmup=3)
+    return summary_stats(samples)

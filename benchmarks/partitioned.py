@@ -78,11 +78,23 @@ def main() -> None:
         err = (e.stderr or b"").decode() if isinstance(
             e.stderr, bytes) else (e.stderr or "")
         stderr = "subprocess timeout: " + err
+    expected = ["doc", "term", "term_fused_hor", "term_fused_packed"]
+    finished = []
     for line in stdout.splitlines():
         if line.startswith("RESULT"):
             _, name, us = line.split()
+            finished.append(name)
             emit(f"partitioned/{name}_sharded_8dev", float(us), "per_query")
-    if "RESULT" not in stdout:
+    # a timeout salvage that silently drops engines reads as "all
+    # measured" — name every dropped shard config explicitly
+    dropped = [n for n in expected if n not in finished]
+    for name in dropped:
+        emit(f"partitioned/{name}_sharded_8dev/DROPPED", 0.0,
+             "timed_out_before_measurement")
+    if dropped:
+        print(f"# partitioned: dropped {len(dropped)}/{len(expected)} "
+              f"engine configs: {','.join(dropped)}", file=sys.stderr)
+    if not finished:
         emit("partitioned/FAILED", 0.0, stderr[-200:].replace("\n", " "))
 
     # analytic production-scale wire (1M docs, 256 shards, k=10)

@@ -16,6 +16,7 @@ representative numbers).
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 import traceback
 
@@ -29,11 +30,13 @@ def main() -> None:
               ("roofline", roofline.main), ("churn", churn.main),
               ("serving", serving.main)]
     args = [a for a in sys.argv[1:]]
-    if "--smoke" in args:
+    smoke = "--smoke" in args
+    if smoke:
         args.remove("--smoke")
         common.set_smoke()
     only = args[0] if args else None
     print("name,us_per_call,derived")
+    common.reset_records()
     failed = 0
     for name, fn in suites:
         if only and name != only:
@@ -44,6 +47,15 @@ def main() -> None:
             failed += 1
             traceback.print_exc()
             print(f"{name}/FAILED,0.0,")
+    if smoke:
+        # the artifact CI gates on: suite CSV rows + a dedicated
+        # fused-scorer latency measurement (schema-versioned JSON)
+        gate = common.smoke_gate_stats()
+        common.write_bench(
+            "smoke",
+            results={"gate": gate, "suites_failed": failed},
+            config={"spec": dataclasses.asdict(common.SMOKE_SPEC),
+                    "only": only})
     if failed:
         raise SystemExit(1)
 

@@ -570,7 +570,11 @@ class BlockedIndex:
 _register(BlockedIndex)
 
 
-def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
+def build_blocked(h: PostingsHost, block: int = BLOCK,
+                  route_tile: int = ROUTE_TILE) -> BlockedIndex:
+    """``route_tile`` sets the doc-tile width of the build-time pair-
+    routing cache; the seal path passes the autotuned tile for the
+    segment's size class so sealed segments are born pre-tuned."""
     order = np.argsort(h.term_hashes, kind="stable")
     lengths = np.diff(h.offsets)[order]
     nblocks = -(-lengths // block)
@@ -600,7 +604,7 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
                     np.where(bd >= 0, bd, np.iinfo(np.int32).max).min(axis=1),
                     0).astype(np.int32)
     bmax = bd.max(axis=1).astype(np.int32)
-    tfirst, tcount = _block_tile_routing(bmin, bmax, h.num_docs, ROUTE_TILE)
+    tfirst, tcount = _block_tile_routing(bmin, bmax, h.num_docs, route_tile)
     return BlockedIndex(
         sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
         df=jnp.asarray(h.df[order].astype(np.int32)),
@@ -612,7 +616,7 @@ def build_blocked(h: PostingsHost, block: int = BLOCK) -> BlockedIndex:
         max_blocks_per_term=int(nblocks.max()) if len(nblocks) else 0,
         block=block,
         tile_first=jnp.asarray(tfirst), tile_count=jnp.asarray(tcount),
-        route_tile=ROUTE_TILE,
+        route_tile=int(route_tile),
         route_pairs_max=int(tcount.sum()),
         route_span_max=int(tcount.max()) if len(tcount) else 0,
     )
@@ -869,7 +873,8 @@ def _pack_block_np(deltas: np.ndarray, bits: int, block: int = BLOCK
 
 
 def build_packed_csr(h: PostingsHost, max_bits: int = 32,
-                     block: int = BLOCK) -> PackedCsrIndex:
+                     block: int = BLOCK,
+                     route_tile: int = ROUTE_TILE) -> PackedCsrIndex:
     order = np.argsort(h.term_hashes, kind="stable")
     lengths = np.diff(h.offsets)[order]
     nblocks = np.maximum(-(-lengths // block), (lengths > 0).astype(np.int64))
@@ -912,7 +917,7 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
     for i, b in enumerate(blocks_packed):
         packed[i, :len(b)] = b
     tfirst, tcount = _block_tile_routing(min_arr, max_arr, h.num_docs,
-                                         ROUTE_TILE)
+                                         route_tile)
     return PackedCsrIndex(
         sorted_hash=jnp.asarray(h.term_hashes[order].astype(np.uint32)),
         df=jnp.asarray(h.df[order].astype(np.int32)),
@@ -926,7 +931,7 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
         block=block,
         block_min=jnp.asarray(min_arr), block_max=jnp.asarray(max_arr),
         tile_first=jnp.asarray(tfirst), tile_count=jnp.asarray(tcount),
-        route_tile=ROUTE_TILE,
+        route_tile=int(route_tile),
         route_pairs_max=int(tcount.sum()),
         route_span_max=int(tcount.max()) if len(tcount) else 0,
     )

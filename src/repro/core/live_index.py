@@ -105,7 +105,7 @@ from repro.core.build import TokenizedCorpus
 from repro.core.layouts import DocTable, PostingsHost
 from repro.core.query import QueryResult, final_scores
 from repro.distributed.topk import merge_topk_candidates_host
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.kernels.fused_decode_score import (TILE, default_k_tile,
                                               extract_tile_candidates)
 
@@ -381,10 +381,20 @@ class LiveView:
     def topk(self, query_hashes, k: int, *, cap: int | None = None,
              rank_blend: float = 0.0, engine: str = "pallas",
              mode: str = "candidates", backend: str = "pallas",
-             return_stats: bool = False):
+             return_stats: bool = False, tune=None):
         """Batched top-k over this view's delta + sealed segments — the
         same contract as ``SegmentedIndex.topk``, evaluated against the
-        pinned epoch."""
+        pinned epoch.
+
+        Kernel geometry resolves PER SEGMENT from the active tuning
+        table (``tune`` overrides it for every segment): each sealed
+        segment's (backend, size_class, layout) picks its own tile
+        width / reducer / unroll, so a view mixing a 4k-doc segment and
+        a 512k-doc segment runs each at its tuned shape.  The delta
+        always scores at the default tile (its buffers are
+        capacity-padded, not size-classed) with ``k_tile`` clamped to
+        that tile — exactness only needs ``k_tile >= min(k, tile)`` per
+        SOURCE, and the host merge accepts ragged widths."""
         if engine not in ("pallas", "jnp"):
             raise ValueError(f"unknown engine: {engine!r}")
         if mode not in ("candidates", "dense"):
@@ -394,9 +404,15 @@ class LiveView:
             raise ValueError("query_hashes must be [B, T]")
         qh, tids, idf_w, qnorm = self._prep(qh)
         qh_dev = jnp.asarray(qh)
-        k_tile = default_k_tile(k)
+        k_tile = default_k_tile(k)        # delta path: TILE-wide tiles
         vals, ids, overflows = [], [], []
         for seg in self.segments:
+            cfg = (tune if tune is not None else autotune.lookup(
+                backend, int(seg.index.docs.num_docs), seg.layout))
+            seg_kt = cfg.resolve_k_tile(k)
+            mp = ops.round_up_pairs(
+                ops.scaled_pairs_budget(seg.index, cfg.tile),
+                cfg.pairs_per_step)
             c = int(cap) if cap is not None else seg.index.max_posting_len
             b = jnp.asarray(np.int32(seg.doc_base))
             if engine == "jnp":
@@ -405,14 +421,15 @@ class LiveView:
                     rank_blend=rank_blend)
             elif mode == "dense":
                 v, g, o = ops.fused_segment_dense_topk(
-                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
-                    max_pairs=seg.index.route_pairs_max,
-                    rank_blend=rank_blend, backend=backend)
+                    seg.index, qh_dev, idf_w, b, k_tile=seg_kt, cap=c,
+                    max_pairs=mp, rank_blend=rank_blend, tile=cfg.tile,
+                    backend=backend, q_pad=cfg.q_pad)
             else:
                 v, g, o = ops.fused_segment_topk(
-                    seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
-                    max_pairs=seg.index.route_pairs_max,
-                    rank_blend=rank_blend, backend=backend)
+                    seg.index, qh_dev, idf_w, b, k_tile=seg_kt, cap=c,
+                    max_pairs=mp, rank_blend=rank_blend, tile=cfg.tile,
+                    backend=backend, q_pad=cfg.q_pad, reducer=cfg.reducer,
+                    pairs_per_step=cfg.pairs_per_step)
             # keep device arrays until every segment is dispatched —
             # transferring here would serialize the per-segment launches
             vals.append(v)
@@ -652,11 +669,22 @@ class SegmentedIndex:
 
     # -- mutation: add ------------------------------------------------------
 
-    def add_batch(self, corpus: TokenizedCorpus) -> None:
+    def add_batch(self, corpus: TokenizedCorpus, *,
+                  refresh_norms: bool = True) -> None:
         """Ingest a tokenized batch: unify vocabularies (vectorized
         remap), assign fresh ascending doc ids, append to the delta
         (sealing when full), update live df exactly, refresh norms, and
-        let the tiered policy compact."""
+        let the tiered policy compact.
+
+        ``refresh_norms=False`` defers the norm recomputation — an
+        O(all live postings) pass per batch that turns a streaming
+        build quadratic.  Norms depend only on the FINAL global df, so
+        a streaming ingest loop may pass False for every batch and call
+        ``self.refresh_norms()`` once at the end: the result is
+        bit-identical to per-batch refreshing (the campaign's streaming
+        parity test asserts this).  Until that call, every doc norm is
+        0 and queries return no hits — deferral is a BUILD-loop tool,
+        not a serving mode."""
         nd = corpus.num_docs
         merged, remap = build_mod.merge_vocab(
             self._hashes, np.asarray(corpus.term_hashes, np.uint32))
@@ -723,8 +751,18 @@ class SegmentedIndex:
                                flat_tfs[s:e])
             d += m
         self._delta_dirty = True
-        self._refresh_norms()
+        if refresh_norms:
+            self._refresh_norms()
         self._maybe_compact()
+        self._bump_epoch()
+
+    def refresh_norms(self) -> None:
+        """Recompute every live doc norm from the current global df and
+        push the refreshed metadata to each segment's device DocTable.
+        Streaming builds that deferred per-batch refreshes
+        (``add_batch(..., refresh_norms=False)``) MUST call this before
+        serving queries."""
+        self._refresh_norms()
         self._bump_epoch()
 
     def _direct_seal(self, terms: np.ndarray, tfs: np.ndarray) -> None:
@@ -837,6 +875,11 @@ class SegmentedIndex:
             raise ValueError(f"unknown seal layout: {layout!r}")
         w = len(self._hashes)
         d_pad = layouts.size_class(span, base=layouts.ROUTE_TILE)
+        # seal/compaction emit segments already tuned for their size
+        # class: the routing cache is built at the tile width the active
+        # tuning table picked for (pallas, d_pad, layout) — queries at
+        # other widths fall back to the scaled budget path
+        route_tile = autotune.lookup("pallas", d_pad, layout).tile
         order = np.lexsort((doc_of, terms))          # term-major for bulk
         df_seg = (np.bincount(terms, minlength=w) if len(terms)
                   else np.zeros(w, np.int64))
@@ -852,7 +895,7 @@ class SegmentedIndex:
             tfs=tfs[order].astype(np.float32), num_docs=d_pad,
             norm=norm_pad, rank=rank_pad)
         if layout == "packed":
-            ix = layouts.build_packed_csr(host)
+            ix = layouts.build_packed_csr(host, route_tile=route_tile)
             ix = layouts.pad_packed_to_class(
                 ix,
                 nb_pad=layouts.size_class(int(ix.packed.shape[0])),
@@ -864,7 +907,7 @@ class SegmentedIndex:
                 route_span_max=layouts.size_class(ix.route_span_max,
                                                   base=8))
         else:
-            ix = layouts.build_blocked(host)
+            ix = layouts.build_blocked(host, route_tile=route_tile)
             nb = int(ix.block_docs.shape[0])
             mpl_q = layouts.size_class(ix.max_posting_len)
             ix = layouts.pad_blocked_to_class(
@@ -1009,7 +1052,7 @@ class SegmentedIndex:
     def topk(self, query_hashes, k: int, *, cap: int | None = None,
              rank_blend: float = 0.0, engine: str = "pallas",
              mode: str = "candidates", backend: str = "pallas",
-             return_stats: bool = False):
+             return_stats: bool = False, tune=None):
         """Batched top-k over delta + every sealed segment.
 
         query_hashes u32[B, T].  One fused candidate-kernel launch per
@@ -1020,11 +1063,13 @@ class SegmentedIndex:
         ``cap`` defaults to each segment's (quantized) full posting
         length — the exact-parity setting.  Evaluates against the
         current epoch's pinned view (``view()``), which is also what the
-        serving tier queries directly."""
+        serving tier queries directly.  ``tune`` overrides the active
+        tuning table's per-segment kernel geometry (see
+        ``LiveView.topk``)."""
         return self.view().topk(query_hashes, k, cap=cap,
                                 rank_blend=rank_blend, engine=engine,
                                 mode=mode, backend=backend,
-                                return_stats=return_stats)
+                                return_stats=return_stats, tune=tune)
 
     def conjunctive(self, query_hashes, k: int, cap: int):
         """AND semantics over the whole live index for ONE query [T].

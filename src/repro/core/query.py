@@ -141,7 +141,8 @@ def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
                         rank_blend: float = 0.0,
                         max_pairs: int | None = None,
                         backend: str = "pallas",
-                        mode: str = "candidates"):
+                        mode: str = "candidates",
+                        tune: Any = None):
     """Batched evaluation through the fused decode-and-score Pallas
     engine (one HBM pass over the shared posting blocks for the whole
     batch).  Requires a BlockedIndex or PackedCsrIndex.
@@ -155,12 +156,20 @@ def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
     Returns (QueryResult, stats) where stats carries the routing
     ``pair_overflow`` counter — nonzero means postings were DROPPED
     because ``max_pairs`` was undersized, never silently.
+
+    ``tune`` is an optional ``kernels.autotune.TuneConfig``; ``None``
+    resolves the ACTIVE tuning table for this index's (backend,
+    size_class, layout) — which is the historical default geometry
+    while the table is empty.
     """
-    from repro.kernels import ops   # engine dispatch (avoids import cycle)
+    from repro.kernels import autotune, ops   # (late: avoids import cycle)
     from repro.distributed.topk import merge_topk_candidates
 
     if mode not in ("candidates", "dense"):
         raise ValueError(f"unknown fused-engine mode: {mode!r}")
+    if tune is None:
+        tune = autotune.lookup(backend, int(index.docs.num_docs),
+                               autotune.layout_of(index))
     query_hashes = dedup_query_hashes(query_hashes)
     present = query_hashes != 0                            # [B, T]
     term_ids = jnp.where(present, index.lookup_terms(query_hashes), -1)
@@ -171,13 +180,15 @@ def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
     if mode == "candidates":
         cand_v, cand_i, overflow = ops.fused_batched_topk(
             index, term_ids, idf_t, cap, k, rank_blend=rank_blend,
-            max_pairs=max_pairs, backend=backend)
+            max_pairs=max_pairs, backend=backend, tile=tune.tile,
+            k_tile=tune.resolve_k_tile(k), q_pad=tune.q_pad,
+            reducer=tune.reducer, pairs_per_step=tune.pairs_per_step)
         ops.warn_on_overflow(overflow, "fused engine")
         top_scores, top_docs = merge_topk_candidates(cand_v, cand_i, k)
     else:
         scores, overflow = ops.fused_batched_scores(
             index, term_ids, idf_t, cap, max_pairs=max_pairs,
-            backend=backend)
+            backend=backend, tile=tune.tile, q_pad=tune.q_pad)
         ops.warn_on_overflow(overflow, "fused engine")
         # identical scoring tail to score_query (the parity oracle)
         qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_t * idf_t, axis=1), 1e-12))
@@ -193,7 +204,7 @@ def fused_score_queries(index: Any, query_hashes: Array, k: int, cap: int,
 def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
                 engine: str = "jnp", max_pairs: int | None = None,
                 backend: str = "pallas", mode: str = "candidates",
-                return_stats: bool = False
+                return_stats: bool = False, tune: Any = None
                 ) -> Callable[[Array], QueryResult]:
     """jit-compiled batched scorer with the index captured as constants.
 
@@ -205,6 +216,12 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
     ``backend`` tunes the fused engine's lowering ("pallas" auto /
     "pallas-tpu" / "xla" plain-HLO with the same block dedup).  With
     ``return_stats=True`` the scorer returns (QueryResult, stats).
+
+    ``tune``: explicit ``kernels.autotune.TuneConfig`` kernel geometry;
+    ``None`` resolves the ACTIVE tuning table at trace time (an empty
+    table yields the historical defaults).  The resolved geometry is
+    captured in the jitted scorer — swap the active table BEFORE
+    building a scorer, not after.
     """
     if engine not in ("jnp", "pallas"):
         raise ValueError(f"unknown engine: {engine!r}")
@@ -224,7 +241,7 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
             return index.topk(query_hashes, k, cap=cap,
                               rank_blend=rank_blend, engine=engine,
                               mode=mode, backend=backend,
-                              return_stats=return_stats)
+                              return_stats=return_stats, tune=tune)
         return live_scorer
     if engine == "pallas":
         from repro.core.layouts import BlockedIndex, PackedCsrIndex
@@ -238,7 +255,7 @@ def make_scorer(index: Any, k: int, cap: int, rank_blend: float = 0.0,
         if engine == "pallas":
             result, stats = fused_score_queries(
                 index, query_hashes, k=k, cap=cap, rank_blend=rank_blend,
-                max_pairs=max_pairs, backend=backend, mode=mode)
+                max_pairs=max_pairs, backend=backend, mode=mode, tune=tune)
         else:
             result = score_queries(index, query_hashes, k=k, cap=cap,
                                    rank_blend=rank_blend)

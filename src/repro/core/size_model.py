@@ -97,3 +97,34 @@ def packed_csr_layout_bytes(s: CorpusStats, mean_bits: float = 12.0,
     word_table = s.W * (id_bytes + id_bytes)
     doc_table = s.D * (2 * tf_bytes)
     return postings + offsets + word_table + doc_table
+
+
+# ---------------------------------------------------------------------------
+# tuning-table hooks (kernels/autotune.py)
+# ---------------------------------------------------------------------------
+
+
+def tuning_size_class(num_docs: int, route_tile: int = 512) -> int:
+    """Size-class key for the kernel tuning table.
+
+    Matches the seal path's doc-count quantization exactly
+    (``layouts.size_class(span, base=ROUTE_TILE)`` in
+    ``SegmentedIndex._build_segment``), so a config tuned on one sealed
+    segment applies to every segment of the same padded class — and the
+    key is idempotent (``tuning_size_class(d_pad) == d_pad``), letting
+    query-time lookups key on the segment's already-padded doc count.
+    """
+    n = max(int(num_docs), 1)
+    c = max(int(route_tile), 1)
+    while c < n:
+        c *= 2
+    return c
+
+
+def candidate_bytes_per_query(num_docs: int, tile: int, k_tile: int) -> int:
+    """HBM bytes of per-tile candidates one query emits: the (value, id)
+    pair lists the fused candidate kernels write instead of a dense
+    score row.  The autotuner uses this to break timing ties toward the
+    geometry with the smaller output footprint."""
+    n_tiles = max(-(-int(num_docs) // max(int(tile), 1)), 1)
+    return n_tiles * int(k_tile) * 8

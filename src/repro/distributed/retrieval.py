@@ -413,18 +413,27 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
     and a thin all-gather candidate merge produces the global answer —
     the ODYS-style per-partition extraction + merge tier."""
     from repro.distributed.topk import local_candidate_merge
+    from repro.kernels import autotune
     from repro.kernels.fused_decode_score import (
-        Q_PAD, build_batched_pairs, default_k_tile,
-        fused_topk_blocked_pallas)
+        build_batched_pairs, default_k_tile, fused_topk_blocked_pallas)
     from repro.kernels.ops import (expand_block_candidates,
-                                    warn_on_overflow)
+                                    round_up_pairs, warn_on_overflow)
 
     arrs = index.device_arrays()
     dmax, tile = index.dmax, index.tile
     n_tiles = max(-(-dmax // tile), 1)
     num_docs = index.num_docs
     m_blocks = max(index.max_blocks_per_term, 1)
-    k_tile = default_k_tile(k, tile)
+    # tuned geometry for this shard size — the tile itself is pinned by
+    # the sharded routing arrays, so only the routing-free axes (k_pad,
+    # q_pad, reducer, unroll) follow the tuning table
+    cfg = autotune.lookup("pallas", dmax, "hor")
+    q_pad = cfg.q_pad
+    pps = cfg.pairs_per_step
+    if cfg.tile == tile:
+        k_tile = cfg.resolve_k_tile(k)
+    else:
+        k_tile = min(default_k_tile(k, tile, cfg.k_pad), tile)
 
     sharded = {n: P(axis) for n in
                ("sorted_hash", "df_global", "block_offsets", "block_docs",
@@ -450,19 +459,24 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
                                     sq["block_docs"].shape[-1])
         max_pairs = max(min(index.route_pairs_max,
                             t * m_blocks * max(index.route_span_max, 1)), 8)
+        if pps > 1:
+            # run-aligned padding inserts up to pps-1 no-op pairs per tile
+            max_pairs += n_tiles * (pps - 1)
+        max_pairs = round_up_pairs(max_pairs, pps)
         pb, pt, pqw, pcap, ovf = build_batched_pairs(
             cand_block, cand_valid, cand_q, cand_w,
-            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs)
+            sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs,
+            pairs_per_step=pps)
         # budget above is exact, so this won't fire unless the budget
         # formula is ever loosened
         warn_on_overflow(ovf, "doc-sharded fused engine")
-        pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+        pqw = jnp.pad(pqw, ((0, 0), (0, q_pad - 1)))
         qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
-        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
+        qn = jnp.full((q_pad,), 1.0, jnp.float32).at[0].set(qnorm)
         vals, ids = fused_topk_blocked_pallas(
             sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
             sq["norm"], jnp.zeros_like(sq["norm"]), qn, dmax, k_tile,
-            tile=tile)
+            tile=tile, reducer=cfg.reducer, pairs_per_step=pps)
         gids = jnp.where(ids[0] >= 0, ids[0] + sq["doc_base"], -1)
         return local_candidate_merge(vals[0], gids, k, axis)
 
@@ -706,15 +720,26 @@ def stack_scorer_cache_sizes() -> dict:
 
 
 def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
-                        metas: tuple):
+                        metas: tuple, cfgs: tuple = ()):
     from repro.distributed.topk import (canonicalize_candidates,
                                         local_candidate_merge)
+    from repro.kernels import autotune
     from repro.kernels.fused_decode_score import (
-        Q_PAD, build_batched_pairs, default_k_tile,
+        build_batched_pairs, default_k_tile,
         fused_topk_blocked_pallas, fused_topk_packed_pallas)
-    from repro.kernels.ops import expand_block_candidates
+    from repro.kernels.ops import expand_block_candidates, round_up_pairs
 
-    k_tile = default_k_tile(k, tile)
+    if not cfgs:
+        cfgs = tuple(autotune.lookup("pallas", m.d_pad, m.layout)
+                     for m in metas)
+
+    def _group_k_tile(cfg):
+        # the stack tile is pinned by the sharded routing arrays; only
+        # apply the tuned k_tile when the table agrees on the tile, else
+        # fall back to the tuned k_pad quantum at the stack tile
+        if cfg.tile == tile:
+            return cfg.resolve_k_tile(k)
+        return min(default_k_tile(k, tile, cfg.k_pad), tile)
     group_specs = [{n: P(axis) for n in _group_array_names(m.layout)}
                    for m in metas]
     in_specs = ({"groups": group_specs, "vocab_hash": P(),
@@ -736,15 +761,20 @@ def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
         vhit = (vh[vpos] == qh) & (qh != 0)
         w = idf_fn(jnp.where(vhit, vdf[vpos], 0), ix["live_docs"])
         qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
-        qn = jnp.full((Q_PAD,), 1.0, jnp.float32).at[0].set(qnorm)
         all_v, all_i = [], []
-        for meta, g_arrs in zip(metas, ix["groups"]):
+        for meta, cfg, g_arrs in zip(metas, cfgs, ix["groups"]):
             sq = {n: v[0] for n, v in g_arrs.items()}   # drop shard dim
             n_tiles = max(-(-meta.d_pad // tile), 1)
             m_blocks = max(meta.max_blocks_per_term, 1)
+            k_tile = _group_k_tile(cfg)
+            pps = cfg.pairs_per_step
+            qn = jnp.full((cfg.q_pad,), 1.0, jnp.float32).at[0].set(qnorm)
             max_pairs = max(min(meta.route_pairs_max,
                                 t * m_blocks * max(meta.route_span_max, 1)),
                             8)
+            if pps > 1:
+                max_pairs += n_tiles * (pps - 1)
+            max_pairs = round_up_pairs(max_pairs, pps)
             for g in range(meta.n_slots):             # static stack depth
                 pos = jnp.searchsorted(sq["sorted_hash"][g],
                                        qh).astype(jnp.int32)
@@ -758,21 +788,23 @@ def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
                 pb, pt, pqw, pcap, _ovf = build_batched_pairs(
                     cand_block, cand_valid, cand_q, cand_w,
                     sq["tile_first"][g], sq["tile_count"][g], n_tiles, 1,
-                    max_pairs)
-                pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+                    max_pairs, pairs_per_step=pps)
+                pqw = jnp.pad(pqw, ((0, 0), (0, cfg.q_pad - 1)))
                 if meta.layout == "packed":
                     vals, ids = fused_topk_packed_pallas(
                         sq["packed"][g], sq["block_tfs"][g], pb, pt, pqw,
                         pcap, sq["block_bits"][g][pb],
                         sq["block_base"][g][pb], sq["block_count"][g][pb],
                         sq["norm"][g], jnp.zeros_like(sq["norm"][g]), qn,
-                        meta.d_pad, meta.block, k_tile, tile=tile)
+                        meta.d_pad, meta.block, k_tile, tile=tile,
+                        reducer=cfg.reducer, pairs_per_step=pps)
                 else:
                     vals, ids = fused_topk_blocked_pallas(
                         sq["block_docs"][g], sq["block_tfs"][g], pb, pt,
                         pqw, pcap, sq["norm"][g],
                         jnp.zeros_like(sq["norm"][g]), qn, meta.d_pad,
-                        k_tile, tile=tile)
+                        k_tile, tile=tile,
+                        reducer=cfg.reducer, pairs_per_step=pps)
                 all_v.append(vals[0])
                 all_i.append(jnp.where(ids[0] >= 0,
                                        ids[0] + sq["doc_base"][g], -1))
@@ -807,12 +839,19 @@ def make_doc_sharded_segment_scorer(index: SegmentStackShards, mesh: Mesh,
             f"stack was built for {index.n_shards} shards but mesh axis "
             f"{axis!r} has {mesh.shape[axis]} devices — shard_map would "
             f"silently drop whole per-shard stacks")
+    from repro.kernels import autotune
+    metas = index.signature()
+    # the active tuning table is part of the compiled program — key the
+    # cache on the resolved per-group configs so swapping tables (or an
+    # empty table, which resolves to historical defaults) never serves a
+    # stale geometry
+    cfgs = tuple(autotune.lookup("pallas", m.d_pad, m.layout)
+                 for m in metas)
     key = (mesh, axis, k, index.tile, index.n_shards,
-           int(index.vocab_hash.shape[0]), index.signature())
+           int(index.vocab_hash.shape[0]), metas, cfgs)
     fn = _STACK_SCORER_CACHE.get(key)
     if fn is None:
-        fn = _build_stack_scorer(mesh, axis, k, index.tile,
-                                 index.signature())
+        fn = _build_stack_scorer(mesh, axis, k, index.tile, metas, cfgs)
         _STACK_SCORER_CACHE[key] = fn
     arrs = index.device_arrays()
     return lambda qh: fn(arrs, qh)
@@ -1031,8 +1070,9 @@ def make_term_sharded_fused_scorer(
     its per-segment truncation counters, so truncation on ANY shard is
     surfaced."""
     from repro.distributed.topk import local_candidate_merge
+    from repro.kernels import autotune
     from repro.kernels.fused_decode_score import (
-        Q_PAD, build_batched_pairs, default_k_tile,
+        build_batched_pairs, default_k_tile,
         extract_tile_candidates, fused_score_blocked_pallas,
         fused_score_packed_pallas)
     from repro.kernels.ops import (expand_block_candidates,
@@ -1048,7 +1088,15 @@ def make_term_sharded_fused_scorer(
     m_blocks = max(index.max_blocks_per_term, 1)
     if cap is not None:
         m_blocks = max(min(m_blocks, -(-cap // block)), 1)
-    k_tile = default_k_tile(k, tile)
+    # dense-score kernels: only the routing-free geometry (query-lane pad
+    # and candidate quantum) follows the tuning table here
+    cfg = autotune.lookup("pallas", num_docs,
+                          "packed" if packed_layout else "hor")
+    q_pad = cfg.q_pad
+    if cfg.tile == tile:
+        k_tile = cfg.resolve_k_tile(k)
+    else:
+        k_tile = min(default_k_tile(k, tile, cfg.k_pad), tile)
     # per-shard slice of the tile grid for candidate extraction
     tiles_per = -(-n_tiles // S)
     chunk = tiles_per * tile
@@ -1093,7 +1141,7 @@ def make_term_sharded_fused_scorer(
             sq["tile_first"], sq["tile_count"], n_tiles, 1, max_pairs,
             cand_cap=cand_cap)
         warn_on_overflow(ovf, "term-sharded fused engine")
-        pqw = jnp.pad(pqw, ((0, 0), (0, Q_PAD - 1)))
+        pqw = jnp.pad(pqw, ((0, 0), (0, q_pad - 1)))
         if packed_layout:
             partial = fused_score_packed_pallas(
                 sq["packed"], sq["block_tfs"], pb, pt, pqw, pcap,

@@ -71,10 +71,29 @@ Q_PAD = 8    # query-batch padding quantum (f32 sublane width)
 K_PAD = 8    # candidate-count padding quantum (per-tile k_tile lanes)
 
 
-def default_k_tile(k: int, tile: int = TILE) -> int:
+def default_k_tile(k: int, tile: int = TILE, k_pad: int = K_PAD) -> int:
     """Per-tile candidate count: >= min(k, tile) (exactness floor),
-    rounded up to the K_PAD lane quantum, never wider than the tile."""
-    return min(tile, max(K_PAD, -(-max(k, 1) // K_PAD) * K_PAD))
+    rounded up to the ``k_pad`` lane quantum, never wider than the tile.
+
+    The ``min(tile, ...)`` clamp is load-bearing for autotuned tile
+    widths: a narrow tile (e.g. 256) cannot emit more than ``tile``
+    candidates, and every kernel entry point rejects ``k_tile > tile``
+    rather than silently truncating (see ``_check_k_tile``)."""
+    k_pad = max(int(k_pad), 1)
+    return min(tile, max(k_pad, -(-max(k, 1) // k_pad) * k_pad))
+
+
+def _check_k_tile(k_tile: int, tile: int) -> None:
+    """Reject geometry the per-tile reduction cannot satisfy.  Call
+    sites that assumed ``TILE = 512`` must clamp via ``default_k_tile(k,
+    tile)`` (which never exceeds the tile) before reaching a kernel."""
+    if k_tile > tile:
+        raise ValueError(
+            f"k_tile={k_tile} > tile={tile}: a {tile}-wide doc tile "
+            f"cannot emit {k_tile} candidates — clamp with "
+            "default_k_tile(k, tile)")
+    if k_tile < 1:
+        raise ValueError(f"k_tile must be >= 1, got {k_tile}")
 
 
 def _tile_contribution(docs, tfs, qw, tile_base, lane_cap, tile: int):
@@ -154,6 +173,77 @@ def _tile_topk(final, base, k_tile: int, tile: int):
         (final, jnp.full((q, k_tile), -jnp.inf, jnp.float32),
          jnp.full((q, k_tile), -1, jnp.int32)))
     return vals, ids
+
+
+def _swap_stride(x, j: int):
+    """Exchange each lane with its partner ``lane ^ j`` along the last
+    axis (j a power of two dividing the width).  Implemented as a
+    reshape + reversal of the pair axis — lane i decomposes as
+    ``g*(2j) + h*j + r`` with ``h`` the bit ``i & j``; flipping ``h``
+    is exactly the xor.  NOTE: Mosaic restricts reshapes that move the
+    minor (lane) dimension; this helper keeps the minor dim intact
+    (``r < j`` stays minor) except at j == 1, which interpret mode (the
+    only mode exercised off-TPU) handles fine — revisit the j == 1
+    stage with a roll-based exchange before enabling compiled TPU runs.
+    """
+    q, n = x.shape
+    y = x.reshape(q, n // (2 * j), 2, j)
+    return y[:, :, ::-1, :].reshape(q, n)
+
+
+def _tile_topk_bitonic(final, base, k_tile: int, tile: int):
+    """Bitonic partial-sort tile reducer: full (value desc, lane asc)
+    bitonic sort of the [Q, tile] tile, then the first ``k_tile``
+    columns ARE the per-tile candidates.
+
+    Bit-identical to ``_tile_topk``'s successive maxima by construction:
+    both orders are the same strict total order (value descending,
+    lowest lane wins ties — lanes are distinct, so the order is total
+    and the sort is trivially stable), and the sort only PERMUTES the
+    score values, never recomputes them, so candidate floats match to
+    the bit.  Non-finite survivors map to id -1 exactly as in
+    ``_tile_topk``.  Cost is the fixed ``log2(tile)*(log2(tile)+1)/2``
+    compare-exchange stages (45 for tile=512) against ``k_tile``
+    max+argmin passes — the autotuner decides per shape which wins.
+    """
+    if tile & (tile - 1):
+        raise ValueError(f"bitonic reducer needs a power-of-two tile, "
+                         f"got {tile}")
+    q = final.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (q, tile), 1)
+    v, l = final, lane
+    size = 2
+    while size <= tile:
+        stride = size // 2
+        while stride >= 1:
+            pv = _swap_stride(v, stride)
+            pl_ = _swap_stride(l, stride)
+            lo = (lane & stride) == 0         # low element of its pair
+            desc = (lane & size) == 0         # block direction this stage
+            # self precedes partner in (value desc, lane asc) order
+            first = (v > pv) | ((v == pv) & (l < pl_))
+            keep = jnp.where(lo == desc, first, ~first)
+            v = jnp.where(keep, v, pv)
+            l = jnp.where(keep, l, pl_)
+            stride //= 2
+        size *= 2
+    vals = v[:, :k_tile]
+    ids = jnp.where(jnp.isfinite(vals), base + l[:, :k_tile], -1)
+    return vals, ids
+
+
+REDUCERS = ("successive", "bitonic")
+
+
+def _tile_reduce(final, base, k_tile: int, tile: int, reducer: str):
+    """Reducer dispatch shared by the candidate kernels.  Both branches
+    are pure jnp, so this same function IS the reference mirror — tests
+    call it outside any kernel to compare reducers bit-for-bit."""
+    if reducer == "bitonic":
+        return _tile_topk_bitonic(final, base, k_tile, tile)
+    if reducer == "successive":
+        return _tile_topk(final, base, k_tile, tile)
+    raise ValueError(f"unknown reducer {reducer!r}; expected {REDUCERS}")
 
 
 # ---------------------------------------------------------------------------
@@ -301,26 +391,39 @@ def fused_score_packed_pallas(packed: Array, block_tfs: Array,
 
 def _fused_blocked_topk_kernel(pair_block, pair_tile, pair_first, pair_last,
                                pair_cap,                       # SMEM prefetch
-                               docs_ref, tfs_ref, qw_ref,
-                               norm_ref, rank_ref, qn_ref,     # VMEM inputs
-                               val_ref, idx_ref,               # VMEM outputs
-                               acc_ref,                        # VMEM scratch
-                               *, tile: int, k_tile: int, rank_blend: float):
+                               *refs,
+                               tile: int, k_tile: int, rank_blend: float,
+                               reducer: str, pps: int):
+    """``pps`` (pairs-per-grid-step) sub-pairs are unrolled inside one
+    grid step: ``refs`` carries ``pps`` replicated (docs, tfs, qw) VMEM
+    views (one per sub-pair, each with its own ``pb[i*pps+j]`` index
+    map) followed by the shared (norm, rank, qnorm) tiles, the two
+    candidate outputs, and the accumulator scratch.  Run-aligned pair
+    padding (``build_batched_pairs``) guarantees a tile transition only
+    ever happens at a step boundary, so init stays at sub-pair 0 and
+    the reduce at sub-pair pps-1."""
     i = pl.program_id(0)
+    docs_refs = refs[:pps]
+    tfs_refs = refs[pps:2 * pps]
+    qw_refs = refs[2 * pps:3 * pps]
+    (norm_ref, rank_ref, qn_ref, val_ref, idx_ref, acc_ref) = refs[3 * pps:]
+    base = i * pps
 
-    @pl.when(pair_first[i] == 1)
+    @pl.when(pair_first[base] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _tile_contribution(docs_ref[0, :], tfs_ref[0, :],
-                                       qw_ref[0, :], pair_tile[i] * tile,
-                                       pair_cap[i], tile)
+    for j in range(pps):
+        acc_ref[...] += _tile_contribution(
+            docs_refs[j][0, :], tfs_refs[j][0, :], qw_refs[j][0, :],
+            pair_tile[base + j] * tile, pair_cap[base + j], tile)
 
-    @pl.when(pair_last[i] == 1)
+    @pl.when(pair_last[base + pps - 1] == 1)
     def _reduce():
         final = _final_from_acc(acc_ref[...], norm_ref[0, :], rank_ref[0, :],
                                 qn_ref[0, :], rank_blend)
-        vals, ids = _tile_topk(final, pair_tile[i] * tile, k_tile, tile)
+        vals, ids = _tile_reduce(final, pair_tile[base] * tile, k_tile, tile,
+                                 reducer)
         val_ref[0] = vals
         idx_ref[0] = ids
 
@@ -328,31 +431,35 @@ def _fused_blocked_topk_kernel(pair_block, pair_tile, pair_first, pair_last,
 def _fused_packed_topk_kernel(pair_block, pair_tile, pair_first, pair_last,
                               pair_cap, pair_bits, pair_base,
                               pair_count,                      # SMEM prefetch
-                              words_ref, tfs_ref, qw_ref,
-                              norm_ref, rank_ref, qn_ref,      # VMEM inputs
-                              val_ref, idx_ref,                # VMEM outputs
-                              acc_ref,                         # VMEM scratch
-                              *, tile: int, block: int, k_tile: int,
-                              rank_blend: float):
+                              *refs,
+                              tile: int, block: int, k_tile: int,
+                              rank_blend: float, reducer: str, pps: int):
     i = pl.program_id(0)
+    words_refs = refs[:pps]
+    tfs_refs = refs[pps:2 * pps]
+    qw_refs = refs[2 * pps:3 * pps]
+    (norm_ref, rank_ref, qn_ref, val_ref, idx_ref, acc_ref) = refs[3 * pps:]
+    base = i * pps
 
-    @pl.when(pair_first[i] == 1)
+    @pl.when(pair_first[base] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    docs = _unpack_block_vmem(words_ref[0, :],
-                              pair_bits[i].astype(jnp.uint32),
-                              pair_base[i], pair_count[i], block)
-    acc_ref[...] += _tile_contribution(docs,
-                                       tfs_ref[0, :].astype(jnp.float32),
-                                       qw_ref[0, :], pair_tile[i] * tile,
-                                       pair_cap[i], tile)
+    for j in range(pps):
+        docs = _unpack_block_vmem(words_refs[j][0, :],
+                                  pair_bits[base + j].astype(jnp.uint32),
+                                  pair_base[base + j], pair_count[base + j],
+                                  block)
+        acc_ref[...] += _tile_contribution(
+            docs, tfs_refs[j][0, :].astype(jnp.float32), qw_refs[j][0, :],
+            pair_tile[base + j] * tile, pair_cap[base + j], tile)
 
-    @pl.when(pair_last[i] == 1)
+    @pl.when(pair_last[base + pps - 1] == 1)
     def _reduce():
         final = _final_from_acc(acc_ref[...], norm_ref[0, :], rank_ref[0, :],
                                 qn_ref[0, :], rank_blend)
-        vals, ids = _tile_topk(final, pair_tile[i] * tile, k_tile, tile)
+        vals, ids = _tile_reduce(final, pair_tile[base] * tile, k_tile, tile,
+                                 reducer)
         val_ref[0] = vals
         idx_ref[0] = ids
 
@@ -379,55 +486,86 @@ def _finish_candidates(vals: Array, ids: Array, pair_tile: Array,
             ids[:n_tiles].transpose(1, 0, 2).reshape(q, n_tiles * k_tile))
 
 
+def _check_pairs_per_step(np_pairs: int, pps: int) -> None:
+    if pps < 1:
+        raise ValueError(f"pairs_per_step must be >= 1, got {pps}")
+    if pps > 1 and np_pairs % pps:
+        raise ValueError(
+            f"np_pairs={np_pairs} not a multiple of pairs_per_step={pps}; "
+            "build pairs with build_batched_pairs(..., pairs_per_step=pps)")
+
+
 def fused_topk_blocked_pallas(block_docs: Array, block_tfs: Array,
                               pair_block: Array, pair_tile: Array,
                               pair_qw: Array, pair_cap: Array,
                               norm: Array, rank: Array, qnorm: Array,
                               num_docs: int, k_tile: int,
                               rank_blend: float = 0.0, tile: int = TILE,
+                              reducer: str = "successive",
+                              pairs_per_step: int = 1,
                               interpret: bool | None = None):
     """HOR candidate path: same routing contract as the dense kernel,
     plus per-doc metadata (norm f32[num_docs], rank f32[num_docs]) and
     per-query norms (qnorm f32[Q], padding queries should carry 1.0).
     Returns (values f32[Q, n_tiles*k_tile], ids i32[Q, n_tiles*k_tile])
     tile-major candidate lists of FINAL scores — the dense [Q, num_docs]
-    array never leaves VMEM."""
+    array never leaves VMEM.
+
+    ``pairs_per_step > 1`` amortizes grid-step overhead by processing
+    that many routing pairs per step; callers must build the pair
+    arrays with matching run-aligned padding
+    (``build_batched_pairs(..., pairs_per_step=...)``)."""
     nb, b = block_docs.shape
     np_pairs, q = pair_qw.shape
+    pps = pairs_per_step
+    _check_k_tile(k_tile, tile)
+    _check_pairs_per_step(np_pairs, pps)
     n_tiles = max(-(-num_docs // tile), 1)
     norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
+
+    def _block_spec(j):
+        return pl.BlockSpec(
+            (1, b), lambda i, pb, pt, pf, pg, pc, j=j: (pb[i * pps + j], 0))
+
+    def _qw_spec(j):
+        return pl.BlockSpec(
+            (1, q), lambda i, pb, pt, pf, pg, pc, j=j: (i * pps + j, 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
-        grid=(np_pairs,),
-        in_specs=[
-            pl.BlockSpec((1, b), lambda i, pb, pt, pf, pg, pc: (pb[i], 0)),
-            pl.BlockSpec((1, b), lambda i, pb, pt, pf, pg, pc: (pb[i], 0)),
-            pl.BlockSpec((1, q), lambda i, pb, pt, pf, pg, pc: (i, 0)),
-            pl.BlockSpec((1, tile),
-                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0)),
-            pl.BlockSpec((1, tile),
-                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0)),
-            pl.BlockSpec((1, q), lambda i, pb, pt, pf, pg, pc: (0, 0)),
-        ],
+        grid=(np_pairs // pps,),
+        in_specs=(
+            [_block_spec(j) for j in range(pps)]
+            + [_block_spec(j) for j in range(pps)]
+            + [_qw_spec(j) for j in range(pps)]
+            + [
+                pl.BlockSpec((1, tile),
+                             lambda i, pb, pt, pf, pg, pc: (pt[i * pps], 0)),
+                pl.BlockSpec((1, tile),
+                             lambda i, pb, pt, pf, pg, pc: (pt[i * pps], 0)),
+                pl.BlockSpec((1, q), lambda i, pb, pt, pf, pg, pc: (0, 0)),
+            ]),
         out_specs=[
             pl.BlockSpec((1, q, k_tile),
-                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0, 0)),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i * pps], 0, 0)),
             pl.BlockSpec((1, q, k_tile),
-                         lambda i, pb, pt, pf, pg, pc: (pt[i], 0, 0)),
+                         lambda i, pb, pt, pf, pg, pc: (pt[i * pps], 0, 0)),
         ],
         scratch_shapes=[pltpu.VMEM((q, tile), jnp.float32)],
     )
     vals, ids = pl.pallas_call(
         functools.partial(_fused_blocked_topk_kernel, tile=tile,
-                          k_tile=k_tile, rank_blend=rank_blend),
+                          k_tile=k_tile, rank_blend=rank_blend,
+                          reducer=reducer, pps=pps),
         grid_spec=grid_spec,
         out_shape=(
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.int32)),
         interpret=resolve_interpret(interpret),
     )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
-      pair_cap, block_docs, block_tfs, pair_qw, norm_t, rank_t,
-      qnorm.reshape(1, q))
+      pair_cap,
+      *([block_docs] * pps), *([block_tfs] * pps), *([pair_qw] * pps),
+      norm_t, rank_t, qnorm.reshape(1, q))
     return _finish_candidates(vals, ids, pair_tile, n_tiles, k_tile)
 
 
@@ -439,49 +577,73 @@ def fused_topk_packed_pallas(packed: Array, block_tfs: Array,
                              norm: Array, rank: Array, qnorm: Array,
                              num_docs: int, block: int, k_tile: int,
                              rank_blend: float = 0.0, tile: int = TILE,
+                             reducer: str = "successive",
+                             pairs_per_step: int = 1,
                              interpret: bool | None = None):
     """Packed candidate path: in-VMEM decode + per-tile top-k; only
     compressed posting bytes in, only candidates out."""
     nb, wpb = packed.shape
     np_pairs, q = pair_qw.shape
+    pps = pairs_per_step
+    _check_k_tile(k_tile, tile)
+    _check_pairs_per_step(np_pairs, pps)
     n_tiles = max(-(-num_docs // tile), 1)
     norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
+
+    def _words_spec(j):
+        return pl.BlockSpec(
+            (1, wpb),
+            lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt, j=j:
+                (pb[i * pps + j], 0))
+
+    def _tfs_spec(j):
+        return pl.BlockSpec(
+            (1, block),
+            lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt, j=j:
+                (pb[i * pps + j], 0))
+
+    def _qw_spec(j):
+        return pl.BlockSpec(
+            (1, q),
+            lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt, j=j:
+                (i * pps + j, 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=8,
-        grid=(np_pairs,),
-        in_specs=[
-            pl.BlockSpec(
-                (1, wpb),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pb[i], 0)),
-            pl.BlockSpec(
-                (1, block),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pb[i], 0)),
-            pl.BlockSpec(
-                (1, q),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (i, 0)),
-            pl.BlockSpec(
-                (1, tile),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0)),
-            pl.BlockSpec(
-                (1, tile),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0)),
-            pl.BlockSpec(
-                (1, q),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (0, 0)),
-        ],
+        grid=(np_pairs // pps,),
+        in_specs=(
+            [_words_spec(j) for j in range(pps)]
+            + [_tfs_spec(j) for j in range(pps)]
+            + [_qw_spec(j) for j in range(pps)]
+            + [
+                pl.BlockSpec(
+                    (1, tile),
+                    lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt:
+                        (pt[i * pps], 0)),
+                pl.BlockSpec(
+                    (1, tile),
+                    lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt:
+                        (pt[i * pps], 0)),
+                pl.BlockSpec(
+                    (1, q),
+                    lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (0, 0)),
+            ]),
         out_specs=[
             pl.BlockSpec(
                 (1, q, k_tile),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0, 0)),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt:
+                    (pt[i * pps], 0, 0)),
             pl.BlockSpec(
                 (1, q, k_tile),
-                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt: (pt[i], 0, 0)),
+                lambda i, pb, pt, pf, pg, pc, pbt, pba, pcnt:
+                    (pt[i * pps], 0, 0)),
         ],
         scratch_shapes=[pltpu.VMEM((q, tile), jnp.float32)],
     )
     vals, ids = pl.pallas_call(
         functools.partial(_fused_packed_topk_kernel, tile=tile, block=block,
-                          k_tile=k_tile, rank_blend=rank_blend),
+                          k_tile=k_tile, rank_blend=rank_blend,
+                          reducer=reducer, pps=pps),
         grid_spec=grid_spec,
         out_shape=(
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
@@ -489,7 +651,8 @@ def fused_topk_packed_pallas(packed: Array, block_tfs: Array,
         interpret=resolve_interpret(interpret),
     )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
       pair_cap, pair_bits, pair_base, pair_count,
-      packed, block_tfs, pair_qw, norm_t, rank_t, qnorm.reshape(1, q))
+      *([packed] * pps), *([block_tfs] * pps), *([pair_qw] * pps),
+      norm_t, rank_t, qnorm.reshape(1, q))
     return _finish_candidates(vals, ids, pair_tile, n_tiles, k_tile)
 
 
@@ -516,7 +679,8 @@ def extract_tile_candidates(final: Array, tile: int, k_tile: int):
 def build_batched_pairs(cand_block: Array, cand_valid: Array, cand_q: Array,
                         cand_w: Array, tile_first: Array, tile_count: Array,
                         n_tiles: int, num_queries: int, max_pairs: int,
-                        cand_cap: Array | None = None):
+                        cand_cap: Array | None = None,
+                        pairs_per_step: int = 1):
     """jnp glue: batch candidates -> deduplicated tile-sorted routing pairs.
 
     cand_* [S]: one entry per (query, term, block) candidate across the
@@ -532,6 +696,14 @@ def build_batched_pairs(cand_block: Array, cand_valid: Array, cand_q: Array,
     overflow) with NP == max_pairs; overflow counts pairs dropped
     because ``max_pairs`` was too small (0 in healthy runs — surfaced by
     the engine).
+
+    ``pairs_per_step > 1`` additionally RUN-ALIGNS the tile-sorted
+    pairs: each tile's contiguous run is padded with no-op pairs
+    (qw = 0, cap = 0) to a multiple of ``pairs_per_step``, so a kernel
+    that unrolls that many pairs per grid step only ever sees a tile
+    transition at a step boundary.  ``max_pairs`` must then be a
+    multiple of ``pairs_per_step``; padding that pushes real pairs past
+    ``max_pairs`` counts toward ``overflow`` like any other drop.
     """
     s = cand_block.shape[0]
     sentinel = jnp.int32(2**30)
@@ -577,5 +749,44 @@ def build_batched_pairs(cand_block: Array, cand_valid: Array, cand_q: Array,
     pair_qw = qw[owner[tile_order]] * real[tile_order][:, None]
     pair_cap = ucap[owner[tile_order]]
     overflow = jnp.maximum(total - max_pairs, 0)
-    return (pair_block[tile_order], pair_tile[tile_order], pair_qw,
-            pair_cap, overflow)
+    pair_block = pair_block[tile_order]
+    pair_tile = pair_tile[tile_order]
+    if pairs_per_step <= 1:
+        return pair_block, pair_tile, pair_qw, pair_cap, overflow
+
+    pps = int(pairs_per_step)
+    if max_pairs % pps:
+        raise ValueError(
+            f"max_pairs={max_pairs} must be a multiple of "
+            f"pairs_per_step={pps}")
+    # Re-scatter each real pair to its run-aligned slot: runs of equal
+    # tile get padded to a multiple of pps, consecutive runs stay
+    # contiguous, so every run start lands on a step boundary.
+    pos = jnp.arange(max_pairs, dtype=jnp.int32)
+    real_s = pair_tile < n_tiles
+    start = jnp.searchsorted(pair_tile, pair_tile,
+                             side="left").astype(jnp.int32)
+    end = jnp.searchsorted(pair_tile, pair_tile,
+                           side="right").astype(jnp.int32)
+    rank = pos - start
+    runlen = end - start
+    extra = (-(-runlen // pps)) * pps - runlen      # pad of my run
+    is_start = rank == 0
+    cum = jnp.cumsum(jnp.where(is_start & real_s, extra, 0))
+    pad_before = cum - jnp.where(real_s, extra, 0)  # pads of EARLIER runs
+    new_pos = jnp.where(real_s, start + pad_before + rank, max_pairs)
+    overflow = overflow + jnp.sum(
+        (real_s & (new_pos >= max_pairs)).astype(jnp.int32))
+    nb_ = jnp.zeros((max_pairs,), jnp.int32).at[new_pos].set(
+        pair_block, mode="drop")
+    nqw = jnp.zeros_like(pair_qw).at[new_pos].set(pair_qw, mode="drop")
+    ncap = jnp.zeros((max_pairs,), jnp.int32).at[new_pos].set(
+        pair_cap, mode="drop")
+    nt = jnp.full((max_pairs,), -1, jnp.int32).at[new_pos].set(
+        pair_tile, mode="drop")
+    # Padding slots inherit their run's tile (forward fill keeps the
+    # sequence sorted so pair_first/pair_last stay step-aligned); a
+    # fully empty prefix/batch falls through to the trash tile.
+    nt = jax.lax.cummax(nt)
+    nt = jnp.where(nt < 0, n_tiles, nt)
+    return nb_, nt, nqw, ncap, overflow

@@ -140,6 +140,31 @@ def default_max_pairs(index: BlockedIndex | PackedCsrIndex, num_queries: int,
     return max(min(pairs_max, cands * max(span, 1)), 8)
 
 
+def scaled_pairs_budget(index: BlockedIndex | PackedCsrIndex,
+                        tile: int = TILE) -> int:
+    """Whole-index routing-pair bound at an arbitrary tile width.
+
+    ``route_pairs_max`` is exact for ``tile == route_tile``; narrower
+    tiles split each block's span into at most ``ceil(route_tile/tile)``
+    extra tiles, wider tiles can only merge spans (the +NB term covers
+    off-by-one tile straddles in both directions).  This is what the
+    segment engines pass as their static ``max_pairs`` when an autotuned
+    config retunes ``tile`` away from the seal-time route tile.
+    """
+    if tile == index.route_tile:
+        return int(index.route_pairs_max)
+    scale = max(-(-index.route_tile // tile), 1)
+    nb = (index.packed.shape[0] if isinstance(index, PackedCsrIndex)
+          else index.block_docs.shape[0])
+    return max(int(index.route_pairs_max) * scale + int(nb), 8)
+
+
+def round_up_pairs(max_pairs: int, pairs_per_step: int) -> int:
+    """Pair budgets must be a multiple of the kernel's unroll factor."""
+    pps = max(int(pairs_per_step), 1)
+    return -(-int(max_pairs) // pps) * pps
+
+
 def expand_block_candidates(block_offsets: Array, term_ids: Array,
                             idf_w: Array, m: int, block: int,
                             cap: int | None = None):
@@ -175,7 +200,7 @@ def expand_block_candidates(block_offsets: Array, term_ids: Array,
 def fused_batched_scores(index: BlockedIndex | PackedCsrIndex,
                          term_ids: Array, idf_w: Array, cap: int,
                          max_pairs: int | None = None, tile: int = TILE,
-                         backend: Backend = "pallas"):
+                         backend: Backend = "pallas", q_pad: int = Q_PAD):
     """Dense scores f32[B, num_docs] for a BATCH of queries in one fused
     kernel launch, plus the routing-overflow counter.
 
@@ -236,7 +261,7 @@ def fused_batched_scores(index: BlockedIndex | PackedCsrIndex,
         cand_cap=cand_cap)
 
     # pad the query batch to the accumulator quantum
-    bp = -(-b // Q_PAD) * Q_PAD
+    bp = -(-b // max(q_pad, 1)) * max(q_pad, 1)
     if bp != b:
         pqw = jnp.pad(pqw, ((0, 0), (0, bp - b)))
 
@@ -258,7 +283,9 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
                        rank_blend: float = 0.0,
                        max_pairs: int | None = None, tile: int = TILE,
                        k_tile: int | None = None,
-                       backend: Backend = "pallas"):
+                       backend: Backend = "pallas", q_pad: int = Q_PAD,
+                       reducer: str = "successive",
+                       pairs_per_step: int = 1):
     """The candidate path: per-tile partial top-k INSIDE the fused
     engine, so the dense [B, num_docs] score array never reaches HBM.
 
@@ -273,11 +300,17 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
 
     Returns (cand_values f32[B, n_tiles*k_tile],
     cand_ids i32[B, n_tiles*k_tile], overflow).
+
+    ``reducer`` / ``pairs_per_step`` / ``q_pad`` are autotuner-selected
+    kernel geometry (see ``kernels/autotune.py``); the defaults are the
+    historical hardcoded values, so untuned callers are bit-identical
+    to the pre-autotuner engine.
     """
     b, t = term_ids.shape
     num_docs = index.docs.num_docs
     if k_tile is None:
         k_tile = default_k_tile(k, tile)
+    k_tile = min(k_tile, tile)
     # per-query norm of the idf weight vector (duplicate slots carry 0
     # after dedup) — same reduction the oracle's scoring tail performs
     qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
@@ -299,6 +332,7 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
         m = min(m, max(index.max_blocks_per_term, 1))
     if max_pairs is None:
         max_pairs = default_max_pairs(index, b, t, cap, tile)
+    max_pairs = round_up_pairs(max_pairs, pairs_per_step)
 
     cand_block, cand_valid, cand_q, cand_w, cand_cap = \
         expand_block_candidates(index.block_offsets, term_ids, idf_w,
@@ -307,11 +341,11 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
     pb, pt, pqw, pcap, overflow = build_batched_pairs(
         cand_block, cand_valid, cand_q,
         cand_w.astype(jnp.float32), tfirst, tcount, n_tiles, b, max_pairs,
-        cand_cap=cand_cap)
+        cand_cap=cand_cap, pairs_per_step=pairs_per_step)
 
     # pad the query batch to the accumulator quantum (padding queries
     # get qnorm 1.0 — their zero accumulator masks them to -inf anyway)
-    bp = -(-b // Q_PAD) * Q_PAD
+    bp = -(-b // max(q_pad, 1)) * max(q_pad, 1)
     qnorm_p = qnorm
     if bp != b:
         pqw = jnp.pad(pqw, ((0, 0), (0, bp - b)))
@@ -323,12 +357,14 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
             index.block_bits[pb], index.block_base[pb],
             index.block_count[pb], index.docs.norm, index.docs.rank,
             qnorm_p, num_docs, block, k_tile, rank_blend=rank_blend,
-            tile=tile, interpret=_interp(backend))
+            tile=tile, reducer=reducer, pairs_per_step=pairs_per_step,
+            interpret=_interp(backend))
     else:
         vals, ids = fused_topk_blocked_pallas(
             index.block_docs, index.block_tfs, pb, pt, pqw, pcap,
             index.docs.norm, index.docs.rank, qnorm_p, num_docs, k_tile,
-            rank_blend=rank_blend, tile=tile, interpret=_interp(backend))
+            rank_blend=rank_blend, tile=tile, reducer=reducer,
+            pairs_per_step=pairs_per_step, interpret=_interp(backend))
     return vals[:b], ids[:b], overflow
 
 
@@ -354,12 +390,15 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
+    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend",
+    "q_pad", "reducer", "pairs_per_step"))
 def fused_segment_topk(index: BlockedIndex | PackedCsrIndex,
                        query_hashes: Array,
                        idf_w: Array, doc_base: Array, *, k_tile: int,
                        cap: int, max_pairs: int, rank_blend: float = 0.0,
-                       tile: int = TILE, backend: Backend = "pallas"):
+                       tile: int = TILE, backend: Backend = "pallas",
+                       q_pad: int = Q_PAD, reducer: str = "successive",
+                       pairs_per_step: int = 1):
     """Candidate engine over one segment: fused decode-and-score kernel
     with in-kernel per-tile top-k (tombstones ride in as norm == 0).
 
@@ -375,26 +414,29 @@ def fused_segment_topk(index: BlockedIndex | PackedCsrIndex,
     tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     vals, ids, overflow = fused_batched_topk(
         index, tids, idf_w, cap, k=k_tile, rank_blend=rank_blend,
-        max_pairs=max_pairs, tile=tile, k_tile=k_tile, backend=backend)
+        max_pairs=max_pairs, tile=tile, k_tile=k_tile, backend=backend,
+        q_pad=q_pad, reducer=reducer, pairs_per_step=pairs_per_step)
     gids = jnp.where(ids >= 0, ids + doc_base, -1)
     return vals, gids, overflow
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend"))
+    "k_tile", "cap", "max_pairs", "rank_blend", "tile", "backend",
+    "q_pad"))
 def fused_segment_dense_topk(index: BlockedIndex | PackedCsrIndex,
                              query_hashes: Array,
                              idf_w: Array, doc_base: Array, *, k_tile: int,
                              cap: int, max_pairs: int,
                              rank_blend: float = 0.0, tile: int = TILE,
-                             backend: Backend = "pallas"):
+                             backend: Backend = "pallas",
+                             q_pad: int = Q_PAD):
     """Dense engine over one segment (PR-1 tail): full local score rows,
     then the jnp mirror of the per-tile candidate reduction."""
     present = query_hashes != 0
     tids = jnp.where(present, index.lookup_terms(query_hashes), -1)
     scores, overflow = fused_batched_scores(
         index, tids, idf_w, cap, max_pairs=max_pairs, tile=tile,
-        backend=backend)
+        backend=backend, q_pad=q_pad)
     qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
     final = final_scores(scores, index.docs.norm, index.docs.rank, qnorm,
                          rank_blend)

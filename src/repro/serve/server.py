@@ -46,6 +46,13 @@ class ServerConfig:
     size classes that is the whole jit signature space of the serving
     path.  Queries wider than ``n_terms_budget`` are rejected at
     admission (never silently truncated).
+
+    ``tune`` optionally pins a ``kernels.autotune.TuneConfig`` for every
+    segment the server scores; ``None`` (the default) resolves each
+    segment's geometry from the ACTIVE tuning table at trace time, per
+    pinned epoch — segments sealed after ``autotune.set_active`` serve
+    with their tuned kernels while warm size classes keep their compiled
+    executables.
     """
     batch_size: int = 8
     n_terms_budget: int = 8
@@ -56,6 +63,7 @@ class ServerConfig:
     mode: str = "candidates"
     backend: str = "pallas"
     cache_capacity: int = 4096
+    tune: object | None = None
 
 
 class Response:
@@ -220,7 +228,8 @@ class QueryServer:
                 qb[i] = ticket.row
             result = view.topk(qb, cfg.k, cap=cfg.cap,
                                rank_blend=cfg.rank_blend, engine=cfg.engine,
-                               mode=cfg.mode, backend=cfg.backend)
+                               mode=cfg.mode, backend=cfg.backend,
+                               tune=cfg.tune)
             ids = np.asarray(result.doc_ids)
             scores = np.asarray(result.scores)
             for i, (ticket, key) in enumerate(pending):
@@ -251,7 +260,8 @@ class QueryServer:
         cfg = self.config
         qb = np.zeros((cfg.batch_size, cfg.n_terms_budget), np.uint32)
         view.topk(qb, cfg.k, cap=cfg.cap, rank_blend=cfg.rank_blend,
-                  engine=cfg.engine, mode=cfg.mode, backend=cfg.backend)
+                  engine=cfg.engine, mode=cfg.mode, backend=cfg.backend,
+                  tune=cfg.tune)
 
     # -- worker thread ---------------------------------------------------
 

@@ -68,6 +68,72 @@ def generate(spec: CorpusSpec) -> TokenizedCorpus:
                            term_hashes=term_hashes, num_docs=spec.num_docs)
 
 
+def _batch_from_tokens(tokens: np.ndarray, boundaries: np.ndarray,
+                       term_hashes: np.ndarray) -> TokenizedCorpus:
+    """Vectorized per-doc dedup: one lexsort over the whole batch instead
+    of a ``np.unique`` per document (the per-doc loop dominates build
+    time at million-page scale)."""
+    n_docs = len(boundaries) - 1
+    doc_idx = np.repeat(np.arange(n_docs, dtype=np.int64),
+                        np.diff(boundaries))
+    order = np.lexsort((tokens, doc_idx))
+    d, t = doc_idx[order], tokens[order]
+    # run boundaries of (doc, term) pairs
+    first = np.ones(len(t), dtype=bool)
+    first[1:] = (d[1:] != d[:-1]) | (t[1:] != t[:-1])
+    starts = np.flatnonzero(first)
+    counts = np.diff(np.append(starts, len(t))).astype(np.int64)
+    run_docs = d[starts]
+    run_terms = t[starts]
+    per_doc = np.bincount(run_docs, minlength=n_docs)
+    splits = np.cumsum(per_doc)[:-1]
+    doc_term_ids = np.split(run_terms, splits)
+    doc_counts = np.split(counts, splits)
+    return TokenizedCorpus(doc_term_ids=doc_term_ids,
+                           doc_counts=doc_counts,
+                           term_hashes=term_hashes, num_docs=n_docs)
+
+
+def stream_batches(spec: CorpusSpec, batch_docs: int = 50_000):
+    """Yield the corpus of ``spec`` as TokenizedCorpus batches of at most
+    ``batch_docs`` documents WITHOUT materializing the full collection —
+    host RAM is bounded by one batch regardless of ``spec.num_docs``.
+
+    Determinism contract: for a given spec the concatenated stream is a
+    fixed corpus independent of ``batch_docs`` (each batch draws from its
+    own ``seed + batch index`` substream), so two campaigns that disagree
+    on batching still build indexes over identical statistics — but NOT
+    the same token draws as one-shot ``generate``; streams and one-shot
+    corpora are distinct corpora by design.
+
+    Feed each batch to ``SegmentedIndex.add_batch(batch,
+    refresh_norms=False)`` and call ``refresh_norms()`` once after the
+    final ``seal()`` — norms depend only on final global df, so deferring
+    the refresh turns a quadratic rescan into a single pass.
+    """
+    if batch_docs < 1:
+        raise ValueError("batch_docs must be >= 1")
+    cdf = _zipf_cdf(spec.vocab, spec.zipf_s)
+    term_hashes = mix32(np.arange(spec.vocab, dtype=np.uint32))
+    target = max(spec.avg_distinct, 1)
+    done = 0
+    batch_i = 0
+    while done < spec.num_docs:
+        n = min(batch_docs, spec.num_docs - done)
+        rng = np.random.default_rng(spec.seed + 7919 * (batch_i + 1))
+        raw_len = rng.lognormal(mean=np.log(target * 1.6), sigma=0.5,
+                                size=n)
+        raw_len = np.clip(raw_len.astype(np.int64), 4, spec.vocab * 4)
+        boundaries = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(raw_len, out=boundaries[1:])
+        u = rng.random(int(boundaries[-1]))
+        tokens = np.searchsorted(cdf, u).astype(np.int64)
+        tokens = np.minimum(tokens, spec.vocab - 1)
+        yield _batch_from_tokens(tokens, boundaries, term_hashes)
+        done += n
+        batch_i += 1
+
+
 def sample_query_terms(df: np.ndarray, term_hashes: np.ndarray,
                        num_queries: int, terms_per_query: int,
                        df_band: tuple[float, float] = (0.15, 0.5),
