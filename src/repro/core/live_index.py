@@ -410,9 +410,8 @@ class LiveView:
             cfg = (tune if tune is not None else autotune.lookup(
                 backend, int(seg.index.docs.num_docs), seg.layout))
             seg_kt = cfg.resolve_k_tile(k)
-            mp = ops.round_up_pairs(
-                ops.scaled_pairs_budget(seg.index, cfg.tile),
-                cfg.pairs_per_step)
+            mp = ops.padded_pairs_budget(seg.index, cfg.tile,
+                                         cfg.pairs_per_step)
             c = int(cap) if cap is not None else seg.index.max_posting_len
             b = jnp.asarray(np.int32(seg.doc_base))
             if engine == "jnp":
@@ -444,6 +443,11 @@ class LiveView:
         vals.append(dv)
         ids.append(dg)
         overflow = sum(int(o) for o in overflows)
+        if not return_stats:
+            # stats callers inspect the counter themselves; everyone
+            # else gets the engines' loud-overflow contract
+            ops.warn_on_overflow(jnp.asarray(overflow), "live-view "
+                                 "fused engine")
         mv, mi = merge_topk_candidates_host(vals, ids, k)
         hit = np.isfinite(mv)
         result = QueryResult(

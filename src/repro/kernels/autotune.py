@@ -250,8 +250,10 @@ def time_config(index, query_hashes, idf_w, k: int, cap: int,
     from repro.kernels import ops
 
     k_tile = cfg.resolve_k_tile(k)
-    max_pairs = ops.round_up_pairs(
-        ops.scaled_pairs_budget(index, cfg.tile), cfg.pairs_per_step)
+    # same widened budget as the query paths — a pps > 1 candidate must
+    # be timed doing the FULL pair set, not a silently truncated one
+    max_pairs = ops.padded_pairs_budget(index, cfg.tile,
+                                        cfg.pairs_per_step)
 
     def run():
         vals, ids, _ = ops.fused_segment_topk(

@@ -182,9 +182,9 @@ def _swap_stride(x, j: int):
     ``g*(2j) + h*j + r`` with ``h`` the bit ``i & j``; flipping ``h``
     is exactly the xor.  NOTE: Mosaic restricts reshapes that move the
     minor (lane) dimension; this helper keeps the minor dim intact
-    (``r < j`` stays minor) except at j == 1, which interpret mode (the
-    only mode exercised off-TPU) handles fine — revisit the j == 1
-    stage with a roll-based exchange before enabling compiled TPU runs.
+    (``r < j`` stays minor) except at j == 1, which only interpret mode
+    handles — ``_check_reducer`` refuses the bitonic reducer on compiled
+    lowerings until a roll-based j == 1 exchange replaces this stage.
     """
     q, n = x.shape
     y = x.reshape(q, n // (2 * j), 2, j)
@@ -486,6 +486,21 @@ def _finish_candidates(vals: Array, ids: Array, pair_tile: Array,
             ids[:n_tiles].transpose(1, 0, 2).reshape(q, n_tiles * k_tile))
 
 
+def _check_reducer(reducer: str, interpret: bool) -> None:
+    """The bitonic reducer's j == 1 exchange reshapes the minor (lane)
+    dimension (see ``_swap_stride``), which Mosaic rejects — letting it
+    reach a compiled TPU lowering fails at compile time at best and
+    miscompiles at worst.  Until the roll-based j == 1 stage lands,
+    refuse loudly at trace time instead of trusting a loaded tuning
+    table or ``REPRO_REDUCER`` to know the restriction."""
+    if reducer == "bitonic" and not interpret:
+        raise NotImplementedError(
+            "reducer='bitonic' is interpret-only: its j == 1 lane "
+            "exchange moves the minor dimension, which the Mosaic TPU "
+            "compiler rejects; use reducer='successive' for compiled "
+            "runs (or force it with REPRO_REDUCER=successive)")
+
+
 def _check_pairs_per_step(np_pairs: int, pps: int) -> None:
     if pps < 1:
         raise ValueError(f"pairs_per_step must be >= 1, got {pps}")
@@ -518,8 +533,10 @@ def fused_topk_blocked_pallas(block_docs: Array, block_tfs: Array,
     nb, b = block_docs.shape
     np_pairs, q = pair_qw.shape
     pps = pairs_per_step
+    interp = resolve_interpret(interpret)
     _check_k_tile(k_tile, tile)
     _check_pairs_per_step(np_pairs, pps)
+    _check_reducer(reducer, interp)
     n_tiles = max(-(-num_docs // tile), 1)
     norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
 
@@ -561,7 +578,7 @@ def fused_topk_blocked_pallas(block_docs: Array, block_tfs: Array,
         out_shape=(
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.int32)),
-        interpret=resolve_interpret(interpret),
+        interpret=interp,
     )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
       pair_cap,
       *([block_docs] * pps), *([block_tfs] * pps), *([pair_qw] * pps),
@@ -585,8 +602,10 @@ def fused_topk_packed_pallas(packed: Array, block_tfs: Array,
     nb, wpb = packed.shape
     np_pairs, q = pair_qw.shape
     pps = pairs_per_step
+    interp = resolve_interpret(interpret)
     _check_k_tile(k_tile, tile)
     _check_pairs_per_step(np_pairs, pps)
+    _check_reducer(reducer, interp)
     n_tiles = max(-(-num_docs // tile), 1)
     norm_t, rank_t = _doc_tiles(norm, rank, n_tiles, tile)
 
@@ -648,7 +667,7 @@ def fused_topk_packed_pallas(packed: Array, block_tfs: Array,
         out_shape=(
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles + 1, q, k_tile), jnp.int32)),
-        interpret=resolve_interpret(interpret),
+        interpret=interp,
     )(pair_block, pair_tile, _pair_first(pair_tile), _pair_last(pair_tile),
       pair_cap, pair_bits, pair_base, pair_count,
       *([packed] * pps), *([block_tfs] * pps), *([pair_qw] * pps),

@@ -165,6 +165,39 @@ def round_up_pairs(max_pairs: int, pairs_per_step: int) -> int:
     return -(-int(max_pairs) // pps) * pps
 
 
+def widen_pairs_for_step(max_pairs: int, num_docs: int, tile: int,
+                         pairs_per_step: int) -> int:
+    """Widen a pair budget for run-aligned no-op padding, then round up.
+
+    ``build_batched_pairs(..., pairs_per_step=pps)`` pads every tile's
+    pair run to a multiple of ``pps``, inserting up to ``pps - 1`` no-op
+    pairs per visited tile — so a budget that is exact at ``pps == 1``
+    (e.g. ``route_pairs_max`` at the route tile) overflows under
+    ``pps > 1`` and real routing pairs get DROPPED.  Every ``pps``-aware
+    budget must flow through here (the sharded scorers inline the same
+    arithmetic on their meta shapes).
+    """
+    pps = max(int(pairs_per_step), 1)
+    if pps > 1:
+        n_tiles = max(-(-int(num_docs) // max(int(tile), 1)), 1)
+        max_pairs = int(max_pairs) + n_tiles * (pps - 1)
+    return round_up_pairs(max_pairs, pps)
+
+
+def padded_pairs_budget(index: BlockedIndex | PackedCsrIndex,
+                        tile: int = TILE,
+                        pairs_per_step: int = 1) -> int:
+    """``scaled_pairs_budget`` made safe for a tuned ``pairs_per_step``:
+    the whole-index budget at ``tile``, widened for run-aligned padding
+    and rounded to the unroll quantum.  THE budget the per-segment query
+    paths (LiveView.topk, the autotuner's timing loop) must use — taking
+    ``scaled_pairs_budget`` + ``round_up_pairs`` directly silently drops
+    postings whenever ``pairs_per_step > 1``."""
+    return widen_pairs_for_step(
+        scaled_pairs_budget(index, tile), index.docs.num_docs, tile,
+        pairs_per_step)
+
+
 def expand_block_candidates(block_offsets: Array, term_ids: Array,
                             idf_w: Array, m: int, block: int,
                             cap: int | None = None):
@@ -331,7 +364,11 @@ def fused_batched_topk(index: BlockedIndex | PackedCsrIndex,
     if isinstance(index, BlockedIndex):
         m = min(m, max(index.max_blocks_per_term, 1))
     if max_pairs is None:
-        max_pairs = default_max_pairs(index, b, t, cap, tile)
+        # callers passing an explicit budget own its pps widening; the
+        # derived default must widen here or pps > 1 overflows it
+        max_pairs = widen_pairs_for_step(
+            default_max_pairs(index, b, t, cap, tile), num_docs, tile,
+            pairs_per_step)
     max_pairs = round_up_pairs(max_pairs, pairs_per_step)
 
     cand_block, cand_valid, cand_q, cand_w, cand_cap = \

@@ -99,12 +99,16 @@ def stream_batches(spec: CorpusSpec, batch_docs: int = 50_000):
     ``batch_docs`` documents WITHOUT materializing the full collection —
     host RAM is bounded by one batch regardless of ``spec.num_docs``.
 
-    Determinism contract: for a given spec the concatenated stream is a
-    fixed corpus independent of ``batch_docs`` (each batch draws from its
-    own ``seed + batch index`` substream), so two campaigns that disagree
-    on batching still build indexes over identical statistics — but NOT
-    the same token draws as one-shot ``generate``; streams and one-shot
-    corpora are distinct corpora by design.
+    Determinism contract: the stream is a pure function of ``(spec,
+    batch_docs)`` — each batch draws from its own ``seed + batch index``
+    substream, so rerunning with the same batching reproduces the exact
+    corpus (this is what makes the committed BENCH artifacts
+    re-runnable).  Changing ``batch_docs`` moves batch boundaries and
+    therefore reseeds every draw: the token draws differ, and only the
+    DISTRIBUTIONAL statistics (Zipf term frequencies, lognormal doc
+    lengths) are batching-independent.  Likewise the stream is NOT the
+    same corpus as one-shot ``generate``; streams and one-shot corpora
+    are distinct corpora by design.
 
     Feed each batch to ``SegmentedIndex.add_batch(batch,
     refresh_norms=False)`` and call ``refresh_norms()`` once after the

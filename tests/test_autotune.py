@@ -10,7 +10,8 @@ from repro.core import build, layouts, query
 from repro.core.live_index import SegmentedIndex
 from repro.kernels import autotune, ops
 from repro.kernels.fused_decode_score import (
-    _tile_topk, _tile_topk_bitonic, default_k_tile)
+    _check_reducer, _tile_topk, _tile_topk_bitonic, build_batched_pairs,
+    default_k_tile, fused_topk_blocked_pallas)
 from repro.text import corpus
 
 
@@ -319,7 +320,11 @@ def test_streaming_build_matches_bulk_ingest():
     np.testing.assert_array_equal(es.view(np.uint32), ds.view(np.uint32))
 
 
-def test_stream_batches_independent_of_batch_size():
+def test_stream_batches_reproducible_for_fixed_batching():
+    """The stream is a pure function of (spec, batch_docs): rerunning
+    with the SAME batching replays the exact corpus.  (Changing
+    batch_docs reseeds every draw — only distributional statistics are
+    batching-independent; see the stream_batches docstring.)"""
     spec = corpus.CorpusSpec(num_docs=500, vocab=400, avg_distinct=20,
                              seed=4)
     a = list(corpus.stream_batches(spec, batch_docs=125))
@@ -360,3 +365,93 @@ def test_live_view_with_tuned_table_matches_default():
     np.testing.assert_array_equal(base_i, tuned_i)
     np.testing.assert_array_equal(base_s.view(np.uint32),
                                   tuned_s.view(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# pairs_per_step budget widening: run-aligned padding must never drop
+# real routing pairs
+# ---------------------------------------------------------------------------
+
+
+def test_padded_pairs_budget_covers_run_alignment():
+    """Regression: a budget that is EXACT at pps == 1 (route_pairs_max
+    at the route tile, reached by querying every term at full cap)
+    overflows under pps == 2 run-aligned no-op padding — (2600 docs,
+    80 terms, seed 1) is a corpus where the old round_up-only budget
+    demonstrably drops a real pair.  ``padded_pairs_budget`` must not."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=2600, vocab=80,
+                                           avg_distinct=20, seed=1))
+    host = build.bulk_build(tc)
+    ix = layouts.build_blocked(host)
+    cap = host.max_posting_len
+    th = host.term_hashes
+    qh = jnp.asarray(th[th != 0][None, :])
+    t_ids = jnp.where(qh != 0, ix.lookup_terms(qh), -1)
+    m = min(max(-(-cap // ix.block), 1), max(ix.max_blocks_per_term, 1))
+    cb, cv, cq, cw, cc = ops.expand_block_candidates(
+        ix.block_offsets, t_ids, jnp.ones_like(t_ids, jnp.float32), m,
+        ix.block, cap)
+    tf, tcn, n_tiles = ops.routing_spans(ix, 512)
+
+    def overflow_at(mp):
+        *_, ovf = build_batched_pairs(
+            cb, cv, cq, cw.astype(jnp.float32), tf, tcn, n_tiles, 1, mp,
+            cand_cap=cc, pairs_per_step=2)
+        return int(ovf)
+
+    narrow = ops.round_up_pairs(ops.scaled_pairs_budget(ix, 512), 2)
+    assert overflow_at(narrow) > 0          # the pre-fix budget
+    assert overflow_at(ops.padded_pairs_budget(ix, 512, 2)) == 0
+
+
+def test_live_view_tuned_pps_no_silent_drop():
+    """LiveView.topk under a pps > 1 tuned geometry must process the
+    FULL pair set (overflow 0, bit-identical ranking) — and the
+    default stats-free path must route the summed overflow through the
+    loud-overflow contract rather than silently discarding it."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=700, vocab=150,
+                                           avg_distinct=25, seed=2))
+    si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=256,
+                        delta_posting_capacity=256 * 64)
+    si.add_batch(tc)
+    si.seal()
+    th = np.asarray(si.view().hashes)
+    qh = th[th != 0][None, :].astype(np.uint32)
+    ref = si.topk(qh, 10)
+    tuned, stats = si.topk(qh, 10,
+                           tune=autotune.TuneConfig(pairs_per_step=2),
+                           return_stats=True)
+    assert stats["pair_overflow"] == 0
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(tuned.doc_ids))
+    np.testing.assert_array_equal(
+        np.asarray(ref.scores).view(np.uint32),
+        np.asarray(tuned.scores).view(np.uint32))
+    # stats-free path: warn_on_overflow runs (no-op at 0) and the
+    # ranking is unchanged
+    quiet = si.topk(qh, 10, tune=autotune.TuneConfig(pairs_per_step=2))
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(quiet.doc_ids))
+
+
+# ---------------------------------------------------------------------------
+# bitonic reducer is interpret-only until the j == 1 exchange is
+# Mosaic-legal
+# ---------------------------------------------------------------------------
+
+
+def test_bitonic_reducer_refused_on_compiled_lowering():
+    _check_reducer("bitonic", True)          # interpret mode allowed
+    _check_reducer("successive", False)      # compiled successive allowed
+    with pytest.raises(NotImplementedError):
+        _check_reducer("bitonic", False)
+    # the kernel entry point enforces it at trace time, before any
+    # Mosaic lowering can fail or miscompile
+    with pytest.raises(NotImplementedError):
+        fused_topk_blocked_pallas(
+            jnp.zeros((1, 8), jnp.int32), jnp.zeros((1, 8), jnp.float32),
+            jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32),
+            jnp.zeros((2, 8), jnp.float32), jnp.zeros((2,), jnp.int32),
+            jnp.ones((16,), jnp.float32), jnp.zeros((16,), jnp.float32),
+            jnp.ones((8,), jnp.float32), 16, 8, tile=16,
+            reducer="bitonic", interpret=False)
