@@ -72,11 +72,18 @@ def _peak_rss_mb() -> float:
 
 
 def build_streaming(spec: corpus.CorpusSpec, batch_docs: int,
-                    delta_docs: int = 16_384) -> tuple[SegmentedIndex, dict]:
-    """Stream-build a sealed SegmentedIndex; returns (index, stats)."""
+                    delta_docs: int = 16_384,
+                    layout_policy: size_model.LayoutCostModel | None = None,
+                    ) -> tuple[SegmentedIndex, dict]:
+    """Stream-build a sealed SegmentedIndex; returns (index, stats).
+
+    ``layout_policy=None`` keeps the historical hor-everywhere build
+    (bit-identical to pre-chooser campaigns); passing a
+    ``LayoutCostModel`` routes every seal/compaction through the
+    override ladder, and the converged mix lands in the artifact."""
     si = SegmentedIndex(delta_doc_capacity=delta_docs,
                         delta_posting_capacity=delta_docs * 64,
-                        seal_layout="hor")
+                        seal_layout="hor", layout_policy=layout_policy)
     rss0 = _peak_rss_mb()
     t0 = time.perf_counter()
     n_batches = 0
@@ -102,6 +109,47 @@ def build_streaming(spec: corpus.CorpusSpec, batch_docs: int,
         "peak_rss_delta_mb": round(_peak_rss_mb() - rss0, 1),
     }
     return si, stats
+
+
+def _layout_report(si: SegmentedIndex) -> dict:
+    """Converged layout mix + per-segment byte roofline.
+
+    For every sealed segment: the measured posting-array bytes, the
+    EXACT hor bytes the same postings would occupy
+    (``size_model.hor_posting_bytes_from_df`` over the segment's df),
+    and their ratio — the campaign's acceptance check that
+    chooser-selected packed segments really serve <= ~0.5x the HOR
+    posting traffic per query, not just that the chooser fired."""
+    mix = si.layout_mix()
+    segs = []
+    for seg in si.segments():
+        hor_exact = size_model.hor_posting_bytes_from_df(
+            np.asarray(seg.index.df))
+        measured = seg.index.posting_bytes()
+        rec = {
+            "layout": seg.layout,
+            "size_class": int(seg.size_class),
+            "docs": int(seg.doc_span),
+            "postings": int(seg.n_postings),
+            "reason": seg.chooser_reason,
+            "posting_bytes": int(measured),
+            "hor_posting_bytes": int(hor_exact),
+            "bytes_vs_hor": round(measured / max(hor_exact, 1), 3),
+        }
+        if seg.layout == "packed":
+            # per ROUTED BLOCK: what a query actually streams from HBM
+            # for each block its terms touch (same block boundaries in
+            # both layouts, so this IS the bytes/query ratio) — the
+            # array-total ratio above additionally counts rare-term
+            # blocks no frequent-term query reads
+            block = int(seg.index.block_tfs.shape[1])
+            per_packed = int(seg.index.packed.shape[1]) * 4 + block * 2 + 12
+            per_hor = block * 8 + 8
+            rec["block_bytes_vs_hor"] = round(per_packed / per_hor, 3)
+        segs.append(rec)
+    return {"counts": mix["counts"], "docs": mix["docs"],
+            "postings": mix["postings"], "reasons": mix["reasons"],
+            "segments": segs}
 
 
 def _query_pool(view, num_queries: int, terms_per_query: int,
@@ -240,12 +288,25 @@ def run_tier(tier: str, *, out_dir: str | None = None, k: int = 10,
     spec = TIERS[tier]
     common.reset_records()
     print(f"# campaign tier={tier} docs={spec.num_docs}")
-    si, build_stats = build_streaming(spec, BATCH_DOCS[tier])
+    # campaign tiers run with the adaptive chooser ON (defaults): every
+    # 16k-doc seal clears min_packed_docs, so the roofline winner is
+    # chosen at seal time and the artifact records the converged mix
+    si, build_stats = build_streaming(
+        spec, BATCH_DOCS[tier], layout_policy=size_model.LayoutCostModel())
     common.emit(f"campaign/{tier}/build", build_stats["wall_s"] * 1e6,
                 f"docs_per_sec={build_stats['docs_per_sec']};"
                 f"segments={build_stats['segments']};"
                 f"peak_rss_mb={build_stats['peak_rss_mb']}")
-    results: dict = {"build": build_stats}
+    results: dict = {"build": build_stats,
+                     "layout_mix": _layout_report(si)}
+    mix = results["layout_mix"]
+    packed_ratios = [s["bytes_vs_hor"] for s in mix["segments"]
+                     if s["layout"] == "packed"]
+    common.emit(
+        f"campaign/{tier}/layout_mix", 0.0,
+        f"counts={mix['counts']};"
+        f"max_packed_bytes_vs_hor="
+        f"{max(packed_ratios) if packed_ratios else 'n/a'}")
     if do_autotune:
         tune = run_autotune(si, tier, k=k)
         results["autotune"] = tune

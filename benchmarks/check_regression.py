@@ -7,8 +7,9 @@
 Compares the dedicated smoke-gate latency (``results.gate.p99_us``) of a
 fresh run against the committed baseline and exits non-zero if the
 fresh p99 exceeds ``factor`` times the baseline p99.  Both files must
-carry the current ``benchmarks.common.SCHEMA`` — a schema bump fails
-the gate loudly instead of comparing incompatible numbers.
+carry a schema from ``benchmarks.common.READ_SCHEMAS`` (every version
+in that tuple kept the gate fields' meaning) — anything else fails the
+gate loudly instead of comparing incompatible numbers.
 
 The default factor is deliberately loose (2x): shared CI runners are
 noisy, and the gate exists to catch order-of-magnitude kernel

@@ -19,7 +19,12 @@ from repro.text import corpus
 # Version of the BENCH_*.json artifact layout.  Bump when a field
 # changes meaning; consumers (CI regression gate, trajectory plots)
 # refuse mismatched schemas instead of misreading them.
-SCHEMA = "repro-bench/1"
+# v2 adds the layout-mix fields (results.layout_mix, per-segment
+# chooser decisions in the campaign tiers).  v1 artifacts stay
+# readable — every v1 field kept its meaning — so the committed
+# baselines don't need a regeneration flag-day.
+SCHEMA = "repro-bench/2"
+READ_SCHEMAS = ("repro-bench/1", "repro-bench/2")
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -172,10 +177,41 @@ def write_bench(name: str, results: dict | None = None,
 def read_bench(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("schema") != SCHEMA:
+    if doc.get("schema") not in READ_SCHEMAS:
         raise ValueError(
-            f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+            f"{path}: schema {doc.get('schema')!r} not in {READ_SCHEMAS!r}")
     return doc
+
+
+def smoke_layout_mix() -> dict:
+    """Layout mix of an auto-layout streaming build over the smoke
+    corpus — the plumbing check for the adaptive chooser (sealed runs
+    stay hor below the threshold, the compacted merge flips packed),
+    uploaded with the BENCH_smoke artifact so CI tracks the field."""
+    from repro.core import size_model
+    from repro.core.live_index import SegmentedIndex
+
+    tc, _h = bench_host(SMOKE_SPEC)
+    # smoke-sized threshold: seals (~500 docs) stay hor, the full
+    # compaction (~1.5k docs) crosses it and converges packed
+    si = SegmentedIndex(
+        term_hashes=tc.term_hashes, delta_doc_capacity=512,
+        delta_posting_capacity=512 * 64,
+        layout_policy=size_model.LayoutCostModel(min_packed_docs=1024))
+    import dataclasses as _dc
+    step = 500
+    for lo in range(0, tc.num_docs, step):
+        hi = min(lo + step, tc.num_docs)
+        si.add_batch(_dc.replace(
+            tc, doc_term_ids=tc.doc_term_ids[lo:hi],
+            doc_counts=tc.doc_counts[lo:hi], num_docs=hi - lo))
+        si.seal()
+    pre = si.layout_mix()
+    si.compact(all_segments=True)
+    post = si.layout_mix()
+    return {"sealed": {"counts": pre["counts"], "reasons": pre["reasons"]},
+            "compacted": {"counts": post["counts"],
+                          "reasons": post["reasons"]}}
 
 
 def smoke_gate_stats(reps: int = 30) -> dict:

@@ -53,7 +53,8 @@ def main() -> None:
         gate = common.smoke_gate_stats()
         common.write_bench(
             "smoke",
-            results={"gate": gate, "suites_failed": failed},
+            results={"gate": gate, "suites_failed": failed,
+                     "layout_mix": common.smoke_layout_mix()},
             config={"spec": dataclasses.asdict(common.SMOKE_SPEC),
                     "only": only})
     if failed:

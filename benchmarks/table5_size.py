@@ -1,6 +1,14 @@
 """Paper Table 5: table sizes + bulk build ("copy") times per
-representation, at the CPU bench tier AND analytically at paper scale."""
+representation, at the CPU bench tier AND analytically at paper scale.
+
+Also the calibration table for the adaptive layout chooser: each
+layout's MEASURED posting-array bytes next to the ``size_model``
+analytic prediction with a relative-error column — the same estimators
+``LayoutCostModel`` scores seals and compactions with, so a drifting
+prediction shows up here before it misroutes a layout decision."""
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import bench_host, emit, time_host
 from repro.core import build, layouts
@@ -10,6 +18,8 @@ from repro.core import size_model as sm
 def main() -> None:
     tc, host = bench_host()
     stats = build.corpus_stats(host)
+    run = sm.SegmentStats(host.num_docs, host.num_postings,
+                          int(np.count_nonzero(host.df)))
 
     builders = {
         "pr": layouts.build_coo,
@@ -27,6 +37,21 @@ def main() -> None:
             pr_bytes = nbytes
         emit(f"table5/size/{name}", us,
              f"bytes={nbytes};ratio_vs_pr={pr_bytes / nbytes:.2f}")
+        # measured posting arrays vs the chooser's analytic estimator
+        measured = ix.posting_bytes()
+        predicted = sm.est_posting_bytes(run, name)
+        rel_err = (predicted - measured) / measured
+        emit(f"table5/predict/{name}", 0.0,
+             f"measured={measured};predicted={predicted};"
+             f"rel_err={rel_err:+.3f}")
+
+    # the chooser's exact hor formula (per-term df, no aggregate
+    # approximation) must match the built arrays to the byte
+    hor_exact = sm.hor_posting_bytes_from_df(host.df)
+    hor_meas = layouts.build_blocked(host).posting_bytes()
+    emit("table5/predict/hor_exact", 0.0,
+         f"measured={hor_meas};predicted={hor_exact};"
+         f"rel_err={(hor_exact - hor_meas) / hor_meas:+.3f}")
 
     # the bulk sort itself (the §3.6 COPY path)
     us = time_host(lambda: build.bulk_build(tc), reps=1)

@@ -80,3 +80,21 @@ def pick_compaction(sizes: list[int], size_ratio: float = 4.0,
     if n - lo >= min_run:
         return lo, n
     return None
+
+
+def pick_layout_rewrite(current: list[str],
+                        wanted: list[str]) -> int | None:
+    """Stack position of the next segment to re-seal into its
+    policy-preferred layout, or None when converged.
+
+    ``current`` / ``wanted`` are per-segment layout tags in stack order
+    (oldest first).  Oldest-first: old segments are the biggest and the
+    least likely to be rewritten by a future tiered merge anyway, so
+    converging them first retires the most mispredicted bytes per
+    rewrite.  Same policy/mechanism split as ``pick_compaction`` — the
+    rebuild itself lives on ``SegmentedIndex.rewrite_segment``.
+    """
+    for i, (cur, want) in enumerate(zip(current, wanted)):
+        if cur != want:
+            return i
+    return None

@@ -100,7 +100,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build as build_mod
-from repro.core import compaction, layouts
+from repro.core import compaction, layouts, size_model
 from repro.core.build import TokenizedCorpus
 from repro.core.layouts import DocTable, PostingsHost
 from repro.core.query import QueryResult, final_scores
@@ -255,6 +255,7 @@ class LiveIndexStats:
     seals: int = 0
     compactions: int = 0
     deletes: int = 0
+    layout_rewrites: int = 0        # single-segment layout conversions
 
     @property
     def postings_merged(self) -> int:
@@ -312,6 +313,9 @@ class Segment:
     tfs: np.ndarray            # f32[P]
     doc_offsets: np.ndarray    # i64[doc_span + 1] forward CSR
     n_postings: int
+    size_class: int = 0        # padded doc-span class the build used
+    num_terms: int = 0         # distinct terms with postings in this run
+    chooser_reason: str = "default"  # how the layout ladder resolved
 
     @property
     def layout(self) -> str:
@@ -321,6 +325,35 @@ class Segment:
         round-trip), and the sharded stack groups on it."""
         return ("packed" if isinstance(self.index, layouts.PackedCsrIndex)
                 else "hor")
+
+    @property
+    def stats(self) -> size_model.SegmentStats:
+        """Aggregate shape the layout chooser sees for this run."""
+        return size_model.SegmentStats(num_docs=self.doc_span,
+                                       num_postings=self.n_postings,
+                                       num_terms=self.num_terms)
+
+
+def _layout_mix(segments) -> dict:
+    """Aggregate per-layout composition of a sealed stack — the
+    observability payload behind ``SegmentedIndex.layout_mix`` /
+    ``LiveView.layout_mix`` and ``ServerMetrics.layout_mix``."""
+    mix = {"segments": [], "counts": {}, "docs": {}, "postings": {},
+           "reasons": {}}
+    for seg in segments:
+        lay = seg.layout
+        mix["segments"].append({
+            "doc_base": int(seg.doc_base), "doc_span": int(seg.doc_span),
+            "size_class": int(seg.size_class), "layout": lay,
+            "n_postings": int(seg.n_postings),
+            "chooser_reason": seg.chooser_reason})
+        mix["counts"][lay] = mix["counts"].get(lay, 0) + 1
+        mix["docs"][lay] = mix["docs"].get(lay, 0) + int(seg.doc_span)
+        mix["postings"][lay] = (mix["postings"].get(lay, 0)
+                                + int(seg.n_postings))
+        mix["reasons"][seg.chooser_reason] = \
+            mix["reasons"].get(seg.chooser_reason, 0) + 1
+    return mix
 
 
 # ---------------------------------------------------------------------------
@@ -363,6 +396,11 @@ class LiveView:
     @property
     def num_segments(self) -> int:
         return len(self.segments)
+
+    def layout_mix(self) -> dict:
+        """Per-layout composition of the pinned stack (counts, docs,
+        postings, chooser reasons, per-segment decisions)."""
+        return _layout_mix(self.segments)
 
     # -- query path (identical op sequence to the live index) --------------
 
@@ -552,7 +590,8 @@ class SegmentedIndex:
                  delta_doc_capacity: int = 512,
                  delta_posting_capacity: int | None = None,
                  policy: compaction.TieredPolicy | None = None,
-                 rank_seed: int = 7, seal_layout: str = "hor"):
+                 rank_seed: int = 7, seal_layout: str = "hor",
+                 layout_policy: size_model.LayoutCostModel | None = None):
         if seal_layout not in ("hor", "packed"):
             raise ValueError(f"unknown seal layout: {seal_layout!r}")
         self._hashes = (np.asarray(term_hashes, np.uint32).copy()
@@ -574,6 +613,7 @@ class SegmentedIndex:
         self._policy = policy or compaction.TieredPolicy()
         self._rng = np.random.default_rng(rank_seed)
         self._seal_layout = seal_layout
+        self._layout_policy = layout_policy
         self._epoch = 0
         self._view: LiveView | None = None
         self.stats = LiveIndexStats()
@@ -610,6 +650,24 @@ class SegmentedIndex:
     def segments(self) -> list:
         """The sealed stack (ascending doc_base; treat as read-only)."""
         return list(self._segments)
+
+    def layout_mix(self) -> dict:
+        """Per-layout composition of the sealed stack (counts, docs,
+        postings, chooser reasons, per-segment decisions) — what a
+        campaign run reports as the mix the chooser converged to."""
+        return _layout_mix(self._segments)
+
+    @property
+    def layout_policy(self) -> size_model.LayoutCostModel | None:
+        """The POLICY rung of the seal-layout override ladder
+        (``explicit seal(layout=...) arg > layout_policy > seal_layout``
+        default).  ``None`` — the default — is bit-identical to the
+        pre-chooser constants."""
+        return self._layout_policy
+
+    @layout_policy.setter
+    def layout_policy(self, policy: size_model.LayoutCostModel | None):
+        self._layout_policy = policy
 
     @property
     def delta_postings(self) -> int:
@@ -873,20 +931,33 @@ class SegmentedIndex:
                        layout: str | None = None) -> Segment:
         """Bulk-build one sealed segment over LOCAL doc ids and pad it to
         its size class.  ``doc_of``/``terms``/``tfs`` must be (doc,
-        term)-sorted."""
-        layout = layout or self._seal_layout
-        if layout not in ("hor", "packed"):
-            raise ValueError(f"unknown seal layout: {layout!r}")
+        term)-sorted.
+
+        ``layout`` resolution is the override ladder: an explicit arg
+        wins, else the installed ``layout_policy`` chooses from this
+        run's measured shape, else the constructor's ``seal_layout``
+        default — so seal AND compaction both funnel through the
+        chooser, which is what makes merged (hot) segments converge to
+        the winning layout over the LSM lifecycle."""
         w = len(self._hashes)
         d_pad = layouts.size_class(span, base=layouts.ROUTE_TILE)
+        order = np.lexsort((doc_of, terms))          # term-major for bulk
+        df_seg = (np.bincount(terms, minlength=w) if len(terms)
+                  else np.zeros(w, np.int64))
+        n_terms_seg = int(np.count_nonzero(df_seg))
+        run_stats = size_model.SegmentStats(
+            num_docs=int(span), num_postings=len(terms),
+            num_terms=n_terms_seg)
+        layout, reason = size_model.resolve_layout(
+            layout, self._layout_policy, run_stats, self._seal_layout,
+            size_class=d_pad)
+        if layout not in ("hor", "packed"):
+            raise ValueError(f"unknown seal layout: {layout!r}")
         # seal/compaction emit segments already tuned for their size
         # class: the routing cache is built at the tile width the active
         # tuning table picked for (pallas, d_pad, layout) — queries at
         # other widths fall back to the scaled budget path
         route_tile = autotune.lookup("pallas", d_pad, layout).tile
-        order = np.lexsort((doc_of, terms))          # term-major for bulk
-        df_seg = (np.bincount(terms, minlength=w) if len(terms)
-                  else np.zeros(w, np.int64))
         offsets = np.zeros(w + 1, np.int64)
         np.cumsum(df_seg, out=offsets[1:])
         norm_pad = np.zeros(d_pad, np.float32)
@@ -905,8 +976,12 @@ class SegmentedIndex:
                 nb_pad=layouts.size_class(int(ix.packed.shape[0])),
                 w_pad=layouts.size_class(w, base=256),
                 max_posting_len=layouts.size_class(ix.max_posting_len),
-                words_per_block=layouts.size_class(ix.words_per_block,
-                                                   base=8),
+                # the packed id plane is THE roofline term packed wins
+                # on, so its lane dim pads arithmetically (next multiple
+                # of 8 words) instead of geometrically: doubling 52 ->
+                # 64 words would stream back ~6% of the per-block win
+                # as padding on every routed block
+                words_per_block=-(-ix.words_per_block // 8) * 8,
                 route_pairs_max=layouts.size_class(ix.route_pairs_max),
                 route_span_max=layouts.size_class(ix.route_span_max,
                                                   base=8))
@@ -930,7 +1005,9 @@ class SegmentedIndex:
                        doc_of=doc_of.astype(np.int32),
                        terms=terms.astype(np.int32),
                        tfs=tfs.astype(np.float32),
-                       doc_offsets=doc_offsets, n_postings=len(terms))
+                       doc_offsets=doc_offsets, n_postings=len(terms),
+                       size_class=int(d_pad), num_terms=n_terms_seg,
+                       chooser_reason=reason)
 
     def compact(self, all_segments: bool = False) -> bool:
         """Merge a policy-picked run of adjacent segments into one,
@@ -981,6 +1058,40 @@ class SegmentedIndex:
     def _maybe_compact(self) -> None:
         while self.compact():
             pass
+
+    def pick_layout_rewrite(self) -> int | None:
+        """Position of the oldest sealed segment whose layout disagrees
+        with the installed ``layout_policy`` (None when no policy, or
+        the stack already converged).  O(num_segments) on stored run
+        stats — no posting data touched.  The decision re-evaluates the
+        SAME stats ``rewrite_segment`` will rebuild with, so a rewrite
+        can never oscillate."""
+        if self._layout_policy is None:
+            return None
+        current = [s.layout for s in self._segments]
+        wanted = [self._layout_policy.choose(
+            s.stats, size_class=s.size_class).layout
+            for s in self._segments]
+        return compaction.pick_layout_rewrite(current, wanted)
+
+    def rewrite_segment(self, i: int) -> None:
+        """Re-seal segment ``i`` in place through the layout ladder
+        (policy decides — there is no explicit arg here), physically
+        dropping its tombstoned postings.  Doc ids, norms, and scores
+        are unchanged: the rebuilt segment answers bit-identically in
+        either layout (the layout-parity contract).  Epoch advances so
+        serving tiers repin."""
+        seg = self._segments[i]
+        live = self._live[seg.doc_of.astype(np.int64) + seg.doc_base]
+        doc_of = seg.doc_of[live].astype(np.int64)
+        terms = seg.terms[live].astype(np.int64)
+        tfs = seg.tfs[live]
+        new = self._build_segment(seg.doc_base, seg.doc_span, doc_of,
+                                  terms, tfs)
+        self._segments[i] = new
+        self.stats.postings_compacted += seg.n_postings
+        self.stats.layout_rewrites += 1
+        self._bump_epoch()
 
     # -- norms / doc metadata ----------------------------------------------
 

@@ -21,6 +21,7 @@ accounting used by benchmarks (true array bytes, no tuple overhead).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 PSQL_FIELD_BYTES = 4     # int4 / float4
 PSQL_TUPLE_OVERHEAD = 40  # paper §4.1
@@ -128,3 +129,200 @@ def candidate_bytes_per_query(num_docs: int, tile: int, k_tile: int) -> int:
     geometry with the smaller output footprint."""
     n_tiles = max(-(-int(num_docs) // max(int(tile), 1)), 1)
     return n_tiles * int(k_tile) * 8
+
+
+# ---------------------------------------------------------------------------
+# per-segment layout cost model (the adaptive hor-vs-packed chooser)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 128          # layouts.BLOCK; kept literal to avoid a core cycle
+_HOR_SLOT_BYTES = 8   # i32 doc id + f32 tf per posting slot
+_PACKED_TF_BYTES = 2  # f16 tf per posting
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentStats:
+    """Aggregate shape of one posting run (a sealed segment, a merged
+    compaction input, or a whole host corpus) — everything the layout
+    chooser needs, nothing layout-specific."""
+    num_docs: int      # local doc span of the run
+    num_postings: int
+    num_terms: int     # distinct terms with >= 1 posting in the run
+
+    @property
+    def avg_df(self) -> float:
+        return self.num_postings / max(self.num_terms, 1)
+
+
+def est_delta_bits(stats: SegmentStats) -> float:
+    """Expected per-block bit width of delta-coded doc ids.
+
+    With df postings spread over num_docs local ids the mean gap is
+    num_docs/df; block packing pays the WIDEST gap in each 128-posting
+    block, so add one bit of headroom over ceil(log2(mean_gap)) — the
+    same +1 slack the measured corpora show (Zipfian 20k-doc bench:
+    predicted 7 bits, built 6-8)."""
+    gap = max(stats.num_docs / max(stats.avg_df, 1.0), 1.0)
+    bits = math.ceil(math.log2(gap + 1.0)) + 1
+    return float(min(max(bits, 1), 32))
+
+
+def hor_posting_bytes_from_df(df, block: int = _BLOCK) -> int:
+    """EXACT posting-array bytes of an (unpadded) BlockedIndex built
+    from per-term document frequencies ``df``: each term rounds up to
+    whole 128-lane blocks of (i32 id, f32 tf), plus the per-block
+    min/max routing bounds and the per-term block offsets."""
+    import numpy as np
+    df = np.asarray(df, dtype=np.int64)
+    nb = int(np.sum(-(-df[df > 0] // block)))
+    offsets = (len(df) + 1) * 4
+    return offsets + nb * (block * _HOR_SLOT_BYTES + 8)
+
+
+def est_hor_posting_bytes(stats: SegmentStats, block: int = _BLOCK) -> int:
+    """Analytic BlockedIndex posting bytes from aggregate stats: every
+    term wastes half a block of padding in expectation."""
+    nb = stats.num_postings / block + 0.5 * stats.num_terms
+    offsets = (stats.num_terms + 1) * 4
+    return int(offsets + nb * (block * _HOR_SLOT_BYTES + 8))
+
+
+def est_packed_posting_bytes(stats: SegmentStats, block: int = _BLOCK,
+                             bits: float | None = None) -> int:
+    """Analytic PackedCsrIndex posting bytes from aggregate stats.
+    Both the packed id words and the f16 tf plane are stored in whole
+    128-slot blocks (the kernel decodes block-at-a-time), so the cost
+    is per padded SLOT, not per posting: bits/8 + 2 bytes per slot,
+    plus the per-block (bits, base, count) decode triple and the
+    per-term offsets."""
+    if bits is None:
+        bits = est_delta_bits(stats)
+    nb = stats.num_postings / block + 0.5 * stats.num_terms
+    offsets = (stats.num_terms + 1) * 4
+    per_slot = bits / 8.0 + _PACKED_TF_BYTES
+    return int(offsets + nb * (block * per_slot + 12))
+
+
+def est_posting_bytes(stats: SegmentStats, layout: str,
+                      block: int = _BLOCK) -> int:
+    """Analytic posting-array bytes for any registered layout — the
+    prediction side of the benchmarks' measured-vs-analytic table
+    (``benchmarks/table5_size.py`` puts the relative error next to the
+    measured ``posting_bytes()``).  Granularity matches each layout's
+    ``posting_bytes``: the posting columns + per-term offsets, NOT the
+    word/doc tables or lookup structures (those are layout-invariant)."""
+    offsets = (stats.num_terms + 1) * 4
+    if layout in ("pr", "coo"):
+        # heap tuple (word i32, doc i32, tf f32) + B+tree perm i32
+        return int(stats.num_postings * 16)
+    if layout in ("or", "csr", "cor", "compact_csr"):
+        return int(offsets + stats.num_postings * 8)   # doc i32 + tf f32
+    if layout == "hor":
+        return est_hor_posting_bytes(stats, block)
+    if layout == "packed":
+        return est_packed_posting_bytes(stats, block)
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutDecision:
+    """One chooser verdict: the layout plus a human-readable reason
+    string that survives into segment introspection and snapshots."""
+    layout: str
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutCostModel:
+    """Measured per-segment hor-vs-packed chooser.
+
+    Cost per candidate layout = predicted posting-HBM bytes/query (the
+    analytic estimators above, calibrated against the measured roofline:
+    packed ~ 0.33x HOR on the bench corpora) + a decode-cost term taken
+    from the kernel tuning table when ``autotune_index`` has measured
+    this (backend, size_class) for BOTH layouts.  Packed always wins
+    the byte count, so the analytic arm gates on segment size: below
+    ``min_packed_docs`` local docs a segment is decode-bound, not
+    HBM-bandwidth-bound, and HOR's unpack-free blocks win — which is
+    what makes compaction *converge*: small seals stay hor, merged runs
+    cross the threshold and flip to packed.
+
+    This object is the POLICY rung of the override ladder
+    (``explicit arg > policy > historical default``); a ``None`` policy
+    everywhere is bit-identical to today's constants, the same
+    discipline as the empty tuning table.
+    """
+    min_packed_docs: int = 4096
+    hbm_ratio_max: float = 0.9   # packed must beat hor by >= 10% bytes
+    candidates: tuple = ("hor", "packed")
+
+    def predicted_posting_bytes(self, stats: SegmentStats,
+                                layout: str) -> int:
+        if layout == "packed":
+            return est_packed_posting_bytes(stats)
+        return est_hor_posting_bytes(stats)
+
+    def measured_cost_s(self, backend: str, size_class: int,
+                        layout: str) -> float | None:
+        """Median fused-engine seconds from the active tuning table's
+        sweep record for this exact (backend, size_class, layout), or
+        None when the sweep hasn't covered it."""
+        from repro.kernels import autotune
+        return autotune.get_active().cost(backend, size_class, layout)
+
+    def choose(self, stats: SegmentStats, size_class: int | None = None,
+               backend: str = "pallas") -> LayoutDecision:
+        """Pick a layout for a run shaped like ``stats``.
+
+        Preference order: measured decode costs when the tuning table
+        has swept BOTH candidate layouts at this (backend, size_class);
+        otherwise the analytic byte model gated on ``min_packed_docs``.
+        """
+        if size_class is None:
+            size_class = tuning_size_class(stats.num_docs)
+        costs = {l: self.measured_cost_s(backend, size_class, l)
+                 for l in self.candidates}
+        if all(c is not None for c in costs.values()):
+            best = min(self.candidates, key=lambda l: (costs[l], l))
+            return LayoutDecision(best, (
+                f"measured:{backend}@{size_class} "
+                + " ".join(f"{l}={costs[l]:.2e}s" for l in self.candidates)))
+        if stats.num_docs < self.min_packed_docs:
+            return LayoutDecision("hor", (
+                f"analytic:small-segment {stats.num_docs}"
+                f"<{self.min_packed_docs} docs (decode-bound)"))
+        hb = self.predicted_posting_bytes(stats, "hor")
+        pb = self.predicted_posting_bytes(stats, "packed")
+        ratio = pb / max(hb, 1)
+        if ratio <= self.hbm_ratio_max:
+            return LayoutDecision("packed", (
+                f"analytic:bytes/q {ratio:.2f}x hor @{size_class}"))
+        return LayoutDecision("hor", (
+            f"analytic:packed only {ratio:.2f}x hor @{size_class}"
+            f" (>{self.hbm_ratio_max})"))
+
+    def to_dict(self) -> dict:
+        return {"min_packed_docs": self.min_packed_docs,
+                "hbm_ratio_max": self.hbm_ratio_max,
+                "candidates": list(self.candidates)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayoutCostModel":
+        return cls(min_packed_docs=int(d["min_packed_docs"]),
+                   hbm_ratio_max=float(d["hbm_ratio_max"]),
+                   candidates=tuple(d.get("candidates", ("hor", "packed"))))
+
+
+def resolve_layout(explicit: str | None, policy, stats: SegmentStats,
+                   default: str, size_class: int | None = None,
+                   backend: str = "pallas") -> tuple[str, str]:
+    """THE override ladder every layout-taking layer funnels through:
+    ``explicit arg > policy > historical default``.  Returns
+    ``(layout, reason)``; with ``explicit=None`` and ``policy=None``
+    this is exactly the pre-chooser constant-default behavior."""
+    if explicit is not None:
+        return str(explicit), "explicit"
+    if policy is not None:
+        d = policy.choose(stats, size_class=size_class, backend=backend)
+        return d.layout, d.reason
+    return str(default), "default"

@@ -26,11 +26,15 @@ Both are shard_map programs over stacked, padded per-shard CSR arrays
 The fused engines make the compressed (delta+bit-packed) layout a
 first-class citizen of EVERY distributed path: the term-sharded tier
 re-compresses each vocab shard's posting lists
-(``build_term_sharded_packed``) and the doc-sharded serving tier stacks
+(``build_term_sharded_packed``), the doc-sharded serving tier stacks
 packed — or mixed hor+packed — sealed segments
-(``stack_segment_shards``), in both cases decoding blocks IN VMEM inside
-the fused kernel so only compressed bytes cross HBM per shard — the
-paper's §4.3 layout-determines-I/O argument at cluster scale.
+(``stack_segment_shards``), and the bulk doc-sharded tier re-compresses
+each document slice (``build_doc_sharded_packed``), in every case
+decoding blocks IN VMEM inside the fused kernel so only compressed
+bytes cross HBM per shard — the paper's §4.3 layout-determines-I/O
+argument at cluster scale.  Which bulk layout to build is itself a
+measured decision: ``build_doc_sharded_fused`` runs the layout ladder
+(explicit arg > ``size_model.LayoutCostModel`` policy > "hor").
 """
 from __future__ import annotations
 
@@ -337,16 +341,17 @@ class BlockedDocShardedIndex:
                 if isinstance(getattr(self, f.name), np.ndarray)}
 
 
-def build_doc_sharded_blocked(host: PostingsHost, n_shards: int,
-                              tile: int | None = None
-                              ) -> BlockedDocShardedIndex:
-    tile = tile or layouts.ROUTE_TILE
+def _doc_shard_subhosts(host: PostingsHost, n_shards: int):
+    """Slice the corpus into per-doc-range PostingsHost sub-indexes
+    (contiguous id ranges, LOCAL doc ids, term-major posting order) —
+    the one slicing both bulk doc-sharded builders share, so the HOR
+    and packed structures see identical per-shard block boundaries
+    (that is what makes the two fused engines bit-identical)."""
     bounds = np.linspace(0, host.num_docs, n_shards + 1).astype(np.int64)
     dmax = int(np.max(np.diff(bounds)))
     W = host.num_terms
     term_of = np.repeat(np.arange(W, dtype=np.int64), np.diff(host.offsets))
-
-    shards = []
+    subs = []
     for s in range(n_shards):
         lo, hi = bounds[s], bounds[s + 1]
         m = (host.doc_ids >= lo) & (host.doc_ids < hi)
@@ -356,11 +361,21 @@ def build_doc_sharded_blocked(host: PostingsHost, n_shards: int,
         df_l = np.bincount(term_of[m], minlength=W).astype(np.int32)
         offs = np.zeros(W + 1, dtype=np.int64)
         np.cumsum(df_l, out=offs[1:])
-        sub = PostingsHost(term_hashes=host.term_hashes, df=df_l,
-                           offsets=offs, doc_ids=docs, tfs=tfs,
-                           num_docs=int(hi - lo),
-                           norm=host.norm[lo:hi], rank=host.rank[lo:hi])
-        shards.append(layouts.build_blocked(sub))
+        subs.append(PostingsHost(term_hashes=host.term_hashes, df=df_l,
+                                 offsets=offs, doc_ids=docs, tfs=tfs,
+                                 num_docs=int(hi - lo),
+                                 norm=host.norm[lo:hi],
+                                 rank=host.rank[lo:hi]))
+    return subs, bounds, dmax
+
+
+def build_doc_sharded_blocked(host: PostingsHost, n_shards: int,
+                              tile: int | None = None
+                              ) -> BlockedDocShardedIndex:
+    tile = tile or layouts.ROUTE_TILE
+    subs, bounds, dmax = _doc_shard_subhosts(host, n_shards)
+    W = host.num_terms
+    shards = [layouts.build_blocked(sub) for sub in subs]
 
     block = shards[0].block
     nbmax = max(int(ix.block_docs.shape[0]) for ix in shards)
@@ -401,8 +416,135 @@ def build_doc_sharded_blocked(host: PostingsHost, n_shards: int,
     )
 
 
-def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
-                                  axis: str, k: int = 10):
+@dataclasses.dataclass
+class PackedDocShardedIndex:
+    """Stacked per-shard delta+bit-packed arrays for the fused engine —
+    the compressed twin of ``BlockedDocShardedIndex`` (the long-standing
+    HOR-only gap of the bulk doc-sharded path).
+
+    Each shard re-compresses its document slice: LOCAL doc-id deltas
+    bit-packed at per-block minimal widths, f16 tfs, the per-block
+    (bits, base, count) decode scalars, and routing recomputed against
+    the PADDED local doc space so every shard's kernel sees the same
+    tile grid.  Cross-shard padding blocks carry ``bits=1, count=0`` —
+    they decode to nothing, the same inert-padding trick the packed
+    term-sharded and segment-stack paths use.
+    """
+    sorted_hash: np.ndarray    # u32[S, W]
+    df_global: np.ndarray      # i32[S, W]
+    block_offsets: np.ndarray  # i32[S, W+1]
+    packed: np.ndarray         # u32[S, NBmax, WPB]  LOCAL-doc deltas
+    block_tfs: np.ndarray      # f16[S, NBmax, BLOCK]
+    block_bits: np.ndarray     # i32[S, NBmax]  (1 on padding blocks)
+    block_base: np.ndarray     # i32[S, NBmax]
+    block_count: np.ndarray    # i32[S, NBmax]  (0 on padding blocks)
+    tile_first: np.ndarray     # i32[S, NBmax]
+    tile_count: np.ndarray     # i32[S, NBmax]
+    norm: np.ndarray           # f32[S, Dmax]
+    doc_base: np.ndarray       # i32[S]
+    n_shards: int
+    num_docs: int              # global
+    dmax: int                  # max local docs per shard
+    tile: int
+    block: int
+    words_per_block: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def build_doc_sharded_packed(host: PostingsHost, n_shards: int,
+                             tile: int | None = None
+                             ) -> PackedDocShardedIndex:
+    """Per-doc-shard re-compression over the SAME slicing as
+    ``build_doc_sharded_blocked`` — identical shard bounds, per-shard
+    posting order, and block boundaries, so the packed fused engine is
+    bit-identical to the HOR one under the candidate-merge tier."""
+    tile = tile or layouts.ROUTE_TILE
+    subs, bounds, dmax = _doc_shard_subhosts(host, n_shards)
+    W = host.num_terms
+    shards = [layouts.build_packed_csr(sub) for sub in subs]
+
+    block = shards[0].block
+    nbmax = max(int(ix.packed.shape[0]) for ix in shards)
+    wpb = max(ix.words_per_block for ix in shards)
+    S = n_shards
+    pk = np.zeros((S, nbmax, wpb), dtype=np.uint32)
+    bt = np.zeros((S, nbmax, block), dtype=np.float16)
+    bits_a = np.ones((S, nbmax), dtype=np.int32)   # padding decodes inert
+    base_a = np.zeros((S, nbmax), dtype=np.int32)
+    cnt_a = np.zeros((S, nbmax), dtype=np.int32)
+    tf_arr = np.zeros((S, nbmax), dtype=np.int32)
+    tc_arr = np.zeros((S, nbmax), dtype=np.int32)
+    offs_a = np.zeros((S, W + 1), dtype=np.int32)
+    norm_a = np.zeros((S, dmax), dtype=np.float32)
+    for s, ix in enumerate(shards):
+        nb = int(ix.packed.shape[0])
+        pk[s, :nb, :ix.words_per_block] = np.asarray(ix.packed)
+        bt[s, :nb] = np.asarray(ix.block_tfs)
+        bits_a[s, :nb] = np.asarray(ix.block_bits)
+        base_a[s, :nb] = np.asarray(ix.block_base)
+        cnt_a[s, :nb] = np.asarray(ix.block_count)
+        # routing spans vs the PADDED local doc space (uniform across
+        # shards), same as the HOR builder
+        tf_s, tc_s = layouts._block_tile_routing(
+            np.asarray(ix.block_min), np.asarray(ix.block_max), dmax, tile)
+        tf_arr[s, :nb] = tf_s
+        tc_arr[s, :nb] = tc_s
+        offs_a[s] = np.asarray(ix.block_offsets)
+        lo, hi = bounds[s], bounds[s + 1]
+        norm_a[s, :hi - lo] = host.norm[lo:hi]
+    order = np.argsort(host.term_hashes, kind="stable")
+    return PackedDocShardedIndex(
+        sorted_hash=np.broadcast_to(
+            host.term_hashes[order][None, :], (S, W)).copy(),
+        df_global=np.broadcast_to(
+            host.df[order].astype(np.int32)[None, :], (S, W)).copy(),
+        block_offsets=offs_a, packed=pk, block_tfs=bt, block_bits=bits_a,
+        block_base=base_a, block_count=cnt_a,
+        tile_first=tf_arr, tile_count=tc_arr, norm=norm_a,
+        doc_base=bounds[:-1].astype(np.int32), n_shards=S,
+        num_docs=host.num_docs, dmax=dmax, tile=tile, block=block,
+        words_per_block=wpb,
+        max_blocks_per_term=max(ix.max_blocks_per_term for ix in shards),
+        route_span_max=max(int(np.max(tc_arr[s])) if nbmax else 0
+                           for s in range(S)),
+        route_pairs_max=max(int(np.sum(tc_arr[s])) for s in range(S)),
+    )
+
+
+def build_doc_sharded_fused(host: PostingsHost, n_shards: int, *,
+                            tile: int | None = None,
+                            layout: str | None = None, policy=None):
+    """Layout-ladder front door for the bulk doc-sharded fused engine:
+    ``explicit layout > policy (size_model.LayoutCostModel over the
+    host's aggregate stats) > historical "hor" default``.  Returns
+    ``(index, reason)`` where index is a Blocked- or
+    PackedDocShardedIndex — both accepted by
+    ``make_doc_sharded_fused_scorer`` — and reason is the chooser's
+    provenance string."""
+    from repro.core import size_model
+    stats = size_model.SegmentStats(
+        num_docs=int(host.num_docs),
+        num_postings=int(host.num_postings),
+        num_terms=int(np.count_nonzero(np.asarray(host.df))))
+    layout, reason = size_model.resolve_layout(layout, policy, stats,
+                                               "hor")
+    if layout == "packed":
+        return build_doc_sharded_packed(host, n_shards, tile=tile), reason
+    if layout == "hor":
+        return build_doc_sharded_blocked(host, n_shards, tile=tile), reason
+    raise ValueError(f"unknown layout: {layout!r}")
+
+
+def make_doc_sharded_fused_scorer(
+        index: BlockedDocShardedIndex | PackedDocShardedIndex,
+        mesh: Mesh, axis: str, k: int = 10):
     """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
 
     Same contract as ``make_doc_sharded_scorer`` but every shard runs
@@ -411,23 +553,32 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
     in VMEM (the dense local score vector never reaches HBM), the
     shard's tile candidates become global candidates via ``doc_base``,
     and a thin all-gather candidate merge produces the global answer —
-    the ODYS-style per-partition extraction + merge tier."""
+    the ODYS-style per-partition extraction + merge tier.
+
+    Accepts either bulk layout: HOR blocks score in place, packed blocks
+    decode IN VMEM (``fused_topk_packed_pallas``) — bit-identical
+    answers, ~3x fewer posting bytes across HBM per shard."""
     from repro.distributed.topk import local_candidate_merge
     from repro.kernels import autotune
     from repro.kernels.fused_decode_score import (
-        build_batched_pairs, default_k_tile, fused_topk_blocked_pallas)
+        build_batched_pairs, default_k_tile, fused_topk_blocked_pallas,
+        fused_topk_packed_pallas)
     from repro.kernels.ops import (expand_block_candidates,
                                     round_up_pairs, warn_on_overflow)
 
+    packed_layout = isinstance(index, PackedDocShardedIndex)
     arrs = index.device_arrays()
     dmax, tile = index.dmax, index.tile
     n_tiles = max(-(-dmax // tile), 1)
     num_docs = index.num_docs
+    block = (index.block if packed_layout
+             else int(index.block_docs.shape[-1]))
     m_blocks = max(index.max_blocks_per_term, 1)
     # tuned geometry for this shard size — the tile itself is pinned by
     # the sharded routing arrays, so only the routing-free axes (k_pad,
     # q_pad, reducer, unroll) follow the tuning table
-    cfg = autotune.lookup("pallas", dmax, "hor")
+    cfg = autotune.lookup("pallas", dmax,
+                          "packed" if packed_layout else "hor")
     q_pad = cfg.q_pad
     pps = cfg.pairs_per_step
     if cfg.tile == tile:
@@ -435,9 +586,11 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
     else:
         k_tile = min(default_k_tile(k, tile, cfg.k_pad), tile)
 
-    sharded = {n: P(axis) for n in
-               ("sorted_hash", "df_global", "block_offsets", "block_docs",
-                "block_tfs", "tile_first", "tile_count", "norm", "doc_base")}
+    names = ("sorted_hash", "df_global", "block_offsets", "tile_first",
+             "tile_count", "norm", "doc_base", "block_tfs")
+    names += (("packed", "block_bits", "block_base", "block_count")
+              if packed_layout else ("block_docs",))
+    sharded = {n: P(axis) for n in names}
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -455,8 +608,7 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
 
         cand_block, cand_valid, cand_q, cand_w, _ = \
             expand_block_candidates(sq["block_offsets"], tid[None],
-                                    w[None], m_blocks,
-                                    sq["block_docs"].shape[-1])
+                                    w[None], m_blocks, block)
         max_pairs = max(min(index.route_pairs_max,
                             t * m_blocks * max(index.route_span_max, 1)), 8)
         if pps > 1:
@@ -473,10 +625,18 @@ def make_doc_sharded_fused_scorer(index: BlockedDocShardedIndex, mesh: Mesh,
         pqw = jnp.pad(pqw, ((0, 0), (0, q_pad - 1)))
         qnorm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-12))
         qn = jnp.full((q_pad,), 1.0, jnp.float32).at[0].set(qnorm)
-        vals, ids = fused_topk_blocked_pallas(
-            sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
-            sq["norm"], jnp.zeros_like(sq["norm"]), qn, dmax, k_tile,
-            tile=tile, reducer=cfg.reducer, pairs_per_step=pps)
+        if packed_layout:
+            vals, ids = fused_topk_packed_pallas(
+                sq["packed"], sq["block_tfs"], pb, pt, pqw, pcap,
+                sq["block_bits"][pb], sq["block_base"][pb],
+                sq["block_count"][pb], sq["norm"],
+                jnp.zeros_like(sq["norm"]), qn, dmax, block, k_tile,
+                tile=tile, reducer=cfg.reducer, pairs_per_step=pps)
+        else:
+            vals, ids = fused_topk_blocked_pallas(
+                sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
+                sq["norm"], jnp.zeros_like(sq["norm"]), qn, dmax, k_tile,
+                tile=tile, reducer=cfg.reducer, pairs_per_step=pps)
         gids = jnp.where(ids[0] >= 0, ids[0] + sq["doc_base"], -1)
         return local_candidate_merge(vals[0], gids, k, axis)
 

@@ -109,18 +109,31 @@ class TuningTable:
 
     def __init__(self) -> None:
         self._entries: dict[tuple[str, int, str], TuneConfig] = {}
+        self._costs: dict[tuple[str, int, str], float] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def put(self, backend: str, size_class: int, layout: str,
-            cfg: TuneConfig) -> None:
-        self._entries[(str(backend), int(size_class), str(layout))] = cfg
+            cfg: TuneConfig, cost_s: float | None = None) -> None:
+        key = (str(backend), int(size_class), str(layout))
+        self._entries[key] = cfg
+        if cost_s is not None:
+            self._costs[key] = float(cost_s)
 
     def get(self, backend: str, size_class: int,
             layout: str) -> TuneConfig | None:
         return self._entries.get((str(backend), int(size_class),
                                   str(layout)))
+
+    def cost(self, backend: str, size_class: int,
+             layout: str) -> float | None:
+        """Measured median seconds of the winning config at EXACTLY this
+        (backend, size_class, layout), or None if the sweep never timed
+        it.  No nearest-class fallback: the layout cost model must only
+        compare costs measured at the same class."""
+        return self._costs.get((str(backend), int(size_class),
+                                str(layout)))
 
     def lookup(self, backend: str, num_docs: int, layout: str) -> TuneConfig:
         """Config for an index of ``num_docs`` docs; falls back to the
@@ -138,14 +151,15 @@ class TuningTable:
         return DEFAULT_CONFIG
 
     def to_dict(self) -> dict:
-        return {
-            "schema": TUNE_SCHEMA,
-            "entries": [
-                {"backend": b, "size_class": c, "layout": l,
+        entries = []
+        for (b, c, l), cfg in sorted(self._entries.items()):
+            e = {"backend": b, "size_class": c, "layout": l,
                  "config": cfg.to_dict()}
-                for (b, c, l), cfg in sorted(self._entries.items())
-            ],
-        }
+            cost = self._costs.get((b, c, l))
+            if cost is not None:
+                e["median_s"] = cost
+            entries.append(e)
+        return {"schema": TUNE_SCHEMA, "entries": entries}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuningTable":
@@ -155,7 +169,8 @@ class TuningTable:
         t = cls()
         for e in d.get("entries", []):
             t.put(e["backend"], e["size_class"], e["layout"],
-                  TuneConfig.from_dict(e["config"]))
+                  TuneConfig.from_dict(e["config"]),
+                  cost_s=e.get("median_s"))
         return t
 
     def save(self, path: str) -> None:
@@ -315,5 +330,8 @@ def autotune_index(index, query_hashes, idf_w, k: int, cap: int | None = None,
     best_rec = min(records, key=rank)
     best = TuneConfig.from_dict(best_rec["config"])
     if table is not None:
-        table.put(backend, size_class_of(num_docs), layout_of(index), best)
+        # the winner's measured median feeds the layout cost model's
+        # decode-cost term (size_model.LayoutCostModel.measured_cost_s)
+        table.put(backend, size_class_of(num_docs), layout_of(index), best,
+                  cost_s=best_rec["median_s"])
     return best, records

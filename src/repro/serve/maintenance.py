@@ -27,6 +27,7 @@ class MaintenanceStats:
     runs: int = 0            # run_once invocations that checked triggers
     seals: int = 0
     compactions: int = 0
+    layout_rewrites: int = 0  # policy-driven single-segment re-seals
 
 
 class IndexMaintenance:
@@ -39,18 +40,32 @@ class IndexMaintenance:
     anyway", lower values trade delta scan width for seal frequency.
     ``max_compactions_per_run`` bounds lock hold time per run; the
     policy re-fires next run if more merges are due.
+
+    ``layout_policy`` installs an adaptive hor-vs-packed chooser
+    (``size_model.LayoutCostModel``) on the index: seals and compactions
+    resolve their layout through the override ladder (an explicit
+    ``seal_layout`` here still wins), and each run additionally
+    converts up to ``max_rewrites_per_run`` already-sealed segments
+    whose layout disagrees with the policy — so a quiescent stack still
+    converges to the policy's layout mix, one bounded lock hold at a
+    time.  ``layout_policy=None`` leaves the index's own policy (or
+    lack of one) untouched.
     """
 
     def __init__(self, index: SegmentedIndex, lock: threading.RLock, *,
                  seal_fill: float = 0.75, interval_s: float = 0.002,
                  max_compactions_per_run: int = 1,
-                 seal_layout: str | None = None):
+                 seal_layout: str | None = None,
+                 layout_policy=None, max_rewrites_per_run: int = 1):
         self.index = index
         self.lock = lock
         self.seal_fill = float(seal_fill)
         self.interval_s = float(interval_s)
         self.max_compactions_per_run = int(max_compactions_per_run)
         self.seal_layout = seal_layout
+        self.max_rewrites_per_run = int(max_rewrites_per_run)
+        if layout_policy is not None:
+            index.layout_policy = layout_policy
         self.stats = MaintenanceStats()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -58,14 +73,16 @@ class IndexMaintenance:
     def _due(self) -> bool:
         ix = self.index
         return (ix.delta_fill >= self.seal_fill
-                or ix.policy.due(ix.segment_postings()))
+                or ix.policy.due(ix.segment_postings())
+                or ix.pick_layout_rewrite() is not None)
 
     def run_once(self) -> dict:
         """One maintenance step: seal if the delta is full enough,
-        then up to ``max_compactions_per_run`` policy-picked merges.
+        then up to ``max_compactions_per_run`` policy-picked merges,
+        then up to ``max_rewrites_per_run`` layout-policy re-seals.
         Returns what happened (for tests and telemetry)."""
         self.stats.runs += 1
-        did = {"sealed": False, "compacted": 0}
+        did = {"sealed": False, "compacted": 0, "rewritten": 0}
         if not self._due():                 # unlocked cheap check
             return did
         with self.lock:
@@ -81,6 +98,13 @@ class IndexMaintenance:
                     break
                 self.stats.compactions += 1
                 did["compacted"] += 1
+            for _ in range(self.max_rewrites_per_run):
+                i = ix.pick_layout_rewrite()
+                if i is None:
+                    break
+                ix.rewrite_segment(i)
+                self.stats.layout_rewrites += 1
+                did["rewritten"] += 1
         return did
 
     # -- thread -----------------------------------------------------------

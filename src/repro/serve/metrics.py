@@ -86,12 +86,22 @@ class ServerMetrics:
     padded_slots: int = 0
     epochs_served: int = 0        # distinct epochs observed at batch time
     latency: LatencyWindow = dataclasses.field(default_factory=LatencyWindow)
+    layout_mix: dict = dataclasses.field(default_factory=dict)
     _last_epoch: int | None = dataclasses.field(default=None, repr=False)
 
     def observe_epoch(self, epoch: int) -> None:
         if epoch != self._last_epoch:
             self.epochs_served += 1
             self._last_epoch = epoch
+
+    def observe_layout_mix(self, mix: dict) -> None:
+        """Record the served stack's per-layout composition (from
+        ``LiveView.layout_mix``) — aggregates only, the per-segment
+        decision list stays on the view.  Called by the server whenever
+        the pinned epoch advances, so the summary always reflects the
+        layout mix the LAST served epoch had converged to."""
+        self.layout_mix = {k: v for k, v in mix.items()
+                           if k != "segments"}
 
     def record_response(self, latency_us: float) -> None:
         self.requests += 1
@@ -108,12 +118,14 @@ class ServerMetrics:
         self.padded_slots = 0
         self.epochs_served = 0
         self._last_epoch = None
+        self.layout_mix = {}
         self.latency.reset()
 
     def summary(self, cache=None) -> dict:
         out = {"requests": self.requests, "batches": self.batches,
                "batch_fill": self.batch_fill(),
-               "epochs_served": self.epochs_served}
+               "epochs_served": self.epochs_served,
+               "layout_mix": self.layout_mix}
         out.update(self.latency.summary())
         if cache is not None:
             out["cache_hit_rate"] = cache.hit_rate

@@ -53,6 +53,15 @@ class ServerConfig:
     pinned epoch — segments sealed after ``autotune.set_active`` serve
     with their tuned kernels while warm size classes keep their compiled
     executables.
+
+    ``layout_policy`` optionally pins a ``size_model.LayoutCostModel``
+    alongside ``tune``: the server installs it on the index at
+    construction, so maintenance-driven seals/compactions resolve their
+    layout through the override ladder while every response still comes
+    from an epoch-pinned view (layout changes only become visible at
+    the next pin, like any other mutation).  ``None`` leaves the
+    index's own policy untouched — bit-identical to pre-chooser
+    serving.
     """
     batch_size: int = 8
     n_terms_budget: int = 8
@@ -64,6 +73,7 @@ class ServerConfig:
     backend: str = "pallas"
     cache_capacity: int = 4096
     tune: object | None = None
+    layout_policy: object | None = None
 
 
 class Response:
@@ -122,8 +132,11 @@ class QueryServer:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         with self.index_lock:
+            if self.config.layout_policy is not None:
+                index.layout_policy = self.config.layout_policy
             self._pinned: LiveView = index.view()
         self._purged_epoch = self._pinned.epoch
+        self.metrics.observe_layout_mix(self._pinned.layout_mix())
 
     # -- admission ----------------------------------------------------------
 
@@ -214,6 +227,9 @@ class QueryServer:
             # their epoch); reclaim them once per advance, not per batch
             self.cache.purge_below(epoch)
             self._purged_epoch = epoch
+            # once per epoch advance: report the layout mix this epoch's
+            # stack converged to (seal/compact/rewrite all repin)
+            self.metrics.observe_layout_mix(view.layout_mix())
         pending: list[tuple[Ticket, tuple]] = []
         for ticket in batch:
             key = self.cache.make_key(ticket.row, cfg.k, epoch)

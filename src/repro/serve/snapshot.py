@@ -23,11 +23,15 @@ import json
 
 import numpy as np
 
-from repro.core import compaction
+from repro.core import compaction, size_model
 from repro.core.live_index import (LiveIndexStats, LiveView, SegmentedIndex,
                                    _Delta)
 
-_FORMAT_VERSION = 1
+# v2 adds the layout policy + per-segment chooser provenance
+# (size_class, num_terms, chooser_reason); v1 snapshots still restore
+# (no policy, reasons default) — the arrays are identical either way.
+_FORMAT_VERSION = 2
+_READ_VERSIONS = (1, 2)
 
 
 def pin(index: SegmentedIndex) -> LiveView:
@@ -69,11 +73,23 @@ def serialize_segmented(index: SegmentedIndex, lock=None) -> dict:
                    "min_run": index._policy.min_run},
         "rng_state": index._rng.bit_generator.state,
         "stats": dataclasses.asdict(index.stats),
+        # the layout POLICY rides along so a restored index keeps
+        # choosing layouts the same way (only LayoutCostModel policies
+        # serialize; a custom policy object restores as None)
+        "layout_policy": (index.layout_policy.to_dict()
+                          if isinstance(index.layout_policy,
+                                        size_model.LayoutCostModel)
+                          else None),
         # per-segment layout: a mixed hor+packed stack (per-seal layout
-        # overrides) must restore each segment in its ORIGINAL layout,
-        # not the index-wide default, for a bitwise structural roundtrip
+        # overrides or per-segment chooser decisions) must restore each
+        # segment in its ORIGINAL layout, not the index-wide default or
+        # a re-run of the chooser, for a bitwise structural roundtrip —
+        # the DECISION is state, so the reason string rides along too
         "segments": [{"doc_base": s.doc_base, "doc_span": s.doc_span,
-                      "n_postings": s.n_postings, "layout": s.layout}
+                      "n_postings": s.n_postings, "layout": s.layout,
+                      "size_class": s.size_class,
+                      "num_terms": s.num_terms,
+                      "chooser_reason": s.chooser_reason}
                      for s in index._segments],
     }
     state = {
@@ -105,14 +121,17 @@ def restore_segmented(state: dict) -> SegmentedIndex:
     gate nothing and change no result bit).
     """
     meta = json.loads(bytes(np.asarray(state["meta"])).decode())
-    if meta["version"] != _FORMAT_VERSION:
+    if meta["version"] not in _READ_VERSIONS:
         raise ValueError(f"unknown snapshot version {meta['version']}")
+    pol = meta.get("layout_policy")
     si = SegmentedIndex(
         term_hashes=np.asarray(state["hashes"], np.uint32),
         delta_doc_capacity=meta["delta"]["doc_cap"],
         delta_posting_capacity=meta["delta"]["post_cap"],
         policy=compaction.TieredPolicy(**meta["policy"]),
-        seal_layout=meta["seal_layout"])
+        seal_layout=meta["seal_layout"],
+        layout_policy=(size_model.LayoutCostModel.from_dict(pol)
+                       if pol is not None else None))
     si._df = np.asarray(state["df"], np.int64).copy()
     si._live = np.asarray(state["live"], bool).copy()
     si._rank = np.asarray(state["rank"], np.float32).copy()
@@ -121,12 +140,17 @@ def restore_segmented(state: dict) -> SegmentedIndex:
     si._rng.bit_generator.state = meta["rng_state"]
     # norms are already restored, so segment builds pad the exact values
     for i, sm in enumerate(meta["segments"]):
+        # the stored layout restores as an EXPLICIT arg (top of the
+        # ladder), so the roundtrip stays bitwise no matter what the
+        # restored policy would choose today; the original chooser
+        # reason is then re-attached as provenance (v1: "default")
         seg = si._build_segment(
             int(sm["doc_base"]), int(sm["doc_span"]),
             np.asarray(state[f"seg{i}_doc_of"], np.int64),
             np.asarray(state[f"seg{i}_terms"], np.int64),
             np.asarray(state[f"seg{i}_tfs"], np.float32),
             layout=sm.get("layout", meta["seal_layout"]))
+        seg.chooser_reason = sm.get("chooser_reason", "default")
         si._segments.append(seg)
     dl = _Delta(meta["delta"]["doc_cap"], meta["delta"]["post_cap"],
                 meta["delta"]["doc_base"])

@@ -50,6 +50,25 @@ for q in qh:
     assert set(np.asarray(ids).tolist()) == \
         set(np.asarray(ref.doc_ids).tolist())
 
+# 1c) PACKED document-partitioned fused engine: per-shard packed
+#     rebuild (identical shard bounds, posting order, and block
+#     boundaries as 1b) — must be BIT-identical (values and ids, ties
+#     included) to the HOR fused engine under the same candidate-merge
+#     tier; the ladder front door returns the same index + a reason
+ps = retrieval.build_doc_sharded_packed(host, 8)
+pscorer = retrieval.make_doc_sharded_fused_scorer(ps, mesh, "data", k=10)
+for q in qh:
+    pv, pi = pscorer(jnp.asarray(q))
+    hv, hi = fscorer(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+lad, reason = retrieval.build_doc_sharded_fused(host, 8, layout="packed")
+assert isinstance(lad, retrieval.PackedDocShardedIndex), lad
+assert reason == "explicit", reason
+lad2, reason2 = retrieval.build_doc_sharded_fused(host, 8)
+assert isinstance(lad2, retrieval.BlockedDocShardedIndex), lad2
+assert reason2 == "default", reason2
+
 # 2) term-partitioned == single-node
 ts = retrieval.build_term_sharded(host, 8)
 tscorer = retrieval.make_term_sharded_scorer(ts, mesh, "data", k=10)

@@ -1,0 +1,326 @@
+"""Adaptive per-segment layout selection: the override ladder, the
+LayoutCostModel chooser, and its threading through seal, compaction,
+maintenance rewrites, snapshots, and serving metrics.
+
+The contract under test, layer by layer:
+
+  * ``resolve_layout`` is THE ladder — explicit arg > policy >
+    historical default — and a None/None resolution is bit-identical to
+    the pre-chooser constants (the same discipline as the empty tuning
+    table).
+  * The analytic chooser is size-gated: small seals stay hor
+    (decode-bound), merged compaction outputs cross ``min_packed_docs``
+    and flip packed — which is what makes an LSM stack CONVERGE to the
+    winning layout, deterministically.
+  * Every re-layout (seal, compact, maintenance rewrite) keeps top-k
+    answers bit-identical to the jnp oracle, ties included.
+  * The decision is STATE: layout + chooser reason survive snapshot
+    save/restore bitwise, alongside the policy itself.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compaction, size_model
+from repro.core.build import TokenizedCorpus
+from repro.core.live_index import SegmentedIndex
+from repro.kernels import autotune
+from repro.text import corpus
+
+
+def _slices(tc, bounds):
+    return [TokenizedCorpus(tc.doc_term_ids[a:b], tc.doc_counts[a:b],
+                            tc.term_hashes, b - a)
+            for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def _build(tc, bounds, seed=0, **kwargs):
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=max(b - a for a, b in
+                                               zip(bounds[:-1], bounds[1:])),
+                        delta_posting_capacity=32_768,
+                        policy=compaction.TieredPolicy(min_run=100),
+                        **kwargs)
+    for b in _slices(tc, bounds):
+        si.add_batch(b)
+        si.seal()
+    return si
+
+
+def _queries(si, n=4, seed=3):
+    return corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                     n, 3, num_docs=si.live_doc_count,
+                                     seed=seed)
+
+
+def _assert_same_answers(a, b, qh, k=10):
+    ra, rb = a.topk(qh, k=k), b.topk(qh, k=k)
+    np.testing.assert_array_equal(np.asarray(ra.doc_ids),
+                                  np.asarray(rb.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ra.scores),
+                                  np.asarray(rb.scores))
+
+
+def _assert_oracle_parity(si, qh, k=10):
+    fused, oracle = si.topk(qh, k=k), si.topk(qh, k=k, engine="jnp")
+    np.testing.assert_array_equal(np.asarray(fused.doc_ids),
+                                  np.asarray(oracle.doc_ids))
+    np.testing.assert_allclose(np.asarray(fused.scores),
+                               np.asarray(oracle.scores),
+                               rtol=1e-5, atol=1e-7)
+
+
+STATS_BIG = size_model.SegmentStats(num_docs=20_000, num_postings=400_000,
+                                    num_terms=2_000)
+STATS_SMALL = size_model.SegmentStats(num_docs=300, num_postings=6_000,
+                                      num_terms=400)
+
+
+# ---------------------------------------------------------------------------
+# the ladder
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_precedence():
+    pol = size_model.LayoutCostModel(min_packed_docs=1_000)
+    # explicit beats a policy that would choose the other layout
+    assert size_model.resolve_layout("hor", pol, STATS_BIG, "hor") == \
+        ("hor", "explicit")
+    assert size_model.resolve_layout("packed", None, STATS_SMALL,
+                                     "hor") == ("packed", "explicit")
+    # policy beats the default
+    lay, reason = size_model.resolve_layout(None, pol, STATS_BIG, "hor")
+    assert lay == "packed" and reason.startswith("analytic:bytes/q")
+    lay, reason = size_model.resolve_layout(None, pol, STATS_SMALL,
+                                            "packed")
+    assert lay == "hor" and "small-segment" in reason
+    # None/None falls through to the historical default
+    assert size_model.resolve_layout(None, None, STATS_BIG, "hor") == \
+        ("hor", "default")
+    assert size_model.resolve_layout(None, None, STATS_BIG, "packed") == \
+        ("packed", "default")
+
+
+def test_none_policy_bit_identical_to_constants():
+    """An index with no policy must behave EXACTLY like the pre-chooser
+    code: every seal takes the constructor default, reasons stay
+    'default', and answers match an explicitly-sealed twin bitwise."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=240, vocab=120,
+                                           avg_distinct=10, seed=21))
+    bounds = [0, 80, 160, 240]
+    auto = _build(tc, bounds)                       # layout_policy=None
+    explicit = SegmentedIndex(term_hashes=tc.term_hashes,
+                              delta_doc_capacity=80,
+                              delta_posting_capacity=32_768,
+                              policy=compaction.TieredPolicy(min_run=100))
+    for b in _slices(tc, bounds):
+        explicit.add_batch(b)
+        explicit.seal(layout="hor")
+    assert [s.layout for s in auto.segments()] == ["hor"] * 3
+    assert [s.chooser_reason for s in auto.segments()] == ["default"] * 3
+    assert auto.pick_layout_rewrite() is None
+    _assert_same_answers(auto, explicit, _queries(auto))
+
+
+# ---------------------------------------------------------------------------
+# chooser + convergence
+# ---------------------------------------------------------------------------
+
+
+def test_size_gated_flip_and_compaction_convergence():
+    """Small seals stay hor; compacting them into one run that crosses
+    min_packed_docs flips the merged segment packed — and answers stay
+    bit-identical to the oracle through the flip."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=360, vocab=150,
+                                           avg_distinct=12, seed=5))
+    si = _build(tc, [0, 90, 180, 270, 360],
+                layout_policy=size_model.LayoutCostModel(
+                    min_packed_docs=256))
+    assert [s.layout for s in si.segments()] == ["hor"] * 4
+    assert all("small-segment" in s.chooser_reason
+               for s in si.segments())
+    qh = _queries(si)
+    before = si.topk(qh, k=10)
+    assert si.compact(all_segments=True)
+    segs = si.segments()
+    assert [s.layout for s in segs] == ["packed"]
+    assert "bytes/q" in segs[0].chooser_reason
+    assert si.pick_layout_rewrite() is None          # converged
+    after = si.topk(qh, k=10)
+    np.testing.assert_array_equal(np.asarray(before.doc_ids),
+                                  np.asarray(after.doc_ids))
+    np.testing.assert_allclose(np.asarray(before.scores),
+                               np.asarray(after.scores), rtol=1e-6)
+    _assert_oracle_parity(si, qh)
+    mix = si.layout_mix()
+    assert mix["counts"] == {"packed": 1}
+    assert list(mix["reasons"]) == [segs[0].chooser_reason]
+
+
+def test_maintenance_rewrites_converge_quiescent_stack():
+    """A stack sealed hor by explicit override converges to the policy's
+    mix through bounded per-run maintenance rewrites — no ingest, no
+    compaction triggers, just ``pick_layout_rewrite`` walking the
+    mismatches oldest-first."""
+    import threading
+
+    from repro.serve.maintenance import IndexMaintenance
+
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=300, vocab=130,
+                                           avg_distinct=10, seed=8))
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=100,
+                        delta_posting_capacity=32_768,
+                        policy=compaction.TieredPolicy(min_run=100))
+    for b in _slices(tc, [0, 100, 200, 300]):
+        si.add_batch(b)
+        si.seal(layout="hor")
+    qh = _queries(si)
+    want = si.topk(qh, k=10)
+    mt = IndexMaintenance(
+        si, threading.RLock(),
+        layout_policy=size_model.LayoutCostModel(min_packed_docs=64),
+        max_rewrites_per_run=1)
+    # oldest-first, one segment per run: hor count strictly decreases
+    for want_hor in (2, 1, 0):
+        did = mt.run_once()
+        assert did["rewritten"] == 1
+        counts = si.layout_mix()["counts"]
+        assert counts.get("hor", 0) == want_hor
+    assert mt.run_once()["rewritten"] == 0           # converged
+    assert mt.stats.layout_rewrites == 3
+    assert si.stats.layout_rewrites == 3
+    got = si.topk(qh, k=10)
+    np.testing.assert_array_equal(np.asarray(want.doc_ids),
+                                  np.asarray(got.doc_ids))
+    np.testing.assert_allclose(np.asarray(want.scores),
+                               np.asarray(got.scores), rtol=1e-6)
+    _assert_oracle_parity(si, qh)
+
+
+def test_pick_layout_rewrite_policy_function():
+    assert compaction.pick_layout_rewrite([], []) is None
+    assert compaction.pick_layout_rewrite(["hor"], ["hor"]) is None
+    assert compaction.pick_layout_rewrite(["hor", "packed"],
+                                          ["packed", "packed"]) == 0
+    assert compaction.pick_layout_rewrite(["packed", "hor", "hor"],
+                                          ["packed", "packed", "hor"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# measured costs (tuning-table integration)
+# ---------------------------------------------------------------------------
+
+
+def test_measured_costs_override_analytic():
+    """When the sweep has timed BOTH layouts at the exact (backend,
+    size_class), the chooser trusts the measurement — even against the
+    analytic gate — and the costs survive table serialization."""
+    table = autotune.TuningTable()
+    cfg = autotune.TuneConfig(tile=1024)
+    # measured: hor faster despite the byte model preferring packed
+    table.put("pallas", 2048, "hor", cfg, cost_s=1e-4)
+    table.put("pallas", 2048, "packed", cfg, cost_s=5e-4)
+    assert table.cost("pallas", 2048, "hor") == pytest.approx(1e-4)
+    assert table.cost("pallas", 4096, "hor") is None   # exact class only
+    rt = autotune.TuningTable.from_dict(table.to_dict())
+    assert rt.cost("pallas", 2048, "packed") == pytest.approx(5e-4)
+    assert rt.get("pallas", 2048, "hor") == cfg
+
+    prev = autotune.set_active(table)
+    try:
+        pol = size_model.LayoutCostModel(min_packed_docs=64)
+        big = size_model.SegmentStats(2_000, 60_000, 500)
+        d = pol.choose(big, size_class=2048)
+        assert d.layout == "hor"
+        assert d.reason.startswith("measured:pallas@2048")
+        # one-sided sweeps fall back to the analytic model
+        d = pol.choose(big, size_class=4096)
+        assert d.layout == "packed" and d.reason.startswith("analytic")
+    finally:
+        autotune.set_active(prev)
+
+
+# ---------------------------------------------------------------------------
+# snapshots + serving surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_preserves_policy_and_decisions(tmp_path):
+    from repro.serve import snapshot
+
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=300, vocab=140,
+                                           avg_distinct=11, seed=13))
+    pol = size_model.LayoutCostModel(min_packed_docs=128,
+                                     hbm_ratio_max=0.8)
+    si = _build(tc, [0, 60, 160, 300], layout_policy=pol)
+    si.delete([5, 61])
+    si.compact(all_segments=True)
+    qh = _queries(si)
+    path = tmp_path / "snap.npz"
+    snapshot.save_segmented(si, path)
+    rt = snapshot.load_segmented(path)
+    assert rt.layout_policy == pol
+    assert [s.layout for s in rt.segments()] == \
+        [s.layout for s in si.segments()]
+    assert [s.chooser_reason for s in rt.segments()] == \
+        [s.chooser_reason for s in si.segments()]
+    assert rt.layout_mix() == si.layout_mix()
+    _assert_same_answers(si, rt, qh)
+
+
+def test_server_reports_layout_mix():
+    from repro.serve import QueryServer, ServerConfig
+
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=200, vocab=100,
+                                           avg_distinct=10, seed=2))
+    si = _build(tc, [0, 100, 200])
+    pol = size_model.LayoutCostModel(min_packed_docs=64)
+    server = QueryServer(si, ServerConfig(backend="xla",
+                                          layout_policy=pol))
+    assert si.layout_policy is pol                  # installed at init
+    mix = server.metrics.summary()["layout_mix"]
+    assert mix["counts"] == {"hor": 2}              # sealed pre-policy
+    assert "segments" not in mix                    # aggregates only
+    # converge the stack, serve once: the fresh epoch's mix is reported
+    si.compact(all_segments=True)
+    server.query(_queries(si, n=1)[0])
+    mix = server.metrics.summary()["layout_mix"]
+    assert mix["counts"] == {"packed": 1}
+
+
+# ---------------------------------------------------------------------------
+# bounded auto-layout fuzz (the per-PR "not slow" slice — deterministic
+# seeds so it runs without the optional hypothesis dep; the full drawn
+# schedule space runs daily via tests/test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,min_docs,compact",
+                         [(11, 64, True), (23, 128, False),
+                          (37, 128, True), (51, 1024, True),
+                          (67, 64, False), (83, 1024, False)])
+def test_auto_layout_fuzz_bounded(seed, min_docs, compact):
+    """Chooser-driven seal/compact schedules on small corpora: whatever
+    mix the policy converges to, the fused engine stays bit-identical
+    to the jnp oracle, and every segment carries a chooser reason."""
+    rng = np.random.default_rng(seed)
+    tc = corpus.generate(corpus.CorpusSpec(
+        num_docs=int(rng.integers(120, 260)),
+        vocab=int(rng.integers(60, 160)),
+        avg_distinct=int(rng.integers(6, 14)), seed=seed))
+    n = tc.num_docs
+    bounds = [0, n // 3, 2 * (n // 3), n]
+    si = _build(tc, bounds,
+                layout_policy=size_model.LayoutCostModel(
+                    min_packed_docs=min_docs))
+    if compact:
+        si.compact(all_segments=True)
+        while (i := si.pick_layout_rewrite()) is not None:
+            si.rewrite_segment(i)
+    assert all(s.chooser_reason != "default" for s in si.segments())
+    for s in si.segments():
+        want, _ = size_model.resolve_layout(None, si.layout_policy,
+                                            s.stats, "hor",
+                                            size_class=s.size_class)
+        assert s.layout == want
+    _assert_oracle_parity(si, _queries(si, n=2, seed=seed))

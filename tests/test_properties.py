@@ -112,20 +112,25 @@ def live_schedules(draw):
                                 min_size=n_batches - 1,
                                 max_size=n_batches - 1, unique=True)))
     bounds = [0] + cuts + [docs]
+    # chooser-on schedules: a drawn LayoutCostModel threshold plus
+    # layout=None seals route through the override ladder (policy rung);
+    # policy_docs=0 means no policy, where None must fall through to the
+    # historical default — both arms fuzz against the same oracle
+    policy_docs = draw(st.sampled_from([0, 64, 256, 1024]))
     steps = []
     for _ in range(n_batches):
         steps.append({
-            "layout": draw(st.sampled_from(["hor", "packed"])),
+            "layout": draw(st.sampled_from(["hor", "packed", None])),
             "delete": draw(st.integers(0, 5)),
             "compact": draw(st.booleans()),
         })
-    return spec, bounds, steps, draw(st.integers(0, 1000))
+    return spec, bounds, steps, draw(st.integers(0, 1000)), policy_docs
 
 
-def _run_schedule(spec, bounds, steps, seed):
+def _run_schedule(spec, bounds, steps, seed, policy_docs=0):
     """Drive a SegmentedIndex through the drawn schedule; returns the
     index (delta sealed) and an rng for query sampling."""
-    from repro.core import compaction
+    from repro.core import compaction, size_model
     from repro.core.build import TokenizedCorpus
     rng = np.random.default_rng(seed)
     tc = corpus.generate(spec)
@@ -134,7 +139,10 @@ def _run_schedule(spec, bounds, steps, seed):
                         delta_doc_capacity=48,
                         delta_posting_capacity=4096,
                         policy=compaction.TieredPolicy(size_ratio=4.0,
-                                                       min_run=3))
+                                                       min_run=3),
+                        layout_policy=(size_model.LayoutCostModel(
+                            min_packed_docs=policy_docs)
+                            if policy_docs else None))
     for (a, b), step in zip(zip(bounds[:-1], bounds[1:]), steps):
         si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:b],
                                      tc.doc_counts[a:b],
@@ -162,9 +170,12 @@ def _oracle_host(si):
 @settings(max_examples=8, deadline=None)
 @given(sched=live_schedules())
 def test_layout_parity_fuzz_single_host(sched):
-    """Random schedules with per-seal random layout: the fused pallas
-    engine (over the resulting hor/packed/mixed stack), the jnp oracle
-    engine, the doc-sharded segment-stack scorer, and both term-sharded
+    """Random schedules with per-seal random layout — including
+    layout=None seals resolved by a drawn LayoutCostModel through the
+    override ladder, and no-policy runs where None falls through to the
+    default: the fused pallas engine (over the resulting
+    hor/packed/mixed stack), the jnp oracle engine, the doc-sharded
+    segment-stack scorer, and both term-sharded
     fused layouts all reproduce the bulk-build oracle's ranking —
     doc-partitioned paths bit-identically (ties included), term-sharded
     hor and packed bit-identical to EACH OTHER."""
@@ -250,10 +261,13 @@ MESHES = {2: jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",)),
 @given(docs=st.integers(150, 300), vocab=st.integers(60, 200),
        avg=st.integers(5, 14), seed=st.integers(0, 5000),
        n_shards=st.sampled_from([2, 4]),
-       layouts_seq=st.lists(st.sampled_from(["hor", "packed"]),
+       layouts_seq=st.lists(st.sampled_from(["hor", "packed", None]),
                             min_size=4, max_size=4),
+       policy_docs=st.sampled_from([0, 64, 256]),
        n_del=st.integers(0, 8))
-def fuzz(docs, vocab, avg, seed, n_shards, layouts_seq, n_del):
+def fuzz(docs, vocab, avg, seed, n_shards, layouts_seq, policy_docs,
+         n_del):
+    from repro.core import size_model
     mesh = MESHES[n_shards]
     rng = np.random.default_rng(seed)
     tc = corpus.generate(corpus.CorpusSpec(num_docs=docs, vocab=vocab,
@@ -261,7 +275,10 @@ def fuzz(docs, vocab, avg, seed, n_shards, layouts_seq, n_del):
     si = SegmentedIndex(term_hashes=tc.term_hashes,
                         delta_doc_capacity=128,
                         delta_posting_capacity=8192,
-                        policy=compaction.TieredPolicy(min_run=100))
+                        policy=compaction.TieredPolicy(min_run=100),
+                        layout_policy=(size_model.LayoutCostModel(
+                            min_packed_docs=policy_docs)
+                            if policy_docs else None))
     step = docs // 4
     for i, a in enumerate(range(0, step * 4, step)):
         b = min(a + step, docs)
@@ -329,6 +346,19 @@ def fuzz(docs, vocab, avg, seed, n_shards, layouts_seq, n_del):
             got = set(np.asarray(pi).tolist())
             assert set(rid[strong].tolist()) <= got, (rid, pi)
 
+    # bulk doc-sharded rebuild, both layouts, over the SAME live
+    # corpus: packed must be BIT-identical to hor (same shard bounds,
+    # same per-shard posting order, same candidate-merge tier)
+    db = retrieval.build_doc_sharded_blocked(host, n_shards)
+    dp = retrieval.build_doc_sharded_packed(host, n_shards)
+    dh = retrieval.make_doc_sharded_fused_scorer(db, mesh, "data", k=k)
+    dpk = retrieval.make_doc_sharded_fused_scorer(dp, mesh, "data", k=k)
+    for q in qh:
+        hv, hi = dh(jnp.asarray(q))
+        pv, pi = dpk(jnp.asarray(q))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(hv))
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(hi))
+
 
 fuzz()
 print("SHARDED_FUZZ_OK")
@@ -338,10 +368,12 @@ print("SHARDED_FUZZ_OK")
 @pytest.mark.slow
 def test_layout_parity_fuzz_sharded():
     """The multi-device half of the fuzz suite (daily CI): random
-    corpora and mixed-layout seal schedules across 2- and 4-shard
-    meshes, doc-sharded stacks bit-identical to the live index and
-    term-sharded hor/packed bit-identical to each other (subprocess:
-    XLA device count must be set before jax initializes)."""
+    corpora and mixed-layout seal schedules (including
+    chooser-resolved layout=None seals) across 2- and 4-shard meshes,
+    doc-sharded stacks bit-identical to the live index, term-sharded
+    hor/packed bit-identical to each other, and the bulk doc-sharded
+    packed rebuild bit-identical to its hor twin (subprocess: XLA
+    device count must be set before jax initializes)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

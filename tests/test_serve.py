@@ -417,7 +417,8 @@ def test_maintenance_triggers_and_stats():
     lock = threading.RLock()
     maint = IndexMaintenance(si, lock, seal_fill=0.5,
                              max_compactions_per_run=4)
-    assert maint.run_once() == {"sealed": False, "compacted": 0}
+    assert maint.run_once() == {"sealed": False, "compacted": 0,
+                                "rewritten": 0}
     si.add_batch(_slices(tc, [0, 60])[0])        # fill 0.6 >= 0.5
     did = maint.run_once()
     assert did["sealed"] and si.num_segments == 1
@@ -430,7 +431,8 @@ def test_maintenance_triggers_and_stats():
     assert si.stats.compactions >= 1
     # quiescent: nothing due, nothing done
     before = (maint.stats.seals, maint.stats.compactions)
-    assert maint.run_once() == {"sealed": False, "compacted": 0}
+    assert maint.run_once() == {"sealed": False, "compacted": 0,
+                                "rewritten": 0}
     assert (maint.stats.seals, maint.stats.compactions) == before
     # thread start/stop is clean and idempotent
     maint.start()
