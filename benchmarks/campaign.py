@@ -247,8 +247,10 @@ def run_serving(si: SegmentedIndex, tier: str, backend: str = "xla") -> dict:
     from repro.serve import QueryServer, ServerConfig
 
     n_requests = SERVE_REQUESTS[tier]
+    # trace every request: the tier artifact carries WHERE serving time
+    # goes (queue wait vs kernel vs merge), not just the e2e percentile
     cfg = ServerConfig(batch_size=8, n_terms_budget=8, k=10,
-                       backend=backend)
+                       backend=backend, trace_sample=1)
     server = QueryServer(si, cfg)
     view = si.view()
     pool = _query_pool(view, 64, 3, seed=23)
@@ -272,12 +274,13 @@ def run_serving(si: SegmentedIndex, tier: str, backend: str = "xla") -> dict:
         wall = time.perf_counter() - t0
     finally:
         server.stop()
-    m = server.metrics.summary(server.cache)
+    m = server.metrics.summary()
     samples = server.metrics.latency.samples_us()
     s = common.summary_stats(samples)
     s.update(requests=n_requests,
              achieved_qps=round(n_requests / max(wall, 1e-9), 1),
-             cache_hit_rate=m.get("cache_hit_rate", 0.0))
+             cache_hit_rate=m.get("cache_hit_rate", 0.0),
+             stages=server.stage_summary())
     common.emit(f"campaign/{tier}/serving", s["p50_us"],
                 common.latency_summary(samples))
     return s

@@ -27,12 +27,66 @@ import sys
 from benchmarks import common
 
 
+def check_registry_section(results: dict) -> list[str]:
+    """Validate the v3 observability section: ``results.registry`` must
+    be a non-empty dict of well-formed instrument snapshots (counter →
+    int value, gauge → numeric value, histogram → numeric count/sum/
+    p50/p99) and ``results.stages`` a dict of per-stage summaries.  A
+    malformed section fails loudly — a half-written registry snapshot
+    means the export contract broke, and silently gating on it would
+    hide exactly the class of bug the section exists to surface."""
+    problems: list[str] = []
+    reg = results.get("registry")
+    if not isinstance(reg, dict) or not reg:
+        return [f"results.registry missing or empty ({type(reg).__name__})"
+                " — v3 artifact without its observability section"]
+    for name, snap in sorted(reg.items()):
+        if not isinstance(snap, dict) or "type" not in snap:
+            problems.append(f"registry[{name!r}]: not an instrument "
+                            f"snapshot: {snap!r}")
+            continue
+        kind = snap["type"]
+        if kind == "counter":
+            if not isinstance(snap.get("value"), int):
+                problems.append(f"registry[{name!r}]: counter value "
+                                f"{snap.get('value')!r} is not an int")
+        elif kind == "gauge":
+            if not isinstance(snap.get("value"), (int, float)) \
+                    or isinstance(snap.get("value"), bool):
+                problems.append(f"registry[{name!r}]: gauge value "
+                                f"{snap.get('value')!r} is not numeric")
+        elif kind == "histogram":
+            if not isinstance(snap.get("count"), int):
+                problems.append(f"registry[{name!r}]: histogram count "
+                                f"{snap.get('count')!r} is not an int")
+            for field in ("sum", "p50", "p99"):
+                v = snap.get(field)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(f"registry[{name!r}]: histogram "
+                                    f"{field} {v!r} is not numeric")
+        else:
+            problems.append(f"registry[{name!r}]: unknown instrument "
+                            f"type {kind!r}")
+    stages = results.get("stages")
+    if not isinstance(stages, dict) or not stages:
+        problems.append(f"results.stages missing or empty "
+                        f"({type(stages).__name__})")
+    return problems
+
+
 def check(current_path: str, baseline_path: str,
           factor: float = 2.0) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     current = common.read_bench(current_path)
     baseline = common.read_bench(baseline_path)
     problems: list[str] = []
+    # v3 artifacts promise an observability section; validate the
+    # CURRENT artifact only (v1/v2 baselines predate the section and
+    # stay loadable — READ_SCHEMAS back-compat)
+    if current.get("schema") == "repro-bench/3":
+        problems.extend(check_registry_section(current.get("results", {})))
+        if problems:
+            return problems
     cb, bb = (current["env"].get("backend"), baseline["env"].get("backend"))
     if cb != bb:
         problems.append(f"backend mismatch: current={cb!r} "

@@ -20,11 +20,14 @@ from repro.text import corpus
 # changes meaning; consumers (CI regression gate, trajectory plots)
 # refuse mismatched schemas instead of misreading them.
 # v2 adds the layout-mix fields (results.layout_mix, per-segment
-# chooser decisions in the campaign tiers).  v1 artifacts stay
-# readable — every v1 field kept its meaning — so the committed
-# baselines don't need a regeneration flag-day.
-SCHEMA = "repro-bench/2"
-READ_SCHEMAS = ("repro-bench/1", "repro-bench/2")
+# chooser decisions in the campaign tiers).  v3 adds observability:
+# results.registry (the unified metrics-registry snapshot) and
+# results.stages (per-stage serving latency percentiles) in the smoke
+# artifact.  v1/v2 artifacts stay readable — every older field kept
+# its meaning — so the committed baselines don't need a regeneration
+# flag-day.
+SCHEMA = "repro-bench/3"
+READ_SCHEMAS = ("repro-bench/1", "repro-bench/2", "repro-bench/3")
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -212,6 +215,50 @@ def smoke_layout_mix() -> dict:
     return {"sealed": {"counts": pre["counts"], "reasons": pre["reasons"]},
             "compacted": {"counts": post["counts"],
                           "reasons": post["reasons"]}}
+
+
+def smoke_observability(n_requests: int = 48) -> dict:
+    """Traced serving micro-drive over the smoke corpus: every request
+    sampled, so the artifact carries the per-stage latency breakdown
+    (queue wait / assembly / kernel / merge / respond) plus the full
+    registry snapshot — the v3 observability section CI validates.
+
+    The stage-sum invariant is asserted here too: a sampled response's
+    top-level spans must sum to its measured e2e latency (within 5%,
+    per the tracing contract; the construction makes it exact)."""
+    from repro.core.live_index import SegmentedIndex
+    from repro.serve import QueryServer, ServerConfig
+
+    tc, h = bench_host(SMOKE_SPEC)
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=512,
+                        delta_posting_capacity=512 * 64)
+    si.add_batch(tc)
+    si.seal()
+    server = QueryServer(si, ServerConfig(
+        batch_size=8, n_terms_budget=8, k=10, backend="xla",
+        trace_sample=1))
+    server.warmup()
+    pool = corpus.sample_query_terms(h.df, h.term_hashes, 16, 3,
+                                     num_docs=h.num_docs)
+    tickets = [server.submit(pool[i % len(pool)])
+               for i in range(n_requests)]
+    while server.pending:
+        server.pump()
+    worst = 0.0
+    for t in tickets:
+        r = t.result(timeout=30.0)
+        total = sum(r.trace.stage_durations().values())
+        worst = max(worst, abs(total - r.latency_us) / max(r.latency_us,
+                                                           1e-9))
+    if worst > 0.05:
+        raise AssertionError(
+            f"stage spans sum to {worst:.1%} off the measured e2e "
+            "latency — the shared-boundary tracing contract is broken")
+    return {"stages": server.stage_summary(),
+            "registry": server.metrics_snapshot(),
+            "stage_sum_rel_err_max": worst,
+            "requests": n_requests}
 
 
 def smoke_gate_stats(reps: int = 30) -> dict:

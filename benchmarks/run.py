@@ -49,12 +49,17 @@ def main() -> None:
             print(f"{name}/FAILED,0.0,")
     if smoke:
         # the artifact CI gates on: suite CSV rows + a dedicated
-        # fused-scorer latency measurement (schema-versioned JSON)
+        # fused-scorer latency measurement (schema-versioned JSON);
+        # v3 adds the observability section — a traced serving drive's
+        # per-stage breakdown + the unified registry snapshot
         gate = common.smoke_gate_stats()
+        obs = common.smoke_observability()
         common.write_bench(
             "smoke",
             results={"gate": gate, "suites_failed": failed,
-                     "layout_mix": common.smoke_layout_mix()},
+                     "layout_mix": common.smoke_layout_mix(),
+                     "stages": obs["stages"],
+                     "registry": obs["registry"]},
             config={"spec": dataclasses.asdict(common.SMOKE_SPEC),
                     "only": only})
     if failed:

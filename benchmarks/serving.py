@@ -56,7 +56,12 @@ def run_sweep(rates, n_requests, *, pool_size=64, ingest_every=64,
     if tc is None or host is None:
         tc, host = common.bench_host()
     si, ingested = _build_live_index(tc)
-    cfg = ServerConfig(batch_size=8, n_terms_budget=8, k=10)
+    # every request sampled: the sweep reports a per-stage latency
+    # breakdown (queue wait / assemble / score / respond) per offered
+    # rate, so saturation shows WHERE the time went, not just that p99
+    # grew
+    cfg = ServerConfig(batch_size=8, n_terms_budget=8, k=10,
+                       trace_sample=1)
     server = QueryServer(si, cfg)
     maint = IndexMaintenance(si, server.index_lock, seal_fill=0.5,
                              interval_s=0.001)
@@ -75,6 +80,7 @@ def run_sweep(rates, n_requests, *, pool_size=64, ingest_every=64,
         for rate in rates:
             server.metrics.reset()
             server.cache.reset_counters()
+            server.stages.reset()
             gap = 1.0 / rate if rate > 0 else 0.0
             tickets = []
             next_ingest = ingest_every
@@ -94,9 +100,10 @@ def run_sweep(rates, n_requests, *, pool_size=64, ingest_every=64,
                     time.sleep(gap)
             for t in tickets:
                 t.result(timeout=120.0)
-            s = server.metrics.summary(server.cache)
+            s = server.metrics.summary()
             s["offered_qps"] = rate
             s["samples_us"] = server.metrics.latency.samples_us()
+            s["stages"] = server.stage_summary()
             results.append(s)
     finally:
         maint.stop()
@@ -109,12 +116,24 @@ def run_sweep(rates, n_requests, *, pool_size=64, ingest_every=64,
     return results
 
 
+def _stage_fragment(stages: dict) -> str:
+    """``score_p50=..us respond_p50=..us`` derived-column fragment —
+    the dominant stages of the breakdown, CSV-greppable per rate."""
+    parts = []
+    for stage in ("queue_wait", "assemble", "score", "respond"):
+        st = stages.get(stage)
+        if st and st.get("count"):
+            parts.append(f"{stage}_p50={st['p50']:.1f}us")
+    return " ".join(parts)
+
+
 def main() -> None:
     tc, host = common.bench_host()
     smoke = common.is_smoke()
     rates = [100, 400] if smoke else [50, 200, 800, 3200]
     n_requests = 96 if smoke else 512
     results = run_sweep(rates, n_requests, tc=tc, host=host)
+    artifact = []
     for s in results:
         if "lifecycle" in s:
             lc = s["lifecycle"]
@@ -122,6 +141,7 @@ def main() -> None:
                         f"maint_seals={lc['maint_seals']} "
                         f"maint_compactions={lc['maint_compactions']} "
                         f"segments={lc['segments']} epoch={lc['epoch']}")
+            artifact.append(s)
             continue
         common.emit(
             f"serving/qps_{s['offered_qps']}", s["p50_us"],
@@ -129,7 +149,15 @@ def main() -> None:
             f"achieved_qps={s['qps']:.0f} "
             f"hit_rate={s['cache_hit_rate']:.2f} "
             f"batch_fill={s['batch_fill']:.2f} "
-            f"epochs={s['epochs_served']}")
+            f"epochs={s['epochs_served']} "
+            f"{_stage_fragment(s.get('stages', {}))}")
+        # raw per-request samples stay out of the artifact (the
+        # summary percentiles carry the signal at 1/1000 the bytes)
+        artifact.append({k: v for k, v in s.items() if k != "samples_us"})
+    common.write_bench(
+        "serving", results={"sweep": artifact},
+        config={"rates": rates, "n_requests": n_requests,
+                "smoke": smoke})
 
 
 if __name__ == "__main__":

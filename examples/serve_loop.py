@@ -38,7 +38,10 @@ si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=128,
 for a in range(0, 1200, 300):
     si.add_batch(batch(a, a + 300))
 
-server = QueryServer(si, ServerConfig(batch_size=8, n_terms_budget=8, k=10))
+# trace_sample=1: every response carries its span tree, so the summary
+# below can say WHERE each millisecond went, not just the e2e number
+server = QueryServer(si, ServerConfig(batch_size=8, n_terms_budget=8, k=10,
+                                      trace_sample=1))
 maint = IndexMaintenance(si, server.index_lock, seal_fill=0.5,
                          interval_s=0.002)
 server.warmup()
@@ -76,7 +79,7 @@ ingest.join()
 maint.stop()
 server.stop()
 
-s = server.metrics.summary(server.cache)
+s = server.metrics.summary()          # cache stats included since init
 print(f"served {s['requests']} requests in {s['batches']} batches "
       f"(fill={s['batch_fill']:.2f}) across {s['epochs_served']} epochs")
 print(f"latency p50={s['p50_us'] / 1e3:.1f}ms p99={s['p99_us'] / 1e3:.1f}ms"
@@ -85,6 +88,28 @@ print(f"cache: hit_rate={s['cache_hit_rate']:.2f} "
       f"({s['cache_hits']} hits / {s['cache_misses']} misses)")
 print(f"maintenance: seals={maint.stats.seals} "
       f"compactions={maint.stats.compactions} segments={si.num_segments}")
+
+# per-stage breakdown: every sampled response's spans, aggregated
+print("stage breakdown (p50/p99 us per sampled request):")
+for stage, st in server.stage_summary().items():
+    print(f"  {stage:<11} n={st['count']:<4} p50={st['p50']:>9.1f} "
+          f"p99={st['p99']:>9.1f}")
+
+# the maintenance event log: what sealed/compacted/rewrote, when
+print(f"last maintenance events ({si.events.total} total, "
+      f"counts={si.events.counts()}):")
+for e in server.events(n=5):
+    extra = {k: v for k, v in e.items()
+             if k not in ("seq", "kind", "t_wall", "duration_us")}
+    print(f"  #{e['seq']} {e['kind']}: {extra}")
+
+# one sampled trace end to end: stage durations sum to the measured
+# e2e latency exactly (shared boundary timestamps)
+r = next(r for r in responses if r.trace is not None)
+stages = r.trace.stage_durations()
+chain = " -> ".join(f"{k}={v:.0f}us" for k, v in stages.items())
+print(f"sample trace: {chain} "
+      f"(sum={sum(stages.values()):.0f}us e2e={r.latency_us:.0f}us)")
 epochs = sorted({r.epoch for r in responses})
 print(f"responses pinned to epochs {epochs[0]}..{epochs[-1]} "
       f"(index now at {si.epoch})")

@@ -94,6 +94,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +107,7 @@ from repro.core.layouts import DocTable, PostingsHost
 from repro.core.query import QueryResult, final_scores
 from repro.distributed.topk import merge_topk_candidates_host
 from repro.kernels import autotune, ops
+from repro.obs.registry import EventLog
 from repro.kernels.fused_decode_score import (TILE, default_k_tile,
                                               extract_tile_candidates)
 
@@ -419,10 +421,18 @@ class LiveView:
     def topk(self, query_hashes, k: int, *, cap: int | None = None,
              rank_blend: float = 0.0, engine: str = "pallas",
              mode: str = "candidates", backend: str = "pallas",
-             return_stats: bool = False, tune=None):
+             return_stats: bool = False, tune=None, trace=None):
         """Batched top-k over this view's delta + sealed segments — the
         same contract as ``SegmentedIndex.topk``, evaluated against the
         pinned epoch.
+
+        ``trace`` optionally takes a ``repro.obs.Trace``: each sealed
+        segment records a child span of ``"score"`` carrying its size
+        class, layout, the TuneConfig geometry the dispatch resolved,
+        and the analytic candidate / posting byte costs; the delta and
+        the host candidate merge record their own children.  Tracing
+        adds host-side timing only — the op sequence, and therefore
+        every result bit, is identical with ``trace=None``.
 
         Kernel geometry resolves PER SEGMENT from the active tuning
         table (``tune`` overrides it for every segment): each sealed
@@ -452,6 +462,20 @@ class LiveView:
                                          cfg.pairs_per_step)
             c = int(cap) if cap is not None else seg.index.max_posting_len
             b = jnp.asarray(np.int32(seg.doc_base))
+            span = None
+            if trace is not None:
+                span = trace.span(
+                    "segment", parent="score", doc_base=int(seg.doc_base),
+                    size_class=int(seg.size_class), layout=seg.layout,
+                    tile=int(cfg.tile), k_tile=int(seg_kt),
+                    reducer=cfg.reducer,
+                    pairs_per_step=int(cfg.pairs_per_step),
+                    max_pairs=int(mp),
+                    candidate_bytes=size_model.candidate_bytes_per_query(
+                        int(seg.index.docs.num_docs), int(cfg.tile),
+                        int(seg_kt)),
+                    posting_bytes=size_model.est_posting_bytes(
+                        seg.stats, seg.layout))
             if engine == "jnp":
                 v, g, o = ops.jnp_segment_topk(
                     seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
@@ -472,6 +496,13 @@ class LiveView:
             vals.append(v)
             ids.append(g)
             overflows.append(o)
+            if span is not None:
+                # dispatch-only latency: candidates transfer in merge
+                span.end()
+        dspan = (trace.span("delta", parent="score",
+                            postings=int(self.delta_terms.shape[0]),
+                            docs=int(self.delta_n_docs), k_tile=int(k_tile))
+                 if trace is not None else None)
         dev = self.delta_dev
         dv, dg = _delta_candidates(
             dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
@@ -480,13 +511,15 @@ class LiveView:
             rank_blend=rank_blend)
         vals.append(dv)
         ids.append(dg)
+        if dspan is not None:
+            dspan.end()
         overflow = sum(int(o) for o in overflows)
         if not return_stats:
             # stats callers inspect the counter themselves; everyone
             # else gets the engines' loud-overflow contract
             ops.warn_on_overflow(jnp.asarray(overflow), "live-view "
                                  "fused engine")
-        mv, mi = merge_topk_candidates_host(vals, ids, k)
+        mv, mi = merge_topk_candidates_host(vals, ids, k, trace=trace)
         hit = np.isfinite(mv)
         result = QueryResult(
             doc_ids=jnp.asarray(np.where(hit, mi, -1).astype(np.int32)),
@@ -513,6 +546,7 @@ class LiveView:
             ids.append(g)
             truncs.append(t)
         truncated = sum(int(t) for t in truncs)
+        ops.record_truncated(truncated)
         dev = self.delta_dev
         dv, dg = _delta_conjunctive(
             dev["terms"], dev["tfs"], dev["doc_of"], dev["norm"],
@@ -617,6 +651,9 @@ class SegmentedIndex:
         self._epoch = 0
         self._view: LiveView | None = None
         self.stats = LiveIndexStats()
+        # bounded structured ring of maintenance events (seal/compact/
+        # rewrite/ingest/delete/...), queryable from the serving tier
+        self.events = EventLog(capacity=256)
 
     # -- introspection ------------------------------------------------------
 
@@ -747,6 +784,7 @@ class SegmentedIndex:
         parity test asserts this).  Until that call, every doc norm is
         0 and queries return no hits — deferral is a BUILD-loop tool,
         not a serving mode."""
+        t0 = time.perf_counter()
         nd = corpus.num_docs
         merged, remap = build_mod.merge_vocab(
             self._hashes, np.asarray(corpus.term_hashes, np.uint32))
@@ -817,6 +855,10 @@ class SegmentedIndex:
             self._refresh_norms()
         self._maybe_compact()
         self._bump_epoch()
+        self.events.emit(
+            "ingest", epoch=self._epoch, docs=nd, postings=total,
+            norms_refreshed=bool(refresh_norms),
+            duration_us=(time.perf_counter() - t0) * 1e6)
 
     def refresh_norms(self) -> None:
         """Recompute every live doc norm from the current global df and
@@ -824,13 +866,19 @@ class SegmentedIndex:
         Streaming builds that deferred per-batch refreshes
         (``add_batch(..., refresh_norms=False)``) MUST call this before
         serving queries."""
+        t0 = time.perf_counter()
         self._refresh_norms()
         self._bump_epoch()
+        self.events.emit(
+            "norm_refresh", epoch=self._epoch,
+            postings=self.stats.postings_norm_refreshed,
+            duration_us=(time.perf_counter() - t0) * 1e6)
 
     def _direct_seal(self, terms: np.ndarray, tfs: np.ndarray) -> None:
         """Seal one oversized doc straight to a segment, bypassing the
         delta (which must be empty; its base advances past the doc)."""
         assert self._delta.n_docs == 0
+        t0 = time.perf_counter()
         base = self._delta.doc_base
         doc_of = np.zeros(len(terms), np.int64)
         seg = self._build_segment(base, 1, doc_of, terms.astype(np.int64),
@@ -842,6 +890,12 @@ class SegmentedIndex:
                              base + 1)
         self._delta_dirty = True
         self._bump_epoch()
+        self.events.emit(
+            "seal", epoch=self._epoch, doc_base=seg.doc_base,
+            docs=seg.doc_span, postings=seg.n_postings,
+            size_class=seg.size_class, layout=seg.layout,
+            chooser_reason=seg.chooser_reason, direct=True,
+            duration_us=(time.perf_counter() - t0) * 1e6)
 
     # -- mutation: delete ---------------------------------------------------
 
@@ -869,6 +923,8 @@ class SegmentedIndex:
         self.stats.deletes += int(ids.size)
         self._refresh_norms()
         self._bump_epoch()
+        self.events.emit("delete", epoch=self._epoch, docs=int(ids.size),
+                         live_docs=self._live_docs)
 
     def _owner(self, d: int):
         """Segment index owning global doc id d, or None for the delta."""
@@ -909,6 +965,7 @@ class SegmentedIndex:
         dl = self._delta
         if dl.n_docs == 0:
             return
+        t0 = time.perf_counter()
         n_p = dl.n_postings
         doc_of = dl.doc_of[:n_p].astype(np.int64)
         terms = dl.terms[:n_p].astype(np.int64)
@@ -925,6 +982,12 @@ class SegmentedIndex:
                              dl.doc_base + dl.n_docs)
         self._delta_dirty = True
         self._bump_epoch()
+        self.events.emit(
+            "seal", epoch=self._epoch, doc_base=seg.doc_base,
+            docs=seg.doc_span, postings=seg.n_postings,
+            size_class=seg.size_class, layout=seg.layout,
+            chooser_reason=seg.chooser_reason,
+            duration_us=(time.perf_counter() - t0) * 1e6)
 
     def _build_segment(self, base: int, span: int, doc_of: np.ndarray,
                        terms: np.ndarray, tfs: np.ndarray,
@@ -1023,6 +1086,7 @@ class SegmentedIndex:
                 [s.n_postings for s in self._segments])
         if pick is None:
             return False
+        t0 = time.perf_counter()
         lo, hi = pick
         segs = self._segments[lo:hi]
         base = segs[0].doc_base
@@ -1053,6 +1117,13 @@ class SegmentedIndex:
         self.stats.postings_compacted += touched
         self.stats.compactions += 1
         self._bump_epoch()
+        self.events.emit(
+            "compact", epoch=self._epoch, merged=hi - lo,
+            doc_base=seg.doc_base, docs=seg.doc_span,
+            postings_in=touched, postings_out=seg.n_postings,
+            size_class=seg.size_class, layout=seg.layout,
+            chooser_reason=seg.chooser_reason,
+            duration_us=(time.perf_counter() - t0) * 1e6)
         return True
 
     def _maybe_compact(self) -> None:
@@ -1082,6 +1153,7 @@ class SegmentedIndex:
         either layout (the layout-parity contract).  Epoch advances so
         serving tiers repin."""
         seg = self._segments[i]
+        t0 = time.perf_counter()
         live = self._live[seg.doc_of.astype(np.int64) + seg.doc_base]
         doc_of = seg.doc_of[live].astype(np.int64)
         terms = seg.terms[live].astype(np.int64)
@@ -1092,6 +1164,13 @@ class SegmentedIndex:
         self.stats.postings_compacted += seg.n_postings
         self.stats.layout_rewrites += 1
         self._bump_epoch()
+        self.events.emit(
+            "rewrite", epoch=self._epoch, position=i,
+            doc_base=new.doc_base, docs=new.doc_span,
+            from_layout=seg.layout, layout=new.layout,
+            postings_in=seg.n_postings, postings_out=new.n_postings,
+            size_class=new.size_class, chooser_reason=new.chooser_reason,
+            duration_us=(time.perf_counter() - t0) * 1e6)
 
     # -- norms / doc metadata ----------------------------------------------
 
@@ -1167,7 +1246,7 @@ class SegmentedIndex:
     def topk(self, query_hashes, k: int, *, cap: int | None = None,
              rank_blend: float = 0.0, engine: str = "pallas",
              mode: str = "candidates", backend: str = "pallas",
-             return_stats: bool = False, tune=None):
+             return_stats: bool = False, tune=None, trace=None):
         """Batched top-k over delta + every sealed segment.
 
         query_hashes u32[B, T].  One fused candidate-kernel launch per
@@ -1184,7 +1263,8 @@ class SegmentedIndex:
         return self.view().topk(query_hashes, k, cap=cap,
                                 rank_blend=rank_blend, engine=engine,
                                 mode=mode, backend=backend,
-                                return_stats=return_stats, tune=tune)
+                                return_stats=return_stats, tune=tune,
+                                trace=trace)
 
     def conjunctive(self, query_hashes, k: int, cap: int):
         """AND semantics over the whole live index for ONE query [T].
@@ -1225,6 +1305,11 @@ class SegmentedIndex:
                            host.num_docs)
         si._refresh_norms()
         si._bump_epoch()
+        si.events.emit(
+            "seal", epoch=si._epoch, doc_base=0, docs=seg.doc_span,
+            postings=seg.n_postings, size_class=seg.size_class,
+            layout=seg.layout, chooser_reason=seg.chooser_reason,
+            via="from_host")
         return si
 
     def _live_triples(self):

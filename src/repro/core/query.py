@@ -403,4 +403,6 @@ def conjunctive_filter(index: Any, query_hashes: Array, k: int,
     hit = jnp.isfinite(top_scores)
     result = QueryResult(doc_ids=jnp.where(hit, top_docs, -1),
                          scores=jnp.where(hit, top_scores, 0.0))
+    from repro.kernels import ops   # (late: avoids import cycle)
+    ops.record_truncated(truncated)
     return result, {"truncated_terms": truncated}

@@ -1014,7 +1014,24 @@ def make_doc_sharded_segment_scorer(index: SegmentStackShards, mesh: Mesh,
         fn = _build_stack_scorer(mesh, axis, k, index.tile, metas, cfgs)
         _STACK_SCORER_CACHE[key] = fn
     arrs = index.device_arrays()
-    return lambda qh: fn(arrs, qh)
+
+    def scorer(qh, trace=None):
+        # trace=None is the hot path: no span objects, no extra sync —
+        # the caller blocks on the results whenever it reads them
+        if trace is None:
+            return fn(arrs, qh)
+        span = trace.span(
+            "shard_fanout", parent="score", n_shards=index.n_shards,
+            k=k, groups=[{"size_class": m.d_pad, "layout": m.layout}
+                         for m in metas])
+        out = fn(arrs, qh)
+        span.end()
+        sync = trace.span("shard_sync", parent="score")
+        out = jax.block_until_ready(out)
+        sync.end()
+        return out
+
+    return scorer
 
 
 # ---------------------------------------------------------------------------
@@ -1236,7 +1253,7 @@ def make_term_sharded_fused_scorer(
         extract_tile_candidates, fused_score_blocked_pallas,
         fused_score_packed_pallas)
     from repro.kernels.ops import (expand_block_candidates,
-                                    warn_on_overflow)
+                                    record_truncated, warn_on_overflow)
 
     packed_layout = isinstance(index, PackedTermShardedIndex)
     arrs = index.device_arrays()
@@ -1329,9 +1346,28 @@ def make_term_sharded_fused_scorer(
         return vv, ii, trunc
 
     fn = jax.jit(lambda qh: score(arrs, qh))
+
+    def run(qh, trace=None):
+        if trace is None:
+            return fn(qh)
+        span = trace.span("shard_fanout", parent="score", n_shards=S,
+                          k=k, sharding="term",
+                          layout="packed" if packed_layout else "hor")
+        out = fn(qh)
+        span.end()
+        sync = trace.span("shard_sync", parent="score")
+        out = jax.block_until_ready(out)
+        sync.end()
+        return out
+
     if return_stats:
-        def with_stats(qh):
-            vv, ii, trunc = fn(qh)
-            return (vv, ii), {"truncated_terms": int(trunc)}
+        def with_stats(qh, trace=None):
+            vv, ii, trunc = run(qh, trace=trace)
+            trunc = int(trunc)
+            record_truncated(trunc)
+            return (vv, ii), {"truncated_terms": trunc}
         return with_stats
-    return lambda qh: fn(qh)[:2]
+
+    def scorer(qh, trace=None):
+        return run(qh, trace=trace)[:2]
+    return scorer

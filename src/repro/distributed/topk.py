@@ -30,7 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 Array = jax.Array
 
 
-def merge_topk_candidates_host(values, ids, k: int):
+def merge_topk_candidates_host(values, ids, k: int, trace=None):
     """numpy twin of ``merge_topk_candidates`` for host-side merges.
 
     ``values`` / ``ids``: lists of per-source candidate arrays
@@ -43,7 +43,17 @@ def merge_topk_candidates_host(values, ids, k: int):
     equal values): a stable descending sort keeps the first occurrence
     first, so with sources ordered by ascending doc-id range the merged
     ranking tie-breaks on lowest global doc id, like the dense oracle.
+
+    ``trace`` optionally records a ``"merge"`` child span (of
+    ``"score"``) — note the span covers the device->host transfer of
+    every source's candidates (the np.concatenate below is the sync
+    point), which is exactly what an operator needs to see.
     """
+    span = None
+    if trace is not None:
+        span = trace.span(
+            "merge", parent="score", sources=len(values),
+            candidates=int(sum(x.shape[-1] for x in ids)))
     v = np.concatenate([np.asarray(x, np.float32) for x in values], axis=-1)
     i = np.concatenate([np.asarray(x, np.int32) for x in ids], axis=-1)
     c = v.shape[-1]
@@ -52,8 +62,11 @@ def merge_topk_candidates_host(values, ids, k: int):
         v = np.pad(v, pad, constant_values=-np.inf)
         i = np.pad(i, pad, constant_values=-1)
     order = np.argsort(-v, axis=-1, kind="stable")[..., :k]
-    return (np.take_along_axis(v, order, axis=-1),
-            np.take_along_axis(i, order, axis=-1))
+    out = (np.take_along_axis(v, order, axis=-1),
+           np.take_along_axis(i, order, axis=-1))
+    if span is not None:
+        span.end()
+    return out
 
 
 def canonicalize_candidates(values: Array, ids: Array

@@ -44,15 +44,47 @@ def _interp(backend: Backend) -> bool | None:
     return None if backend == "pallas" else False
 
 
+def _count_capacity_pressure(name: str, amount) -> None:
+    """Host-side increment of a process-global registry counter —
+    invoked from inside jitted code via ``jax.debug.callback``, so the
+    engines stay pure jax while the pressure is still countable."""
+    from repro.obs.registry import GLOBAL
+    GLOBAL.counter(name).inc(int(amount))
+
+
 def warn_on_overflow(overflow: Array, label: str) -> None:
     """Routing overflow is surfaced, never silent — shared by every
-    engine entry point so the contract can't drift between them."""
-    jax.lax.cond(
-        overflow > 0,
-        lambda o: jax.debug.print(
+    engine entry point so the contract can't drift between them.  Each
+    overflow also increments the process-global ``engine_pair_overflow``
+    registry counter (same taken-branch — zero work when clean)."""
+
+    def _warn(o):
+        jax.debug.print(
             label + ": routing overflow dropped {o} (block, tile) "
-            "pairs — raise max_pairs", o=o),
-        lambda o: None, overflow)
+            "pairs — raise max_pairs", o=o)
+        jax.debug.callback(
+            functools.partial(_count_capacity_pressure,
+                              "engine_pair_overflow"), o)
+
+    jax.lax.cond(overflow > 0, _warn, lambda o: None, overflow)
+
+
+def record_truncated(truncated, counter: str = "engine_truncated_terms"
+                     ) -> None:
+    """Count conjunctive cap-truncation into the process-global
+    registry.  Accepts a host int (counted directly) or a traced array
+    (counted via ``jax.debug.callback`` on the taken branch) — callers
+    keep returning the stat either way; this only makes the pressure
+    visible per process instead of per call site."""
+    if isinstance(truncated, (int, float)):
+        if truncated > 0:
+            _count_capacity_pressure(counter, truncated)
+        return
+    jax.lax.cond(
+        truncated > 0,
+        lambda t: jax.debug.callback(
+            functools.partial(_count_capacity_pressure, counter), t),
+        lambda t: None, truncated)
 
 
 # ---------------------------------------------------------------------------

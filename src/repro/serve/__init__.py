@@ -16,8 +16,16 @@ that tier for ``core/live_index.SegmentedIndex``:
   maintenance.py background thread sealing full deltas and running
                  tiered compaction between batches against pinned
                  epochs
-  metrics.py     latency percentiles (p50/p99), QPS, batch fill
+  metrics.py     latency percentiles (p50/p99), QPS, batch fill —
+                 registry-backed (see repro.obs) with a stable
+                 JSON/Prometheus snapshot export
+
+Observability primitives (spans, the metrics registry, the maintenance
+event log) live in the dependency-neutral ``repro.obs`` package and are
+re-exported here for serving-tier callers.
 """
+from repro.obs.registry import EventLog, MetricsRegistry
+from repro.obs.trace import Span, StageAggregator, Trace, Tracer
 from repro.serve.cache import ResultCache
 from repro.serve.maintenance import IndexMaintenance
 from repro.serve.metrics import LatencyWindow, ServerMetrics, percentiles
@@ -29,5 +37,6 @@ __all__ = [
     "QueryServer", "ServerConfig", "ResultCache", "IndexMaintenance",
     "LatencyWindow", "ServerMetrics", "percentiles", "pin",
     "serialize_segmented", "restore_segmented", "save_segmented",
-    "load_segmented",
+    "load_segmented", "MetricsRegistry", "EventLog", "Span", "Trace",
+    "Tracer", "StageAggregator",
 ]

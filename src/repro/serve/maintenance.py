@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 from repro.core.live_index import SegmentedIndex
 
@@ -85,6 +86,7 @@ class IndexMaintenance:
         did = {"sealed": False, "compacted": 0, "rewritten": 0}
         if not self._due():                 # unlocked cheap check
             return did
+        t0 = time.perf_counter()
         with self.lock:
             ix = self.index
             if ix.delta_fill >= self.seal_fill and ix._delta.n_docs > 0:
@@ -105,6 +107,15 @@ class IndexMaintenance:
                 ix.rewrite_segment(i)
                 self.stats.layout_rewrites += 1
                 did["rewritten"] += 1
+        if did["sealed"] or did["compacted"] or did["rewritten"]:
+            # the seal/compact/rewrite calls above each emitted their
+            # own detailed event; this one records the run envelope
+            # (lock hold time, work mix) the serving tier alerts on
+            self.index.events.emit(
+                "maintenance_run", epoch=self.index.epoch,
+                sealed=did["sealed"], compacted=did["compacted"],
+                rewritten=did["rewritten"],
+                duration_us=(time.perf_counter() - t0) * 1e6)
         return did
 
     # -- thread -----------------------------------------------------------

@@ -5,13 +5,23 @@ in-process metrics AND the benchmark reporting (``benchmarks/common``)
 both call :func:`percentiles`, so a p99 printed by ``churn.py`` and a
 p99 served from ``QueryServer.metrics`` can never disagree on
 definition (linear-interpolated, numpy semantics).
+
+``ServerMetrics`` is backed by a ``repro.obs.MetricsRegistry``: the
+counters it exposes as attributes (``requests``, ``batches``, ...) are
+registry counters, the cache's hit/miss counters are registered as
+callback gauges at server init, and the latency window's percentiles
+are exported as callback gauges — so ``registry.snapshot()`` is the
+single machine-readable export and ``summary()`` is its human-facing
+projection.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 
 import numpy as np
+
+from repro.obs.registry import MetricsRegistry
 
 
 def percentiles(samples, qs=(50, 99)) -> dict:
@@ -70,24 +80,73 @@ class LatencyWindow:
                 "p99_us": p["p99"], "mean_us": mean, "qps": self.qps()}
 
 
-@dataclasses.dataclass
+def _counter_property(name: str):
+    """Registry counter exposed as a plain int attribute: ``+= 1`` and
+    direct assignment both work, so callers written against the old
+    dataclass fields keep working unchanged."""
+
+    def fget(self) -> int:
+        return self.registry.counter(name).value
+
+    def fset(self, value: int) -> None:
+        c = self.registry.counter(name)
+        c.reset()
+        c.inc(int(value))
+
+    return property(fget, fset)
+
+
 class ServerMetrics:
-    """QueryServer counters + the latency window.
+    """QueryServer counters + the latency window, registry-backed.
 
     ``padded_slots`` counts batch slots filled with padding (a measure
     of micro-batch efficiency: fill = batched_queries /
     (batched_queries + padded_slots)); cache hits bypass batching
     entirely and appear only in ``requests`` and the cache's own
-    counters.
+    counters — which are registered here at server init, so
+    ``summary()`` is complete without the caller passing the cache.
     """
-    requests: int = 0
-    batches: int = 0
-    batched_queries: int = 0      # requests that went through a kernel
-    padded_slots: int = 0
-    epochs_served: int = 0        # distinct epochs observed at batch time
-    latency: LatencyWindow = dataclasses.field(default_factory=LatencyWindow)
-    layout_mix: dict = dataclasses.field(default_factory=dict)
-    _last_epoch: int | None = dataclasses.field(default=None, repr=False)
+
+    _COUNTERS = ("serve_requests", "serve_batches",
+                 "serve_batched_queries", "serve_padded_slots",
+                 "serve_epochs_served")
+
+    requests = _counter_property("serve_requests")
+    batches = _counter_property("serve_batches")
+    batched_queries = _counter_property("serve_batched_queries")
+    padded_slots = _counter_property("serve_padded_slots")
+    epochs_served = _counter_property("serve_epochs_served")
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 cache=None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.latency = LatencyWindow()
+        self.layout_mix: dict = {}
+        self._last_epoch: int | None = None
+        self._cache = None
+        for name in self._COUNTERS:
+            self.registry.counter(name)
+        self._register("serve_latency_p50_us",
+                       lambda: percentiles(self.latency._us)["p50"])
+        self._register("serve_latency_p99_us",
+                       lambda: percentiles(self.latency._us)["p99"])
+        self._register("serve_qps", self.latency.qps)
+        self._register("serve_batch_fill", self.batch_fill)
+        if cache is not None:
+            self.attach_cache(cache)
+
+    def _register(self, name: str, fn) -> None:
+        if self.registry.get(name) is None:
+            self.registry.register_callback(name, fn)
+
+    def attach_cache(self, cache) -> None:
+        """Register the ResultCache counters as callback gauges so the
+        snapshot and ``summary()`` carry them unconditionally."""
+        self._cache = cache
+        self._register("cache_hits", lambda: self._cache.hits)
+        self._register("cache_misses", lambda: self._cache.misses)
+        self._register("cache_hit_rate", lambda: self._cache.hit_rate)
+        self._register("cache_entries", lambda: len(self._cache))
 
     def observe_epoch(self, epoch: int) -> None:
         if epoch != self._last_epoch:
@@ -112,23 +171,34 @@ class ServerMetrics:
         return self.batched_queries / total if total else 0.0
 
     def reset(self) -> None:
-        self.requests = 0
-        self.batches = 0
-        self.batched_queries = 0
-        self.padded_slots = 0
-        self.epochs_served = 0
+        for name in self._COUNTERS:
+            self.registry.counter(name).reset()
         self._last_epoch = None
         self.layout_mix = {}
         self.latency.reset()
 
+    def snapshot(self) -> dict:
+        """The registry's stable export (see ``repro.obs.registry``)."""
+        return self.registry.snapshot()
+
     def summary(self, cache=None) -> dict:
+        """Human-facing aggregate. The ``cache=`` argument is
+        deprecated: the cache attached at init is reported
+        unconditionally; a passed cache is honoured only if none was
+        attached (strict back-compat)."""
+        if cache is not None:
+            warnings.warn(
+                "ServerMetrics.summary(cache=...) is deprecated — the "
+                "ResultCache is registered at server init and reported "
+                "unconditionally", DeprecationWarning, stacklevel=2)
+        src = self._cache if self._cache is not None else cache
         out = {"requests": self.requests, "batches": self.batches,
                "batch_fill": self.batch_fill(),
                "epochs_served": self.epochs_served,
                "layout_mix": self.layout_mix}
         out.update(self.latency.summary())
-        if cache is not None:
-            out["cache_hit_rate"] = cache.hit_rate
-            out["cache_hits"] = cache.hits
-            out["cache_misses"] = cache.misses
+        if src is not None:
+            out["cache_hit_rate"] = src.hit_rate
+            out["cache_hits"] = src.hits
+            out["cache_misses"] = src.misses
         return out

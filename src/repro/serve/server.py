@@ -32,6 +32,8 @@ from collections import deque
 import numpy as np
 
 from repro.core.live_index import LiveView, SegmentedIndex
+from repro.obs.registry import GLOBAL, MetricsRegistry
+from repro.obs.trace import StageAggregator, Trace, Tracer
 from repro.serve.cache import ResultCache
 from repro.serve.metrics import ServerMetrics
 
@@ -62,6 +64,13 @@ class ServerConfig:
     the next pin, like any other mutation).  ``None`` leaves the
     index's own policy untouched — bit-identical to pre-chooser
     serving.
+
+    ``trace_sample`` samples end-to-end query traces: every Nth
+    submitted ticket carries a ``repro.obs.Trace`` through queue wait,
+    batch assembly, per-segment kernel dispatch, candidate merge, and
+    response (``1`` traces every request, ``0`` — the default —
+    disables tracing entirely: no span objects are constructed on the
+    hot path, and results are bit-identical either way).
     """
     batch_size: int = 8
     n_terms_budget: int = 8
@@ -74,18 +83,25 @@ class ServerConfig:
     cache_capacity: int = 4096
     tune: object | None = None
     layout_policy: object | None = None
+    trace_sample: int = 0
 
 
 class Response:
-    """One served result: top-k ids/scores + serving metadata."""
-    __slots__ = ("doc_ids", "scores", "epoch", "latency_us", "cached")
+    """One served result: top-k ids/scores + serving metadata.
+    ``trace`` is the sampled ``repro.obs.Trace`` (None unless this
+    ticket was sampled) — its top-level stage spans sum exactly to
+    ``latency_us``."""
+    __slots__ = ("doc_ids", "scores", "epoch", "latency_us", "cached",
+                 "trace")
 
-    def __init__(self, doc_ids, scores, epoch, latency_us, cached):
+    def __init__(self, doc_ids, scores, epoch, latency_us, cached,
+                 trace=None):
         self.doc_ids = doc_ids
         self.scores = scores
         self.epoch = epoch
         self.latency_us = latency_us
         self.cached = cached
+        self.trace = trace
 
 
 class Ticket:
@@ -95,6 +111,7 @@ class Ticket:
         self.row = row
         self.t_submit = time.perf_counter()
         self.response: Response | None = None
+        self.trace: Trace | None = None
         self._done = threading.Event()
 
     def done(self) -> bool:
@@ -125,7 +142,12 @@ class QueryServer:
         self.config = config or ServerConfig()
         self.index_lock = lock if lock is not None else threading.RLock()
         self.cache = ResultCache(self.config.cache_capacity)
-        self.metrics = ServerMetrics()
+        self.registry = MetricsRegistry()
+        self.metrics = ServerMetrics(registry=self.registry,
+                                     cache=self.cache)
+        self.tracer = Tracer(self.config.trace_sample)
+        self.stages = StageAggregator(self.registry)
+        self._register_index_gauges()
         self._queue: deque[Ticket] = deque()
         self._qlock = threading.Lock()
         self._work = threading.Event()
@@ -137,6 +159,48 @@ class QueryServer:
             self._pinned: LiveView = index.view()
         self._purged_epoch = self._pinned.epoch
         self.metrics.observe_layout_mix(self._pinned.layout_mix())
+
+    # -- observability ------------------------------------------------------
+
+    def _register_index_gauges(self) -> None:
+        """Expose live-index state + maintenance counters as callback
+        gauges, read at snapshot time (no polling thread)."""
+        ix = self.index
+        for name, fn in (
+                ("index_epoch", lambda: ix.epoch),
+                ("index_segments", lambda: ix.num_segments),
+                ("index_docs", lambda: ix.num_docs),
+                ("index_live_docs", lambda: ix.live_doc_count),
+                ("index_delta_fill", lambda: ix.delta_fill),
+                ("index_seals", lambda: ix.stats.seals),
+                ("index_compactions", lambda: ix.stats.compactions),
+                ("index_layout_rewrites", lambda: ix.stats.layout_rewrites),
+                ("index_postings_merged", lambda: ix.stats.postings_merged),
+                ("index_deletes", lambda: ix.stats.deletes),
+                ("index_events_total", lambda: ix.events.total)):
+            if self.registry.get(name) is None:
+                self.registry.register_callback(name, fn)
+
+    def metrics_snapshot(self, include_global: bool = True) -> dict:
+        """The stable export (see ``repro.obs.registry``): this
+        server's registry — counters, cache gauges, index gauges,
+        per-stage histograms — merged with the process-global engine
+        counters (pair overflow, truncated terms)."""
+        snap = self.registry.snapshot()
+        if include_global:
+            for name, m in GLOBAL.snapshot().items():
+                snap.setdefault(name, m)
+        return snap
+
+    def stage_summary(self) -> dict:
+        """Per-stage latency breakdown ({stage: {count, sum, p50,
+        p99}}) aggregated from sampled traces."""
+        return self.stages.summary()
+
+    def events(self, n: int | None = None, kind: str | None = None) -> list:
+        """The last ``n`` maintenance events from the index's bounded
+        event log (seal/compact/rewrite/ingest/delete/...)."""
+        return self.index.events.tail(n, kind=kind)
 
     # -- admission ----------------------------------------------------------
 
@@ -157,6 +221,8 @@ class QueryServer:
         row = np.zeros(t, np.uint32)
         row[:qh.shape[0]] = qh
         ticket = Ticket(row)
+        if self.tracer.enabled:
+            ticket.trace = self.tracer.sample()
         with self._qlock:
             self._queue.append(ticket)
         self._work.set()
@@ -219,6 +285,13 @@ class QueryServer:
 
     def _serve_batch(self, batch: list[Ticket]) -> None:
         cfg = self.config
+        # stage boundaries are SHARED timestamps: queue_wait ends where
+        # assemble (or the cache-hit span) starts, so a sampled ticket's
+        # top-level spans sum EXACTLY to its measured e2e latency
+        traced = [t for t in batch if t.trace is not None]
+        t_batch = time.perf_counter() if traced else 0.0
+        for t in traced:
+            t.trace.span("queue_wait", t0=t.t_submit).end(t_batch)
         view = self.refresh_view()
         epoch = view.epoch
         self.metrics.observe_epoch(epoch)
@@ -235,32 +308,63 @@ class QueryServer:
             key = self.cache.make_key(ticket.row, cfg.k, epoch)
             hit = self.cache.get(key)
             if hit is not None:
-                self._respond(ticket, hit[0], hit[1], epoch, cached=True)
+                self._respond(ticket, hit[0], hit[1], epoch, cached=True,
+                              stage_t0=t_batch)
             else:
                 pending.append((ticket, key))
         if pending:
+            # batch-level spans (assembly, scoring + per-segment/merge
+            # children) are recorded ONCE and adopted by every sampled
+            # ticket in the batch — the work is genuinely shared
+            btr = (Trace() if any(t.trace is not None for t, _ in pending)
+                   else None)
+            asm = (btr.span("assemble", t0=t_batch, epoch=epoch,
+                            fill=len(pending),
+                            padded_slots=cfg.batch_size - len(pending))
+                   if btr is not None else None)
             qb = np.zeros((cfg.batch_size, cfg.n_terms_budget), np.uint32)
             for i, (ticket, _) in enumerate(pending):
                 qb[i] = ticket.row
+            if asm is not None:
+                asm.end()
+            score = (btr.span("score", t0=asm.t1, engine=cfg.engine,
+                              mode=cfg.mode, backend=cfg.backend,
+                              segments=view.num_segments)
+                     if btr is not None else None)
             result = view.topk(qb, cfg.k, cap=cfg.cap,
                                rank_blend=cfg.rank_blend, engine=cfg.engine,
                                mode=cfg.mode, backend=cfg.backend,
-                               tune=cfg.tune)
+                               tune=cfg.tune, trace=btr)
             ids = np.asarray(result.doc_ids)
             scores = np.asarray(result.scores)
+            if score is not None:
+                score.end()
+            t_scored = score.t1 if score is not None else None
             for i, (ticket, key) in enumerate(pending):
                 self.cache.put(key, ids[i], scores[i])
+                if ticket.trace is not None:
+                    ticket.trace.adopt(btr.spans)
                 self._respond(ticket, ids[i].copy(), scores[i].copy(),
-                              epoch, cached=False)
+                              epoch, cached=False, stage_t0=t_scored)
             self.metrics.batches += 1
             self.metrics.batched_queries += len(pending)
             self.metrics.padded_slots += cfg.batch_size - len(pending)
 
     def _respond(self, ticket: Ticket, doc_ids, scores, epoch: int,
-                 cached: bool) -> None:
-        latency_us = (time.perf_counter() - ticket.t_submit) * 1e6
+                 cached: bool, stage_t0: float | None = None) -> None:
+        now = time.perf_counter()
+        latency_us = (now - ticket.t_submit) * 1e6
+        tr = ticket.trace
+        if tr is not None:
+            # final stage closes at the SAME clock reading latency_us is
+            # computed from — the stage sum is the e2e latency, exactly
+            if stage_t0 is not None:
+                tr.span("cache_hit" if cached else "respond",
+                        t0=stage_t0, epoch=epoch).end(now)
+            self.stages.observe_trace(tr)
+            self.stages.observe("e2e", latency_us)
         ticket.response = Response(doc_ids, scores, epoch, latency_us,
-                                   cached)
+                                   cached, trace=tr)
         self.metrics.record_response(latency_us)
         ticket._done.set()
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 
 import numpy as np
 
@@ -162,6 +163,11 @@ def restore_segmented(state: dict) -> SegmentedIndex:
     si._delta_dirty = True
     si.stats = LiveIndexStats(**meta["stats"])
     si._epoch = int(meta["epoch"])
+    # the per-segment rebuilds above go through _build_segment directly
+    # (no per-segment seal events); one restore event marks the cutover
+    si.events.emit("restore", epoch=si._epoch,
+                   segments=len(si._segments),
+                   snapshot_version=int(meta["version"]))
     return si
 
 
@@ -169,8 +175,12 @@ def save_segmented(index: SegmentedIndex, path, lock=None) -> None:
     """Snapshot to an ``.npz`` file (compressed).  ``lock`` as in
     ``serialize_segmented`` — hold the write lock when writers may be
     live (only the state gather runs under it, not the file write)."""
+    t0 = time.perf_counter()
     state = serialize_segmented(index, lock=lock)
     np.savez_compressed(path, **state)
+    index.events.emit("snapshot_save", epoch=index.epoch,
+                      segments=index.num_segments, path=str(path),
+                      duration_us=(time.perf_counter() - t0) * 1e6)
 
 
 def load_segmented(path) -> SegmentedIndex:

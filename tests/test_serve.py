@@ -154,7 +154,7 @@ def test_server_parity_and_zero_recompiles_under_churn():
     _check_responses(server, answered, cfg.k)
     # the finite pool + stable epochs between mutations => real hits
     assert server.cache.hits > 0
-    s = server.metrics.summary(server.cache)
+    s = server.metrics.summary()
     assert s["requests"] == len(answered)
     assert s["epochs_served"] >= 3
     assert s["p99_us"] >= s["p50_us"] > 0
