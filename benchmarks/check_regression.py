@@ -74,6 +74,85 @@ def check_registry_section(results: dict) -> list[str]:
     return problems
 
 
+def _numeric(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_mesh_section(results: dict) -> list[str]:
+    """Validate the mesh serving section (``results.mesh``, written by
+    ``common.smoke_mesh``): shed counts are non-negative ints that sum
+    to the total, the shed rate is a fraction, at least one handoff
+    happened with a well-formed pause summary, and the stage breakdown
+    carries the mesh-only ``shed`` and ``handoff`` stages next to the
+    serving ones.  The section is additive within repro-bench/3 —
+    artifacts written before the mesh existed simply lack it and stay
+    valid — but once present it must be well-formed: a drive that
+    produced no sheds or no handoff means the deterministic smoke
+    construction broke, which is exactly what this gate catches."""
+    problems: list[str] = []
+    mesh = results.get("mesh")
+    if mesh is None:
+        return []
+    if not isinstance(mesh, dict):
+        return [f"results.mesh is not a dict ({type(mesh).__name__})"]
+    shed = mesh.get("shed")
+    if not isinstance(shed, dict) or "total" not in shed:
+        problems.append(f"mesh.shed missing or malformed: {shed!r}")
+    else:
+        bad = False
+        for reason, v in sorted(shed.items()):
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                problems.append(f"mesh.shed[{reason!r}] = {v!r} is not "
+                                "a non-negative int")
+                bad = True
+        if not bad:
+            parts = sum(v for r, v in shed.items() if r != "total")
+            if shed["total"] != parts:
+                problems.append(f"mesh.shed total {shed['total']} != "
+                                f"sum of per-reason counts {parts}")
+            if shed["total"] == 0:
+                problems.append("mesh.shed total is 0 — the smoke drive "
+                                "is built to shed deterministically")
+    rate = mesh.get("shed_rate")
+    if not _numeric(rate) or not 0.0 <= rate <= 1.0:
+        problems.append(f"mesh.shed_rate {rate!r} is not a fraction "
+                        "in [0, 1]")
+    handoffs = mesh.get("handoffs")
+    if not isinstance(handoffs, int) or isinstance(handoffs, bool) \
+            or handoffs < 1:
+        problems.append(f"mesh.handoffs {handoffs!r} is not a positive "
+                        "int (the mesh pins an epoch at startup)")
+    pause = mesh.get("handoff_pause_us")
+    if not isinstance(pause, dict):
+        problems.append(f"mesh.handoff_pause_us missing or malformed: "
+                        f"{pause!r}")
+    else:
+        if not isinstance(pause.get("count"), int) or pause["count"] < 1:
+            problems.append(f"mesh.handoff_pause_us.count "
+                            f"{pause.get('count')!r} is not a positive int")
+        for field in ("p50", "p99"):
+            v = pause.get(field)
+            if not _numeric(v) or v < 0:
+                problems.append(f"mesh.handoff_pause_us.{field} {v!r} "
+                                "is not a non-negative number")
+    stages = mesh.get("stages")
+    if not isinstance(stages, dict) or not stages:
+        problems.append(f"mesh.stages missing or empty "
+                        f"({type(stages).__name__})")
+    else:
+        for required in ("shed", "handoff", "score"):
+            if required not in stages:
+                problems.append(f"mesh.stages missing the {required!r} "
+                                "stage the smoke drive always exercises")
+        for name, st in sorted(stages.items()):
+            if not isinstance(st, dict) \
+                    or not isinstance(st.get("count"), int) \
+                    or not all(_numeric(st.get(f)) for f in ("p50", "p99")):
+                problems.append(f"mesh.stages[{name!r}] is not a "
+                                f"well-formed stage summary: {st!r}")
+    return problems
+
+
 def check(current_path: str, baseline_path: str,
           factor: float = 2.0) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
@@ -85,6 +164,7 @@ def check(current_path: str, baseline_path: str,
     # stay loadable — READ_SCHEMAS back-compat)
     if current.get("schema") == "repro-bench/3":
         problems.extend(check_registry_section(current.get("results", {})))
+        problems.extend(check_mesh_section(current.get("results", {})))
         if problems:
             return problems
     cb, bb = (current["env"].get("backend"), baseline["env"].get("backend"))

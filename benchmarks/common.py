@@ -261,6 +261,71 @@ def smoke_observability(n_requests: int = 48) -> dict:
             "requests": n_requests}
 
 
+def smoke_mesh(n_requests: int = 32) -> dict:
+    """Deterministic pump-driven MeshServer drive over the smoke
+    corpus — the ``results.mesh`` section of BENCH_smoke.json that CI
+    gates (``check_regression.check_mesh_section``).
+
+    The drive is constructed so every gated field is non-trivially
+    exercised without sleeps or threads: the admission queue is sized
+    to the request count so four extra submits shed on "admission";
+    two queued tickets are backdated past the deadline so the first
+    batch sheds them on "deadline"; the holdback ingest advances the
+    epoch mid-drive so the next micro-batch pays (and traces) a
+    cross-shard handoff.  Every request is trace-sampled, so the stage
+    breakdown includes the mesh-only ``shed`` and ``handoff`` stages,
+    and shed traces obey the same stage-sum contract as served ones."""
+    import dataclasses as _dc
+
+    from repro.core.live_index import SegmentedIndex
+    from repro.serve import MeshConfig, MeshServer
+
+    tc, h = bench_host(SMOKE_SPEC)
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=512,
+                        delta_posting_capacity=512 * 64)
+    first = 1000
+    si.add_batch(_dc.replace(tc, doc_term_ids=tc.doc_term_ids[:first],
+                             doc_counts=tc.doc_counts[:first],
+                             num_docs=first))
+    si.seal()
+    ms = MeshServer(si, MeshConfig(
+        batch_size=8, n_terms_budget=8, k=10, trace_sample=1,
+        n_shards=1, max_queue=n_requests, deadline_us=60e6,
+        auto_handoff=True, handoff_min_interval_s=0.0))
+    ms.warmup()
+    pool = corpus.sample_query_terms(h.df, h.term_hashes, 16, 3,
+                                     num_docs=h.num_docs)
+    tickets = [ms.submit(pool[i % 16], tenant=f"t{i % 2}")
+               for i in range(n_requests)]
+    shed_tix = [ms.submit(pool[0]) for _ in range(4)]   # queue is full
+    for t in tickets[:2]:
+        t.t_submit -= 120.0          # past the 60s deadline at pickup
+    ms.pump(max_batches=2)
+    ms.add_batch(_dc.replace(tc, doc_term_ids=tc.doc_term_ids[first:],
+                             doc_counts=tc.doc_counts[first:],
+                             num_docs=tc.num_docs - first))
+    while ms.pending:
+        ms.pump()
+    worst = 0.0
+    for t in tickets + shed_tix:
+        r = t.result(timeout=30.0)
+        total = sum(r.trace.stage_durations().values())
+        worst = max(worst, abs(total - r.latency_us) / max(r.latency_us,
+                                                           1e-9))
+    if worst > 0.05:
+        raise AssertionError(
+            f"mesh stage spans sum to {worst:.1%} off the measured e2e "
+            "latency — the shared-boundary tracing contract is broken")
+    summary = ms.mesh_summary()
+    return {"requests": n_requests + len(shed_tix),
+            "shed": ms.shed_counts(), "shed_rate": ms.shed_rate(),
+            "handoffs": summary["handoffs"],
+            "handoff_pause_us": summary["handoff_pause_us"],
+            "stages": ms.stage_summary(),
+            "stage_sum_rel_err_max": worst}
+
+
 def smoke_gate_stats(reps: int = 30) -> dict:
     """The one number CI gates on: p50/p99 of the fused candidates
     scorer over the smoke corpus (jit-warmed, single process)."""

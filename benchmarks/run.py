@@ -9,7 +9,9 @@
   churn    live-index ingest/churn: docs/sec, latency vs segment count,
            posting-merge amplification vs full rebuild
   serving  QueryServer offered-QPS sweep: request latency p50/p99,
-           achieved QPS, cache hit rate, maintenance-thread lifecycle
+           achieved QPS, cache hit rate, maintenance-thread lifecycle;
+           plus the MeshServer offered-QPS x shard-count sweep (shed
+           rate, handoff pause) — one subprocess per shard count
 
 ``--smoke`` runs every suite on a CI-sized corpus (plumbing check, not
 representative numbers).
@@ -51,7 +53,10 @@ def main() -> None:
         # the artifact CI gates on: suite CSV rows + a dedicated
         # fused-scorer latency measurement (schema-versioned JSON);
         # v3 adds the observability section — a traced serving drive's
-        # per-stage breakdown + the unified registry snapshot
+        # per-stage breakdown + the unified registry snapshot — and,
+        # additively, the mesh section: a deterministic MeshServer
+        # drive's shed counts/rate, handoff pauses, and stage
+        # breakdown (check_regression.check_mesh_section)
         gate = common.smoke_gate_stats()
         obs = common.smoke_observability()
         common.write_bench(
@@ -59,7 +64,8 @@ def main() -> None:
             results={"gate": gate, "suites_failed": failed,
                      "layout_mix": common.smoke_layout_mix(),
                      "stages": obs["stages"],
-                     "registry": obs["registry"]},
+                     "registry": obs["registry"],
+                     "mesh": common.smoke_mesh()},
             config={"spec": dataclasses.asdict(common.SMOKE_SPEC),
                     "only": only})
     if failed:

@@ -1223,6 +1223,27 @@ def build_term_sharded_packed(host: PostingsHost, n_shards: int
     )
 
 
+def build_term_sharded_from_view(view, n_shards: int,
+                                 layout: str = "hor"):
+    """Term-partition an epoch-pinned ``LiveView``: bulk-build the
+    view's live corpus and shard the vocabulary.
+
+    Returns ``(index, live_ids)`` — the fused term-sharded index over
+    the COMPACT live-doc space plus the ascending global ids that map
+    compact results back (ascending, so exact-score ties still break on
+    lowest global doc id after the mapping).  This is the serving
+    tier's alternate topology: unlike the segment-stack path it
+    re-builds (and re-compiles for new shapes) per epoch, which is the
+    right trade only when the corpus is near-static between handoffs.
+    """
+    from repro.core import build
+    tc_live, live_ids = view.export_live_corpus()
+    builder = (build_term_sharded_packed if layout == "packed"
+               else build_term_sharded_blocked)
+    host = build.bulk_build(tc_live)
+    return builder(host, n_shards), np.asarray(live_ids, np.int64)
+
+
 def make_term_sharded_fused_scorer(
         index: BlockedTermShardedIndex | PackedTermShardedIndex,
         mesh: Mesh, axis: str, k: int = 10, cap: int | None = None,

@@ -19,6 +19,12 @@ that tier for ``core/live_index.SegmentedIndex``:
   metrics.py     latency percentiles (p50/p99), QPS, batch fill —
                  registry-backed (see repro.obs) with a stable
                  JSON/Prometheus snapshot export
+  mesh.py        MeshServer — the distributed tier: micro-batches fan
+                 out over sharded segment stacks (or the term-sharded
+                 fused engine) at a pinned epoch, with replicated
+                 indexes under independent maintenance, cross-shard
+                 epoch handoff, admission control, deadline shedding,
+                 and per-tenant result-cache partitions
 
 Observability primitives (spans, the metrics registry, the maintenance
 event log) live in the dependency-neutral ``repro.obs`` package and are
@@ -26,17 +32,19 @@ re-exported here for serving-tier callers.
 """
 from repro.obs.registry import EventLog, MetricsRegistry
 from repro.obs.trace import Span, StageAggregator, Trace, Tracer
-from repro.serve.cache import ResultCache
+from repro.serve.cache import ResultCache, TenantCachePartitions
 from repro.serve.maintenance import IndexMaintenance
+from repro.serve.mesh import MeshConfig, MeshServer, ShardReplica
 from repro.serve.metrics import LatencyWindow, ServerMetrics, percentiles
-from repro.serve.server import QueryServer, ServerConfig
+from repro.serve.server import QueryServer, Response, ServerConfig, Ticket
 from repro.serve.snapshot import (load_segmented, pin, restore_segmented,
                                   save_segmented, serialize_segmented)
 
 __all__ = [
-    "QueryServer", "ServerConfig", "ResultCache", "IndexMaintenance",
-    "LatencyWindow", "ServerMetrics", "percentiles", "pin",
-    "serialize_segmented", "restore_segmented", "save_segmented",
-    "load_segmented", "MetricsRegistry", "EventLog", "Span", "Trace",
-    "Tracer", "StageAggregator",
+    "QueryServer", "ServerConfig", "Response", "Ticket", "ResultCache",
+    "TenantCachePartitions", "IndexMaintenance", "MeshServer",
+    "MeshConfig", "ShardReplica", "LatencyWindow", "ServerMetrics",
+    "percentiles", "pin", "serialize_segmented", "restore_segmented",
+    "save_segmented", "load_segmented", "MetricsRegistry", "EventLog",
+    "Span", "Trace", "Tracer", "StageAggregator",
 ]

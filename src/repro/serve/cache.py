@@ -71,3 +71,82 @@ class ResultCache:
     def reset_counters(self) -> None:
         self.hits = 0
         self.misses = 0
+
+
+class TenantCachePartitions:
+    """Per-tenant ``ResultCache`` partitions: keys are effectively
+    ``(tenant, query row, k, epoch)``.
+
+    Each tenant gets its own LRU with its own capacity, so one tenant's
+    burst can never evict another's working set — isolation holds by
+    construction, not by quota accounting.  The tenant directory itself
+    is LRU-bounded (``max_tenants``): an evicted tenant loses its
+    partition wholesale and starts cold on return.
+
+    Aggregate ``hits``/``misses`` are tracked here (they survive tenant
+    eviction); per-partition counters remain on each ``ResultCache``.
+    The object satisfies the stats surface ``ServerMetrics.attach_cache``
+    expects (hits, misses, hit_rate, __len__, reset_counters).
+    """
+
+    make_key = staticmethod(ResultCache.make_key)
+
+    def __init__(self, capacity_per_tenant: int = 1024,
+                 max_tenants: int = 64):
+        self.capacity_per_tenant = int(capacity_per_tenant)
+        self.max_tenants = int(max_tenants)
+        self._parts: OrderedDict[str, ResultCache] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.tenant_evictions = 0
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._parts.values())
+
+    @property
+    def tenants(self) -> list[str]:
+        return list(self._parts)
+
+    def partition(self, tenant: str) -> ResultCache:
+        """The tenant's partition, created lazily; touching it marks
+        the tenant most-recently-used in the directory."""
+        part = self._parts.get(tenant)
+        if part is None:
+            part = ResultCache(self.capacity_per_tenant)
+            self._parts[tenant] = part
+            while len(self._parts) > self.max_tenants:
+                self._parts.popitem(last=False)
+                self.tenant_evictions += 1
+        self._parts.move_to_end(tenant)
+        return part
+
+    def get(self, tenant: str, key: tuple):
+        out = self.partition(tenant).get(key)
+        if out is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return out
+
+    def put(self, tenant: str, key: tuple, doc_ids: np.ndarray,
+            scores: np.ndarray) -> None:
+        self.partition(tenant).put(key, doc_ids, scores)
+
+    def purge_below(self, epoch: int) -> int:
+        return sum(p.purge_below(epoch) for p in self._parts.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_counters(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        for p in self._parts.values():
+            p.reset_counters()
+
+    def per_tenant(self) -> dict:
+        """{tenant: {entries, hits, misses}} for observability."""
+        return {t: {"entries": len(p), "hits": p.hits, "misses": p.misses}
+                for t, p in self._parts.items()}

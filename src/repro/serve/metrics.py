@@ -183,15 +183,18 @@ class ServerMetrics:
 
     def summary(self, cache=None) -> dict:
         """Human-facing aggregate. The ``cache=`` argument is
-        deprecated: the cache attached at init is reported
-        unconditionally; a passed cache is honoured only if none was
-        attached (strict back-compat)."""
+        deprecated AND inert: the cache attached at init (or via
+        ``attach_cache``) is the only one reported — passing one here
+        warns and has no effect.  The parameter survives one more
+        release for signature compatibility only."""
         if cache is not None:
             warnings.warn(
-                "ServerMetrics.summary(cache=...) is deprecated — the "
-                "ResultCache is registered at server init and reported "
-                "unconditionally", DeprecationWarning, stacklevel=2)
-        src = self._cache if self._cache is not None else cache
+                "ServerMetrics.summary(cache=...) is deprecated and "
+                "ignored — attach the cache with attach_cache() (the "
+                "servers do this at init); the attached cache is "
+                "reported unconditionally", DeprecationWarning,
+                stacklevel=2)
+        src = self._cache
         out = {"requests": self.requests, "batches": self.batches,
                "batch_fill": self.batch_fill(),
                "epochs_served": self.epochs_served,

@@ -90,25 +90,36 @@ class Response:
     """One served result: top-k ids/scores + serving metadata.
     ``trace`` is the sampled ``repro.obs.Trace`` (None unless this
     ticket was sampled) — its top-level stage spans sum exactly to
-    ``latency_us``."""
+    ``latency_us``.  ``status`` is ``"ok"`` for a served result; shed
+    and shutdown resolutions carry ``"shed"`` / ``"shutdown"`` with
+    empty ids (-1) and zero scores, so ``result()`` never blocks on a
+    ticket the server has already given up on."""
     __slots__ = ("doc_ids", "scores", "epoch", "latency_us", "cached",
-                 "trace")
+                 "trace", "status")
 
     def __init__(self, doc_ids, scores, epoch, latency_us, cached,
-                 trace=None):
+                 trace=None, status="ok"):
         self.doc_ids = doc_ids
         self.scores = scores
         self.epoch = epoch
         self.latency_us = latency_us
         self.cached = cached
         self.trace = trace
+        self.status = status
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 class Ticket:
-    """Admission handle: resolves to a Response when its batch lands."""
+    """Admission handle: resolves to a Response when its batch lands.
+    ``tenant`` scopes the result-cache partition the response may be
+    served from (single-tenant servers leave it at ``"default"``)."""
 
-    def __init__(self, row: np.ndarray):
+    def __init__(self, row: np.ndarray, tenant: str = "default"):
         self.row = row
+        self.tenant = tenant
         self.t_submit = time.perf_counter()
         self.response: Response | None = None
         self.trace: Trace | None = None
@@ -204,9 +215,10 @@ class QueryServer:
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, query_hashes) -> Ticket:
-        """Enqueue one query (u32 term-hash vector, <= n_terms_budget
-        wide; it is zero-padded to the budget).  Returns a Ticket."""
+    def _make_ticket(self, query_hashes, tenant: str = "default") -> Ticket:
+        """Validate + zero-pad one query into a Ticket (not yet
+        enqueued) — the shared admission front half, so subclasses can
+        decide a ticket's fate (enqueue vs shed) after it exists."""
         qh = np.atleast_1d(np.asarray(query_hashes, np.uint32))
         if qh.ndim != 1:
             raise ValueError(
@@ -220,9 +232,15 @@ class QueryServer:
                 "(widen the budget; truncation would drop terms silently)")
         row = np.zeros(t, np.uint32)
         row[:qh.shape[0]] = qh
-        ticket = Ticket(row)
+        ticket = Ticket(row, tenant=tenant)
         if self.tracer.enabled:
             ticket.trace = self.tracer.sample()
+        return ticket
+
+    def submit(self, query_hashes) -> Ticket:
+        """Enqueue one query (u32 term-hash vector, <= n_terms_budget
+        wide; it is zero-padded to the budget).  Returns a Ticket."""
+        ticket = self._make_ticket(query_hashes)
         with self._qlock:
             self._queue.append(ticket)
         self._work.set()
@@ -402,9 +420,39 @@ class QueryServer:
         self._thread.start()
 
     def stop(self) -> None:
-        if self._thread is None:
-            return
-        self._stop.set()
-        self._work.set()
-        self._thread.join(timeout=30.0)
-        self._thread = None
+        """Stop the worker (if running) and resolve every still-queued
+        ticket with a ``status="shutdown"`` Response — ``result()``
+        must never block until timeout on a server that has stopped.
+        The worker drains the queue normally first, so only tickets
+        that raced the shutdown (or pump-mode leftovers) are failed."""
+        if self._thread is not None:
+            self._stop.set()
+            self._work.set()
+            self._thread.join(timeout=30.0)
+            self._thread = None
+        self._fail_pending()
+
+    def _fail_pending(self) -> int:
+        with self._qlock:
+            leftover = list(self._queue)
+            self._queue.clear()
+            self._work.clear()
+        for ticket in leftover:
+            self._resolve_shutdown(ticket)
+        return len(leftover)
+
+    def _resolve_shutdown(self, ticket: Ticket) -> None:
+        """Resolve one unserved ticket as shed-by-shutdown (overridden
+        by the mesh to count/log it as a shed)."""
+        now = time.perf_counter()
+        k = self.config.k
+        tr = ticket.trace
+        if tr is not None:
+            tr.span("shed", t0=ticket.t_submit, reason="shutdown").end(now)
+            self.stages.observe_trace(tr)
+        ticket.response = Response(
+            np.full(k, -1, np.int32), np.zeros(k, np.float32),
+            self._pinned.epoch, (now - ticket.t_submit) * 1e6,
+            False, trace=tr, status="shutdown")
+        self.registry.counter("serve_shutdown_unserved").inc()
+        ticket._done.set()

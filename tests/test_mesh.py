@@ -1,0 +1,493 @@
+"""Distributed serving mesh: MeshServer parity, admission control,
+deadline shedding, per-tenant caching, and cross-shard epoch handoff.
+
+The central contract: every MeshServer response is bit-identical (tie
+order included) to a single-host QueryServer over the SAME pinned
+LiveView — under a randomized add/delete/compact churn schedule, on
+either topology, with zero new jit entries once a size class is warm.
+The deterministic tests drive the mesh thread-free via ``pump()`` (no
+real-time sleeps); the ≥4-shard parity test runs in a subprocess
+because XLA's host device count must be set before jax initializes.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.build import TokenizedCorpus
+from repro.core import live_index as li
+from repro.core.live_index import SegmentedIndex
+from repro.distributed import retrieval
+from repro.serve import (MeshConfig, MeshServer, QueryServer,
+                         ServerConfig, TenantCachePartitions,
+                         restore_segmented, serialize_segmented)
+from repro.text import corpus
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# one mesh object for the whole module: the stack-scorer jit cache is
+# keyed on the Mesh instance, so zero-growth assertions need both runs
+# of a schedule to share it
+MESH_1 = jax.make_mesh((1,), ("shards",))
+
+
+def _slices(tc, bounds):
+    return [TokenizedCorpus(tc.doc_term_ids[a:b], tc.doc_counts[a:b],
+                            tc.term_hashes, b - a)
+            for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def _corpus(num_docs=480, vocab=360, seed=1):
+    return corpus.generate(corpus.CorpusSpec(
+        num_docs=num_docs, vocab=vocab, avg_distinct=20, seed=seed))
+
+
+def _queries(si, n, seed=5):
+    return corpus.sample_query_terms(
+        np.asarray(si._df), si.term_hashes, n, 3,
+        num_docs=max(si.num_docs, 1), seed=seed)
+
+
+def _seeded_index(tc, n_docs=240, cap=128):
+    si = SegmentedIndex(delta_doc_capacity=cap)
+    si.add_batch(_slices(tc, [0, n_docs])[0])
+    si.seal()
+    return si
+
+
+def _assert_view_parity(ms, tickets, rtol=1e-5):
+    """Every response must match ``view.topk`` of the SERVED epoch —
+    the exact computation a single-host QueryServer performs over that
+    pin — ids exactly (tie order included), scores to float tol."""
+    by_epoch = {}
+    for t in tickets:
+        by_epoch.setdefault(t.response.epoch, []).append(t)
+    views = {ms.serving_epoch: ms.serving_view}
+    views.update(getattr(ms, "_view_log", {}))
+    for epoch, group in by_epoch.items():
+        view = views[epoch]
+        rows = np.stack([t.row for t in group])
+        ref = view.topk(rows, ms.config.k)
+        ids, scores = np.asarray(ref.doc_ids), np.asarray(ref.scores)
+        for i, t in enumerate(group):
+            assert t.response.status == "ok"
+            np.testing.assert_array_equal(
+                np.asarray(t.response.doc_ids), ids[i])
+            np.testing.assert_allclose(
+                np.asarray(t.response.scores), scores[i], rtol=rtol)
+
+
+class RecordingMesh(MeshServer):
+    """MeshServer that remembers every epoch state it served, so the
+    test can oracle-check stale responses after further handoffs."""
+
+    def handoff(self):
+        out = super().handoff()
+        if not hasattr(self, "_view_log"):
+            self._view_log = {}
+        self._view_log[self._state.epoch] = self._state.view
+        return out
+
+
+# ---------------------------------------------------------------------------
+# randomized churn parity + zero new jit entries (single-shard pump mode)
+# ---------------------------------------------------------------------------
+
+
+def _run_churn_schedule(si, tc, mesh, steps=10, seed=3):
+    """One deterministic randomized schedule: interleave ingest,
+    deletes, maintenance (seal/compact), handoff, and query batches.
+    Returns every answered ticket for parity checking."""
+    rng = np.random.default_rng(seed)
+    cfg = MeshConfig(batch_size=4, n_terms_budget=8, k=10, n_shards=1,
+                     auto_handoff=False, trace_sample=3)
+    ms = RecordingMesh(si, cfg, mesh=mesh)
+    ms.warmup()
+    bounds = np.linspace(240, tc.num_docs, steps + 1).astype(int)
+    live = set(range(240))
+    next_id = 240
+    answered = []
+    for step in range(steps):
+        a, b = bounds[step], bounds[step + 1]
+        action = rng.integers(0, 4)
+        if action == 0 and b > a:
+            ms.add_batch(_slices(tc, [a, b])[0])
+            live.update(range(next_id, next_id + (b - a)))
+            next_id += b - a
+        elif action == 1 and len(live) > 24:
+            dead = rng.choice(sorted(live), size=8, replace=False)
+            ms.delete_docs(dead)
+            live.difference_update(dead.tolist())
+        elif action == 2:
+            ms.run_maintenance_once()
+        if rng.integers(0, 2) == 1:
+            ms.handoff()
+        qh = _queries(si, 4, seed=100 + step)
+        tickets = [ms.submit(q) for q in qh]
+        ms.pump(max_batches=4)
+        answered.extend(tickets)
+    ms.handoff()
+    qh = _queries(si, 4, seed=999)
+    tickets = [ms.submit(q) for q in qh]
+    ms.pump(max_batches=4)
+    answered.extend(tickets)
+    assert all(t.done() for t in answered)
+    _assert_view_parity(ms, answered)
+    return ms
+
+
+def test_mesh_parity_under_randomized_churn_and_zero_new_jit_entries():
+    tc = _corpus()
+    # run 1 warms every (size_class, layout, depth) signature the
+    # schedule mints; run 2 replays it on a fresh index and must add
+    # ZERO jit entries anywhere in the serving path
+    _run_churn_schedule(_seeded_index(tc), tc, MESH_1)
+    warm_stack = retrieval.stack_scorer_cache_sizes()
+    warm_live = li.scorer_cache_sizes()
+    ms = _run_churn_schedule(_seeded_index(tc), tc, MESH_1)
+    assert retrieval.stack_scorer_cache_sizes() == warm_stack
+    assert li.scorer_cache_sizes() == warm_live
+    # and the replay answered from a warm mesh: handoffs happened
+    assert ms.registry.counter("mesh_handoffs").value >= 2
+
+
+def test_mesh_matches_queryserver_over_same_pin():
+    """Direct cross-check: a single-host QueryServer over a clone of
+    the mesh's primary at the same epoch answers identically."""
+    tc = _corpus()
+    si = _seeded_index(tc)
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   auto_handoff=False), mesh=MESH_1)
+    ms.add_batch(_slices(tc, [240, 360])[0])
+    ms.delete_docs(np.arange(10, 40))
+    ms.handoff()
+    clone = restore_segmented(serialize_segmented(si))
+    qs = QueryServer(clone, ServerConfig(batch_size=4, k=10))
+    assert qs.pinned_epoch == ms.serving_epoch
+    qh = _queries(si, 8, seed=11)
+    mt = [ms.submit(q) for q in qh]
+    qt = [qs.submit(q) for q in qh]
+    ms.pump(max_batches=4)
+    qs.pump(max_batches=4)
+    for m, q in zip(mt, qt):
+        assert m.response.epoch == q.response.epoch
+        np.testing.assert_array_equal(np.asarray(m.response.doc_ids),
+                                      np.asarray(q.response.doc_ids))
+        np.testing.assert_allclose(np.asarray(m.response.scores),
+                                   np.asarray(q.response.scores),
+                                   rtol=1e-5)
+
+
+def test_mesh_term_topology_parity():
+    tc = _corpus()
+    si = _seeded_index(tc)
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   topology="term_fused",
+                                   auto_handoff=False), mesh=MESH_1)
+    ms.delete_docs(np.arange(0, 30))
+    ms.handoff()
+    qh = _queries(si, 6, seed=7)
+    tickets = [ms.submit(q) for q in qh]
+    ms.pump(max_batches=4)
+    _assert_view_parity(ms, tickets)
+
+
+# ---------------------------------------------------------------------------
+# admission control + deadline shedding (thread-free, no sleeps)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_admission_and_deadline_shedding_deterministic():
+    tc = _corpus(num_docs=260)
+    si = _seeded_index(tc)
+    events_before = si.events.counts().get("shed", 0)
+    cfg = MeshConfig(batch_size=4, k=10, n_shards=1, max_queue=3,
+                     deadline_us=50_000.0, auto_handoff=False,
+                     trace_sample=1)
+    ms = MeshServer(si, cfg, mesh=MESH_1)
+    qh = _queries(si, 8, seed=13)
+    tickets = [ms.submit(q, tenant=f"t{i % 2}") for i, q in enumerate(qh)]
+
+    # admission: the queue holds 3, the other 5 resolve immediately
+    admitted = [t for t in tickets if not t.done()]
+    shed_now = [t for t in tickets if t.done()]
+    assert len(admitted) == 3 and len(shed_now) == 5
+    for t in shed_now:
+        r = t.result(timeout=0)           # already resolved — no wait
+        assert r.status == "shed" and not r.ok
+        assert np.all(np.asarray(r.doc_ids) == -1)
+        assert np.all(np.asarray(r.scores) == 0.0)
+        # the shed trace's stages sum exactly to its latency
+        sd = r.trace.stage_durations()
+        assert set(sd) == {"shed"}
+        assert abs(sum(sd.values()) - r.latency_us) < 1e-3
+
+    # deadline: age two queued tickets past the 50ms target — they
+    # shed at pickup, the remaining one serves
+    admitted[0].t_submit -= 1.0
+    admitted[1].t_submit -= 1.0
+    ms.pump(max_batches=2)
+    assert admitted[0].response.status == "shed"
+    assert admitted[1].response.status == "shed"
+    assert admitted[2].response.status == "ok"
+    sd = admitted[0].response.trace.stage_durations()
+    assert set(sd) == {"queue_wait", "shed"}
+    assert abs(sum(sd.values()) - admitted[0].response.latency_us) < 1e-3
+
+    counts = ms.shed_counts()
+    assert counts["admission"] == 5 and counts["deadline"] == 2
+    assert counts["total"] == 7
+    assert ms.shed_rate() == pytest.approx(7 / 8)
+    # ... and the events landed in the index EventLog, per kind
+    shed_events = ms.events(kind="shed")
+    assert len(shed_events) == 7
+    reasons = sorted(e["reason"] for e in shed_events)
+    assert reasons == ["admission"] * 5 + ["deadline"] * 2
+    assert si.events.counts()["shed"] == events_before + 7
+
+
+def test_mesh_stop_and_queryserver_stop_resolve_queued_tickets():
+    tc = _corpus(num_docs=260)
+    si = _seeded_index(tc)
+    # pump-mode QueryServer: stop() must resolve, not strand, the queue
+    qs = QueryServer(restore_segmented(serialize_segmented(si)),
+                     ServerConfig(batch_size=4, k=10))
+    t1 = qs.submit(_queries(si, 1, seed=2)[0])
+    qs.stop()
+    r = t1.result(timeout=0.1)            # resolves without blocking
+    assert r.status == "shutdown" and not r.ok
+    assert np.all(np.asarray(r.doc_ids) == -1)
+    assert qs.registry.counter("serve_shutdown_unserved").value == 1
+
+    # mesh: shutdown leftovers count and log as sheds
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   auto_handoff=False), mesh=MESH_1)
+    tickets = [ms.submit(q) for q in _queries(si, 3, seed=3)]
+    ms.stop()
+    for t in tickets:
+        assert t.result(timeout=0.1).status == "shutdown"
+    assert ms.shed_counts()["shutdown"] == 3
+    kinds = {e["reason"] for e in ms.events(kind="shed")}
+    assert kinds == {"shutdown"}
+
+    # threaded stop: the worker drains what it can, then nothing blocks
+    ms2 = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                    auto_handoff=False), mesh=MESH_1)
+    ms2.warmup()
+    ms2.start()
+    tickets = [ms2.submit(q) for q in _queries(si, 6, seed=4)]
+    ms2.stop()
+    for t in tickets:
+        assert t.result(timeout=5.0).status in ("ok", "shutdown")
+
+
+# ---------------------------------------------------------------------------
+# per-tenant result-cache partitions
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_cache_partitions_isolation_unit():
+    parts = TenantCachePartitions(capacity_per_tenant=2, max_tenants=2)
+    key = parts.make_key(np.asarray([1, 2], np.uint32), 10, 0)
+    ids, sc = np.asarray([5], np.int32), np.asarray([1.0], np.float32)
+    parts.put("a", key, ids, sc)
+    assert parts.get("b", key) is None          # no cross-tenant hits
+    assert parts.get("a", key) is not None
+    # a's burst cannot evict b's working set
+    parts.put("b", key, ids, sc)
+    for i in range(8):
+        parts.put("a", parts.make_key(np.asarray([i], np.uint32), 10, 0),
+                  ids, sc)
+    assert parts.get("b", key) is not None
+    assert len(parts.partition("a")) == 2       # a stayed LRU-bounded
+    # tenant directory is itself bounded: a third tenant evicts the LRU
+    parts.put("c", key, ids, sc)
+    assert parts.tenant_evictions == 1
+    assert len(parts.tenants) == 2
+    st = parts.per_tenant()
+    assert set(st) == set(parts.tenants)
+    assert parts.hits == 2 and parts.misses == 1
+
+
+def test_mesh_tenant_cache_partitions_end_to_end():
+    tc = _corpus(num_docs=260)
+    si = _seeded_index(tc)
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   auto_handoff=False), mesh=MESH_1)
+    q = _queries(si, 1, seed=21)[0]
+    a1 = ms.submit(q, tenant="a"); ms.pump()
+    a2 = ms.submit(q, tenant="a"); ms.pump()
+    b1 = ms.submit(q, tenant="b"); ms.pump()
+    assert not a1.response.cached
+    assert a2.response.cached                   # same tenant: warm
+    assert not b1.response.cached               # other tenant: isolated
+    np.testing.assert_array_equal(np.asarray(a2.response.doc_ids),
+                                  np.asarray(b1.response.doc_ids))
+    per = ms.cache.per_tenant()
+    assert per["a"]["hits"] == 1 and per["b"]["hits"] == 0
+    # epoch advance invalidates every partition
+    ms.add_batch(_slices(tc, [240, 260])[0])
+    ms.handoff()
+    a3 = ms.submit(q, tenant="a"); ms.pump()
+    assert not a3.response.cached
+    assert a3.response.epoch > a2.response.epoch
+
+
+# ---------------------------------------------------------------------------
+# handoff semantics + replicas
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_handoff_events_auto_handoff_and_trace_span():
+    tc = _corpus()
+    si = _seeded_index(tc)
+    cfg = MeshConfig(batch_size=4, k=10, n_shards=1, auto_handoff=True,
+                     handoff_min_interval_s=0.0, trace_sample=1)
+    ms = RecordingMesh(si, cfg, mesh=MESH_1)
+    ms.warmup()
+    e0 = ms.serving_epoch
+    handoffs0 = ms.registry.counter("mesh_handoffs").value
+    # a quiescent mesh never re-pins
+    t = ms.submit(_queries(si, 1, seed=31)[0]); ms.pump()
+    assert ms.serving_epoch == e0
+    assert ms.registry.counter("mesh_handoffs").value == handoffs0
+    # ingest advances the primary epoch -> the NEXT batch pays one
+    # handoff, visible as a top-level trace stage, then serves fresh
+    ms.add_batch(_slices(tc, [240, 300])[0])
+    t2 = ms.submit(_queries(si, 1, seed=32)[0]); ms.pump()
+    assert ms.serving_epoch > e0
+    assert t2.response.epoch == ms.serving_epoch
+    sd = t2.response.trace.stage_durations()
+    assert "handoff" in sd
+    assert abs(sum(sd.values()) - t2.response.latency_us) < 1e-3
+    _assert_view_parity(ms, [t, t2])
+    ev = ms.events(kind="handoff")
+    assert ev and ev[-1]["pause_us"] > 0
+    assert ev[-1]["epoch"] == ms.serving_epoch
+    assert ev[-1]["n_shards"] == 1
+    hist = ms.registry.histogram("mesh_handoff_pause_us").snapshot()
+    assert hist["count"] == ms.registry.counter("mesh_handoffs").value
+
+
+def test_mesh_replicas_stay_in_lockstep_and_divergence_is_caught():
+    tc = _corpus()
+    si = _seeded_index(tc)
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   n_replicas=3, auto_handoff=False),
+                    mesh=MESH_1)
+    ms.add_batch(_slices(tc, [240, 330])[0])
+    ms.delete_docs(np.arange(50, 70))
+    ms.run_maintenance_once()
+    ms.handoff()                                 # digests agree
+    assert len({r.digest() for r in ms.replicas}) == 1
+    tickets = [ms.submit(q) for q in _queries(si, 4, seed=41)]
+    ms.pump(max_batches=2)
+    _assert_view_parity(ms, tickets)
+    # an out-of-band write to one replica is caught at the next handoff
+    ms.replicas[1].index.delete(np.asarray([80]))
+    with pytest.raises(RuntimeError, match="diverged"):
+        ms.handoff()
+
+
+# ---------------------------------------------------------------------------
+# >= 4-shard subprocess parity (PR lane: not slow)
+# ---------------------------------------------------------------------------
+
+MESH_4SHARD_SCRIPT = r"""
+import numpy as np
+import jax
+from repro.core.build import TokenizedCorpus
+from repro.core import live_index as li
+from repro.core.live_index import SegmentedIndex
+from repro.distributed import retrieval
+from repro.serve import MeshConfig, MeshServer
+from repro.text import corpus
+
+mesh = jax.make_mesh((4,), ("shards",))
+tc = corpus.generate(corpus.CorpusSpec(num_docs=520, vocab=380,
+                                       avg_distinct=20, seed=1))
+
+def sl(a, b):
+    return TokenizedCorpus(tc.doc_term_ids[a:b], tc.doc_counts[a:b],
+                           tc.term_hashes, b - a)
+
+def run_schedule(seed):
+    rng = np.random.default_rng(seed)
+    si = SegmentedIndex(delta_doc_capacity=96)
+    si.add_batch(sl(0, 96)); si.seal()
+    si.add_batch(sl(96, 192)); si.seal()
+    si.add_batch(sl(192, 288)); si.seal()
+    si.add_batch(sl(288, 384)); si.seal()
+    cfg = MeshConfig(batch_size=4, k=10, n_shards=4,
+                     auto_handoff=False, trace_sample=4)
+    ms = MeshServer(si, cfg, mesh=mesh)
+    ms.warmup()
+    views, answered, nxt, live = {}, [], 384, set(range(384))
+    bounds = np.linspace(384, 520, 7).astype(int)
+    for step in range(6):
+        act = rng.integers(0, 3)
+        a, b = bounds[step], bounds[step + 1]
+        if act == 0 and b > a:
+            ms.add_batch(sl(a, b)); nxt += b - a
+            live.update(range(nxt - (b - a), nxt))
+        elif act == 1:
+            dead = rng.choice(sorted(live), size=6, replace=False)
+            ms.delete_docs(dead); live.difference_update(dead.tolist())
+        else:
+            ms.run_maintenance_once()          # seal/compact
+        if rng.integers(0, 2) == 1:
+            ms.handoff()
+        views[ms.serving_epoch] = ms.serving_view
+        qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                       4, 3, num_docs=si.num_docs,
+                                       seed=700 + step)
+        ts = [ms.submit(q) for q in qh]
+        ms.pump(max_batches=4)
+        answered.extend(ts)
+    by_epoch = {}
+    for t in answered:
+        assert t.response.status == "ok"
+        by_epoch.setdefault(t.response.epoch, []).append(t)
+    for epoch, group in by_epoch.items():
+        rows = np.stack([t.row for t in group])
+        ref = views[epoch].topk(rows, 10)
+        ids, sc = np.asarray(ref.doc_ids), np.asarray(ref.scores)
+        for i, t in enumerate(group):
+            np.testing.assert_array_equal(
+                np.asarray(t.response.doc_ids), ids[i])
+            np.testing.assert_allclose(
+                np.asarray(t.response.scores), sc[i], rtol=1e-5)
+    return ms
+
+run_schedule(7)
+print("MESH4_PARITY_OK")
+warm_stack = retrieval.stack_scorer_cache_sizes()
+warm_live = li.scorer_cache_sizes()
+ms = run_schedule(7)
+assert retrieval.stack_scorer_cache_sizes() == warm_stack, "stack jit grew"
+assert li.scorer_cache_sizes() == warm_live, "live jit grew"
+print("MESH4_ZERO_JIT_OK")
+assert ms.mesh_summary()["n_shards"] == 4
+assert ms.registry.counter("mesh_handoffs").value >= 1
+print("MESH4_SUMMARY_OK")
+"""
+
+
+def test_mesh_subprocess_parity_4shards():
+    """The acceptance criterion end to end: a 4-shard mesh under a
+    randomized add/delete/compact churn schedule answers bit-identically
+    to the single-host path at every pinned epoch, and a schedule
+    replay adds zero jit entries."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", MESH_4SHARD_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=520)
+    for marker in ("MESH4_PARITY_OK", "MESH4_ZERO_JIT_OK",
+                   "MESH4_SUMMARY_OK"):
+        assert marker in out.stdout, (marker, out.stderr[-3000:])

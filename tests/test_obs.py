@@ -255,10 +255,21 @@ def test_server_metrics_registry_backed_and_summary_complete():
 def test_server_metrics_summary_cache_arg_deprecated():
     cache = ResultCache(capacity=4)
     m = ServerMetrics(cache=cache)
+    other = ResultCache(capacity=4)
+    other.get(other.make_key(np.asarray([1], np.uint32), 10, 0))  # a miss
     with pytest.warns(DeprecationWarning):
-        s = m.summary(ResultCache(capacity=4))
-    # the attached cache wins over the passed one
+        s = m.summary(other)
+    # the parameter is inert: the attached cache is reported, the
+    # passed one's counters never leak into the summary
     assert s["cache_hits"] == cache.hits
+    assert s["cache_misses"] == cache.misses == 0
+
+    # a metrics object with NO attached cache: the deprecated argument
+    # still warns and still reports nothing (migration is attach_cache)
+    bare = ServerMetrics()
+    with pytest.warns(DeprecationWarning):
+        s2 = bare.summary(other)
+    assert "cache_hits" not in s2
 
 
 # ---------------------------------------------------------------------------
