@@ -146,6 +146,29 @@ def _layout_report(si: SegmentedIndex) -> dict:
             per_packed = int(seg.index.packed.shape[1]) * 4 + block * 2 + 12
             per_hor = block * 8 + 8
             rec["block_bytes_vs_hor"] = round(per_packed / per_hor, 3)
+        elif seg.layout == "banded":
+            # same per-routed-block roofline, but PER BAND: the packed
+            # band's stride is band-local (the dense-body shape), so
+            # its ratio can fall well below the monolithic-packed
+            # floor; the HOR tail streams HOR blocks by construction
+            ix = seg.index
+            block = int(ix.packed.block_tfs.shape[1])
+            per_hor = block * 8 + 8
+            per_packed = int(ix.packed.packed.shape[1]) * 4 + block * 2 + 12
+            rec["band_cut"] = int(seg.band_cut)
+            rec["bands"] = {
+                "packed": {
+                    "terms": int(np.count_nonzero(
+                        np.asarray(ix.packed.df))),
+                    "posting_bytes": int(ix.packed.posting_bytes()),
+                    "block_bytes_vs_hor": round(per_packed / per_hor, 3),
+                },
+                "hor": {
+                    "terms": int(np.count_nonzero(np.asarray(ix.hor.df))),
+                    "posting_bytes": int(ix.hor.posting_bytes()),
+                    "block_bytes_vs_hor": 1.0,
+                },
+            }
         segs.append(rec)
     return {"counts": mix["counts"], "docs": mix["docs"],
             "postings": mix["postings"], "reasons": mix["reasons"],
@@ -305,11 +328,15 @@ def run_tier(tier: str, *, out_dir: str | None = None, k: int = 10,
     mix = results["layout_mix"]
     packed_ratios = [s["bytes_vs_hor"] for s in mix["segments"]
                      if s["layout"] == "packed"]
+    band_ratios = [s["bands"]["packed"]["block_bytes_vs_hor"]
+                   for s in mix["segments"] if s["layout"] == "banded"]
     common.emit(
         f"campaign/{tier}/layout_mix", 0.0,
         f"counts={mix['counts']};"
         f"max_packed_bytes_vs_hor="
-        f"{max(packed_ratios) if packed_ratios else 'n/a'}")
+        f"{max(packed_ratios) if packed_ratios else 'n/a'};"
+        f"max_banded_block_bytes_vs_hor="
+        f"{max(band_ratios) if band_ratios else 'n/a'}")
     if do_autotune:
         tune = run_autotune(si, tier, k=k)
         results["autotune"] = tune

@@ -153,6 +153,64 @@ def check_mesh_section(results: dict) -> list[str]:
     return problems
 
 
+def check_banded_section(results: dict) -> list[str]:
+    """Validate the banded layout section (``results.layout_mix.banded``,
+    written by ``common.smoke_layout_mix``): the per-band byte
+    accounting must be internally consistent (band totals sum to the
+    segment total), the HOR tail prices at exactly the HOR rate, and
+    the banded build must actually compress below the HOR roofline on
+    the smoke corpus — a ratio drifting to >= 1.0 means the band cut
+    chooser or the packed-band builder regressed.  Additive within
+    repro-bench/3: artifacts written before banding simply lack the
+    key and stay valid."""
+    problems: list[str] = []
+    mix = results.get("layout_mix")
+    if not isinstance(mix, dict):
+        return []
+    banded = mix.get("banded")
+    if banded is None:
+        return []
+    if not isinstance(banded, dict):
+        return [f"layout_mix.banded is not a dict "
+                f"({type(banded).__name__})"]
+    for field in ("band_cut", "packed_words_per_block", "posting_bytes",
+                  "hor_posting_bytes"):
+        v = banded.get(field)
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            problems.append(f"banded.{field} {v!r} is not a "
+                            "non-negative int")
+    ratio = banded.get("bytes_vs_hor")
+    if not _numeric(ratio) or not 0.0 < ratio < 1.0:
+        problems.append(f"banded.bytes_vs_hor {ratio!r} is not in (0, 1) "
+                        "— the banded build stopped compressing")
+    bands = banded.get("bands")
+    if not isinstance(bands, dict) or set(bands) != {"packed", "hor"}:
+        problems.append(f"banded.bands missing or malformed: {bands!r}")
+        return problems
+    for name, band in sorted(bands.items()):
+        if not isinstance(band, dict) \
+                or not isinstance(band.get("terms"), int) \
+                or not isinstance(band.get("posting_bytes"), int) \
+                or not _numeric(band.get("bytes_vs_hor")):
+            problems.append(f"banded.bands[{name!r}] is not a well-formed "
+                            f"band summary: {band!r}")
+            return problems
+    total = bands["packed"]["posting_bytes"] + bands["hor"]["posting_bytes"]
+    if isinstance(banded.get("posting_bytes"), int) \
+            and banded["posting_bytes"] != total:
+        problems.append(f"banded.posting_bytes {banded['posting_bytes']} "
+                        f"!= sum of band posting bytes {total}")
+    if bands["hor"]["bytes_vs_hor"] != 1.0:
+        problems.append(f"banded HOR tail bytes_vs_hor "
+                        f"{bands['hor']['bytes_vs_hor']!r} != 1.0 — the "
+                        "tail IS hor by construction")
+    p_ratio = bands["packed"]["bytes_vs_hor"]
+    if not 0.0 < p_ratio < 1.0:
+        problems.append(f"banded packed band bytes_vs_hor {p_ratio!r} is "
+                        "not in (0, 1) — band-local stride regressed")
+    return problems
+
+
 def check(current_path: str, baseline_path: str,
           factor: float = 2.0) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
@@ -165,6 +223,7 @@ def check(current_path: str, baseline_path: str,
     if current.get("schema") == "repro-bench/3":
         problems.extend(check_registry_section(current.get("results", {})))
         problems.extend(check_mesh_section(current.get("results", {})))
+        problems.extend(check_banded_section(current.get("results", {})))
         if problems:
             return problems
     cb, bb = (current["env"].get("backend"), baseline["env"].get("backend"))

@@ -212,9 +212,41 @@ def smoke_layout_mix() -> dict:
     pre = si.layout_mix()
     si.compact(all_segments=True)
     post = si.layout_mix()
+
+    # deliberate banded build over the same corpus: per-band posting
+    # bytes against the exact HOR roofline (additive repro-bench/3
+    # field; benchmarks.check_regression validates it when present)
+    from repro.core import layouts
+    bix = layouts.build_banded(_h)
+    hor_exact = size_model.hor_posting_bytes_from_df(np.asarray(_h.df))
+    words, nblocks = layouts.term_packed_words(_h)
+    cut, _bytes = size_model.choose_band_cut(words, nblocks)
+    banded = {
+        "band_cut": int(cut),
+        "packed_words_per_block": int(bix.packed.words_per_block),
+        "posting_bytes": int(bix.posting_bytes()),
+        "hor_posting_bytes": int(hor_exact),
+        "bytes_vs_hor": round(bix.posting_bytes() / max(hor_exact, 1), 3),
+        "bands": {
+            "packed": {
+                "terms": int(np.count_nonzero(np.asarray(bix.packed.df))),
+                "posting_bytes": int(bix.packed.posting_bytes()),
+                "bytes_vs_hor": round(
+                    int(bix.packed.posting_bytes())
+                    / max(size_model.hor_posting_bytes_from_df(
+                        np.asarray(bix.packed.df)), 1), 3),
+            },
+            "hor": {
+                "terms": int(np.count_nonzero(np.asarray(bix.hor.df))),
+                "posting_bytes": int(bix.hor.posting_bytes()),
+                "bytes_vs_hor": 1.0,
+            },
+        },
+    }
     return {"sealed": {"counts": pre["counts"], "reasons": pre["reasons"]},
             "compacted": {"counts": post["counts"],
-                          "reasons": post["reasons"]}}
+                          "reasons": post["reasons"]},
+            "banded": banded}
 
 
 def smoke_observability(n_requests: int = 48) -> dict:

@@ -27,6 +27,7 @@ def main() -> None:
         "cor": layouts.build_compact_csr,
         "hor": layouts.build_blocked,
         "packed": layouts.build_packed_csr,
+        "banded": layouts.build_banded,
     }
     pr_bytes = None
     for name, bld in builders.items():
@@ -52,6 +53,16 @@ def main() -> None:
     emit("table5/predict/hor_exact", 0.0,
          f"measured={hor_meas};predicted={hor_exact};"
          f"rel_err={(hor_exact - hor_meas) / hor_meas:+.3f}")
+
+    # ... and the exact-width banded formula: the per-term packed
+    # widths drive both the cut choice and the byte count, so predicted
+    # must equal the built arrays to the byte (rel_err +0.000)
+    words, nblocks = layouts.term_packed_words(host)
+    cut, banded_exact = sm.choose_band_cut(words, nblocks)
+    banded_meas = layouts.build_banded(host).posting_bytes()
+    emit("table5/predict/banded_exact", 0.0,
+         f"measured={banded_meas};predicted={banded_exact};cut={cut};"
+         f"rel_err={(banded_exact - banded_meas) / banded_meas:+.3f}")
 
     # the bulk sort itself (the §3.6 COPY path)
     us = time_host(lambda: build.bulk_build(tc), reps=1)

@@ -937,10 +937,195 @@ def build_packed_csr(h: PostingsHost, max_bits: int = 32,
     )
 
 
+# ---------------------------------------------------------------------------
+# (beyond paper) BandedCsrIndex — per-term-band layout choice
+# ---------------------------------------------------------------------------
+
+
+def term_packed_words(h: PostingsHost, block: int = BLOCK,
+                      max_bits: int = 32
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-term packed width: the int32 words the WIDEST block of each
+    term would occupy under ``build_packed_csr``'s delta+bit-packing,
+    plus the term's block count.  Returned in ``h``'s original term
+    order (i64[W], i64[W]); terms with no postings get width 0.
+
+    This is the byte model's view of the uniform-stride problem: a
+    monolithic ``PackedCsrIndex`` stores every block at
+    ``max(words)`` — one rare term with 16-bit deltas inflates the
+    stride of every dense term in the segment.  ``build_banded`` uses
+    these widths to cut the vocabulary into a packed band (width <=
+    cut) and an HOR tail.
+
+    The widths replicate the builder exactly: per-block max delta
+    (first delta of a block is taken against the previous block's last
+    doc id, ``-1`` at term start), bit width via the float exponent
+    (``np.frexp`` — exact ``int.bit_length`` for integers below 2**53,
+    unlike a log2-plus-epsilon nudge which misrounds near 2**31),
+    clipped to [1, max_bits], then ``(block*bits + 31) // 32`` words.
+    """
+    W = h.num_terms
+    lengths = np.diff(h.offsets).astype(np.int64)
+    has = lengths > 0
+    nblocks = np.maximum(-(-lengths // block), has.astype(np.int64))
+    words = np.zeros(W, dtype=np.int64)
+    P = h.num_postings
+    if P == 0 or W == 0:
+        return words, nblocks
+    docs = h.doc_ids.astype(np.int64)
+    prev = np.empty(P, dtype=np.int64)
+    prev[1:] = docs[:-1]
+    prev[h.offsets[:-1][has]] = -1          # term starts restart the delta
+    deltas = docs - prev
+    block_offsets = np.zeros(W + 1, dtype=np.int64)
+    np.cumsum(nblocks, out=block_offsets[1:])
+    NB = int(block_offsets[-1])
+    # posting-array position where each block starts: term slab start +
+    # within-term block index * block
+    bstart = (np.repeat(h.offsets[:-1][has], nblocks[has]).astype(np.int64)
+              + (np.arange(NB, dtype=np.int64)
+                 - np.repeat(block_offsets[:-1][has], nblocks[has])) * block)
+    bmax = np.maximum.reduceat(deltas, bstart)
+    # exact bit_length via the frexp exponent (x = m * 2**e, 0.5<=m<1)
+    _, exp = np.frexp(np.maximum(bmax, 1).astype(np.float64))
+    bits = np.clip(exp.astype(np.int64), 1, max_bits)
+    w_blk = (block * bits + 31) // 32
+    term_of_block = np.repeat(np.arange(W, dtype=np.int64), nblocks)
+    np.maximum.at(words, term_of_block, w_blk)
+    return words, nblocks
+
+
+@dataclasses.dataclass(frozen=True)
+class BandedCsrIndex:
+    """Per-term-band sealed segment: packed band + HOR tail.
+
+    Terms whose widest packed block fits in ``<= cut`` int32 words go
+    into a ``PackedCsrIndex`` with a BAND-LOCAL ``words_per_block``
+    (the dense, high-df shape packing wants); the rest — the
+    decode-bound df≈1 tail whose 16+-bit deltas would inflate the
+    uniform stride — stay in a ``BlockedIndex``.  Both bands are
+    FULL-vocabulary sub-indexes over the SAME doc space (a term's
+    postings live in exactly one band; the other band holds an empty
+    block range for it), share one ``DocTable``, and share the
+    ``sorted_hash`` buffer — one term lookup serves both bands, and a
+    query's score is the sum of the two band partials.
+
+    The band cut itself is HOST metadata (``Segment.band_cut``), not a
+    pytree static: it varies per segment, and a non-quantized static
+    here would defeat the per-(size_class, layout) scorer memoization.
+    """
+    _static_fields = ()
+    packed: PackedCsrIndex
+    hor: BlockedIndex
+
+    @property
+    def docs(self) -> DocTable:
+        return self.packed.docs
+
+    @property
+    def sorted_hash(self) -> Array:
+        return self.packed.sorted_hash
+
+    @property
+    def df(self) -> Array:
+        return self.packed.df + self.hor.df
+
+    @property
+    def num_terms(self) -> int:
+        return self.packed.num_terms
+
+    @property
+    def block(self) -> int:
+        return self.packed.block
+
+    @property
+    def route_tile(self) -> int:
+        return self.packed.route_tile
+
+    @property
+    def max_posting_len(self) -> int:
+        return max(self.packed.max_posting_len, self.hor.max_posting_len)
+
+    def lookup_terms(self, hashes: Array) -> Array:
+        return self.packed.lookup_terms(hashes)
+
+    def term_df(self, term_ids: Array) -> Array:
+        return self.packed.term_df(term_ids) + self.hor.term_df(term_ids)
+
+    def gather_postings(self, term_ids: Array, cap: int
+                        ) -> Tuple[Array, Array, Array]:
+        # a term's postings live in exactly one band; the other band
+        # yields inert fill (-1 / 0.0 / False), so the merge is a
+        # lane-wise max / sum / or
+        dp, tp, vp = self.packed.gather_postings(term_ids, cap)
+        dh, th, vh = self.hor.gather_postings(term_ids, cap)
+        return jnp.maximum(dp, dh), tp + th, vp | vh
+
+    def nbytes(self) -> int:
+        # the DocTable is shared between the bands — count it once
+        return (self.packed.nbytes() + self.hor.nbytes()
+                - self.docs.nbytes())
+
+    def posting_bytes(self) -> int:
+        return int(self.packed.posting_bytes() + self.hor.posting_bytes())
+
+
+_register(BandedCsrIndex)
+
+
+def _band_host(h: PostingsHost, keep: np.ndarray) -> PostingsHost:
+    """Full-vocabulary sub-host: terms outside ``keep`` stay in the
+    vocabulary with df 0 and an empty posting slab, so both bands'
+    hash-sorted term ids stay aligned."""
+    lengths = np.diff(h.offsets).astype(np.int64)
+    kept = np.where(keep, lengths, 0)
+    offsets = np.zeros(h.num_terms + 1, dtype=np.int64)
+    np.cumsum(kept, out=offsets[1:])
+    mask = np.repeat(keep, lengths)
+    return PostingsHost(
+        term_hashes=h.term_hashes,
+        df=np.where(keep, h.df, 0).astype(h.df.dtype),
+        offsets=offsets,
+        doc_ids=h.doc_ids[mask],
+        tfs=h.tfs[mask],
+        num_docs=h.num_docs,
+        norm=h.norm,
+        rank=h.rank,
+    )
+
+
+def build_banded(h: PostingsHost, max_band_words: int | None = None,
+                 block: int = BLOCK, route_tile: int = ROUTE_TILE,
+                 lane_quantum: int = 1) -> BandedCsrIndex:
+    """Build a banded segment.  ``max_band_words`` (the band cut, in
+    int32 words) defaults to the byte-model optimum from
+    ``size_model.choose_band_cut``; pass the recorded cut explicitly to
+    reproduce a build bitwise (snapshot restore).  ``lane_quantum``
+    lets the seal path price the cut at the packed lane-dim quantum it
+    will pad to (8), so the chooser sees seal-time bytes."""
+    words, nblocks = term_packed_words(h, block=block)
+    if max_band_words is None:
+        from repro.core import size_model
+        cut, _ = size_model.choose_band_cut(words, nblocks, block=block,
+                                            lane_quantum=lane_quantum)
+    else:
+        cut = int(max_band_words)
+    in_packed = (words > 0) & (words <= cut)
+    packed = build_packed_csr(_band_host(h, in_packed), block=block,
+                              route_tile=route_tile)
+    hor = build_blocked(_band_host(h, ~in_packed), block=block,
+                        route_tile=route_tile)
+    # share the DocTable and the (identical-content) sorted_hash buffer
+    hor = dataclasses.replace(hor, docs=packed.docs,
+                              sorted_hash=packed.sorted_hash)
+    return BandedCsrIndex(packed=packed, hor=hor)
+
+
 REPRESENTATIONS = {
     "pr": build_coo,            # Plain-Relational
     "or": build_csr,            # Object-Relational
     "cor": build_compact_csr,   # Compact Object-Relational
     "hor": build_blocked,       # HStore Object-Relational
     "packed": build_packed_csr,  # beyond-paper
+    "banded": build_banded,      # beyond-paper: per-term-band choice
 }

@@ -307,7 +307,8 @@ class Segment:
     (global id = local + doc_base); the host arrays are the (doc, term)-
     sorted forward canonical used for norm refresh, per-doc delete
     lookups, and compaction merges."""
-    index: layouts.BlockedIndex | layouts.PackedCsrIndex
+    index: (layouts.BlockedIndex | layouts.PackedCsrIndex
+            | layouts.BandedCsrIndex)
     doc_base: int
     doc_span: int              # allocated local id range (may have holes)
     doc_of: np.ndarray         # i32[P] local doc ids, doc-major
@@ -318,13 +319,17 @@ class Segment:
     size_class: int = 0        # padded doc-span class the build used
     num_terms: int = 0         # distinct terms with postings in this run
     chooser_reason: str = "default"  # how the layout ladder resolved
+    band_cut: int = 0          # banded only: packed-band width cut (words)
 
     @property
     def layout(self) -> str:
-        """The sealed layout this segment was built with — ``"hor"`` or
-        ``"packed"``.  Snapshots record it per segment so a mixed-layout
-        stack restores each segment in its ORIGINAL layout (bitwise
-        round-trip), and the sharded stack groups on it."""
+        """The sealed layout this segment was built with — ``"hor"``,
+        ``"packed"``, or ``"banded"``.  Snapshots record it per segment
+        so a mixed-layout stack restores each segment in its ORIGINAL
+        layout (bitwise round-trip), and the sharded stack groups on
+        it."""
+        if isinstance(self.index, layouts.BandedCsrIndex):
+            return "banded"
         return ("packed" if isinstance(self.index, layouts.PackedCsrIndex)
                 else "hor")
 
@@ -344,11 +349,14 @@ def _layout_mix(segments) -> dict:
            "reasons": {}}
     for seg in segments:
         lay = seg.layout
-        mix["segments"].append({
+        rec = {
             "doc_base": int(seg.doc_base), "doc_span": int(seg.doc_span),
             "size_class": int(seg.size_class), "layout": lay,
             "n_postings": int(seg.n_postings),
-            "chooser_reason": seg.chooser_reason})
+            "chooser_reason": seg.chooser_reason}
+        if lay == "banded":
+            rec["band_cut"] = int(seg.band_cut)
+        mix["segments"].append(rec)
         mix["counts"][lay] = mix["counts"].get(lay, 0) + 1
         mix["docs"][lay] = mix["docs"].get(lay, 0) + int(seg.doc_span)
         mix["postings"][lay] = (mix["postings"].get(lay, 0)
@@ -458,8 +466,13 @@ class LiveView:
             cfg = (tune if tune is not None else autotune.lookup(
                 backend, int(seg.index.docs.num_docs), seg.layout))
             seg_kt = cfg.resolve_k_tile(k)
-            mp = ops.padded_pairs_budget(seg.index, cfg.tile,
-                                         cfg.pairs_per_step)
+            if seg.layout == "banded":
+                mp_p, mp_h = ops.banded_pairs_budgets(
+                    seg.index, cfg.tile, cfg.pairs_per_step)
+                mp = mp_p + mp_h
+            else:
+                mp = ops.padded_pairs_budget(seg.index, cfg.tile,
+                                             cfg.pairs_per_step)
             c = int(cap) if cap is not None else seg.index.max_posting_len
             b = jnp.asarray(np.int32(seg.doc_base))
             span = None
@@ -475,11 +488,26 @@ class LiveView:
                         int(seg.index.docs.num_docs), int(cfg.tile),
                         int(seg_kt)),
                     posting_bytes=size_model.est_posting_bytes(
-                        seg.stats, seg.layout))
+                        seg.stats, seg.layout),
+                    **({"band_cut": int(seg.band_cut)}
+                       if seg.layout == "banded" else {}))
             if engine == "jnp":
                 v, g, o = ops.jnp_segment_topk(
                     seg.index, qh_dev, idf_w, b, k_tile=k_tile, cap=c,
                     rank_blend=rank_blend)
+            elif seg.layout == "banded":
+                # one fused dense launch per band, partials summed in
+                # the engine; both "candidates" and "dense" modes route
+                # here (a per-band candidate top-k cannot merge — scores
+                # are additive over terms, not max-mergeable)
+                v, g, o = ops.fused_segment_banded_topk(
+                    seg.index, qh_dev, idf_w, b, k_tile=seg_kt,
+                    cap_packed=min(c, max(
+                        seg.index.packed.max_posting_len, 1)),
+                    cap_hor=min(c, max(seg.index.hor.max_posting_len, 1)),
+                    max_pairs_packed=mp_p, max_pairs_hor=mp_h,
+                    rank_blend=rank_blend, tile=cfg.tile,
+                    backend=backend, q_pad=cfg.q_pad)
             elif mode == "dense":
                 v, g, o = ops.fused_segment_dense_topk(
                     seg.index, qh_dev, idf_w, b, k_tile=seg_kt, cap=c,
@@ -625,8 +653,9 @@ class SegmentedIndex:
                  delta_posting_capacity: int | None = None,
                  policy: compaction.TieredPolicy | None = None,
                  rank_seed: int = 7, seal_layout: str = "hor",
-                 layout_policy: size_model.LayoutCostModel | None = None):
-        if seal_layout not in ("hor", "packed"):
+                 layout_policy: size_model.LayoutCostModel | None = None,
+                 event_capacity: int = 256):
+        if seal_layout not in ("hor", "packed", "banded"):
             raise ValueError(f"unknown seal layout: {seal_layout!r}")
         self._hashes = (np.asarray(term_hashes, np.uint32).copy()
                         if term_hashes is not None
@@ -652,8 +681,12 @@ class SegmentedIndex:
         self._view: LiveView | None = None
         self.stats = LiveIndexStats()
         # bounded structured ring of maintenance events (seal/compact/
-        # rewrite/ingest/delete/...), queryable from the serving tier
-        self.events = EventLog(capacity=256)
+        # rewrite/ingest/delete/...), queryable from the serving tier;
+        # the capacity is caller-sized (ServerConfig/MeshConfig plumb it
+        # through) — event-heavy maintenance (banded rewrites emit one
+        # event per band decision) must not silently evict the seal/
+        # compact provenance the serving tier reads
+        self.events = EventLog(capacity=int(event_capacity))
 
     # -- introspection ------------------------------------------------------
 
@@ -894,6 +927,7 @@ class SegmentedIndex:
             "seal", epoch=self._epoch, doc_base=seg.doc_base,
             docs=seg.doc_span, postings=seg.n_postings,
             size_class=seg.size_class, layout=seg.layout,
+            band_cut=seg.band_cut,
             chooser_reason=seg.chooser_reason, direct=True,
             duration_us=(time.perf_counter() - t0) * 1e6)
 
@@ -986,12 +1020,14 @@ class SegmentedIndex:
             "seal", epoch=self._epoch, doc_base=seg.doc_base,
             docs=seg.doc_span, postings=seg.n_postings,
             size_class=seg.size_class, layout=seg.layout,
+            band_cut=seg.band_cut,
             chooser_reason=seg.chooser_reason,
             duration_us=(time.perf_counter() - t0) * 1e6)
 
     def _build_segment(self, base: int, span: int, doc_of: np.ndarray,
                        terms: np.ndarray, tfs: np.ndarray,
-                       layout: str | None = None) -> Segment:
+                       layout: str | None = None,
+                       band_cut: int | None = None) -> Segment:
         """Bulk-build one sealed segment over LOCAL doc ids and pad it to
         its size class.  ``doc_of``/``terms``/``tfs`` must be (doc,
         term)-sorted.
@@ -1014,7 +1050,7 @@ class SegmentedIndex:
         layout, reason = size_model.resolve_layout(
             layout, self._layout_policy, run_stats, self._seal_layout,
             size_class=d_pad)
-        if layout not in ("hor", "packed"):
+        if layout not in ("hor", "packed", "banded"):
             raise ValueError(f"unknown seal layout: {layout!r}")
         # seal/compaction emit segments already tuned for their size
         # class: the routing cache is built at the tile width the active
@@ -1032,7 +1068,47 @@ class SegmentedIndex:
             offsets=offsets, doc_ids=doc_of[order].astype(np.int32),
             tfs=tfs[order].astype(np.float32), num_docs=d_pad,
             norm=norm_pad, rank=rank_pad)
-        if layout == "packed":
+        cut = 0
+        if layout == "banded":
+            # band cut: explicit (snapshot restore reproduces the build
+            # bitwise) or byte-model-chosen; lane_quantum=8 prices the
+            # cut at the packed lane-dim padding applied just below
+            bix = layouts.build_banded(host, max_band_words=band_cut,
+                                       route_tile=route_tile,
+                                       lane_quantum=8)
+            # record the REALIZED pre-pad packed stride as the cut: no
+            # term has a width in (realized max, chooser threshold], so
+            # rebuilding with it reproduces the same band split — the
+            # post-pad stride (multiple of 8) would NOT (it could admit
+            # wider terms on restore)
+            cut = int(bix.packed.words_per_block)
+            p = bix.packed
+            p = layouts.pad_packed_to_class(
+                p,
+                nb_pad=layouts.size_class(int(p.packed.shape[0])),
+                w_pad=layouts.size_class(w, base=256),
+                max_posting_len=layouts.size_class(p.max_posting_len),
+                words_per_block=-(-p.words_per_block // 8) * 8,
+                route_pairs_max=layouts.size_class(p.route_pairs_max),
+                route_span_max=layouts.size_class(p.route_span_max,
+                                                  base=8))
+            hx = bix.hor
+            mpl_q = layouts.size_class(hx.max_posting_len)
+            hx = layouts.pad_blocked_to_class(
+                hx,
+                nb_pad=layouts.size_class(int(hx.block_docs.shape[0])),
+                w_pad=layouts.size_class(w, base=256),
+                max_posting_len=mpl_q,
+                max_blocks_per_term=mpl_q // layouts.BLOCK,
+                route_pairs_max=layouts.size_class(hx.route_pairs_max),
+                route_span_max=layouts.size_class(hx.route_span_max,
+                                                  base=8))
+            # padding rebuilt per-band arrays; re-share the DocTable and
+            # the (identical-content) vocabulary buffer across bands
+            hx = dataclasses.replace(hx, docs=p.docs,
+                                     sorted_hash=p.sorted_hash)
+            ix = layouts.BandedCsrIndex(packed=p, hor=hx)
+        elif layout == "packed":
             ix = layouts.build_packed_csr(host, route_tile=route_tile)
             ix = layouts.pad_packed_to_class(
                 ix,
@@ -1070,7 +1146,7 @@ class SegmentedIndex:
                        tfs=tfs.astype(np.float32),
                        doc_offsets=doc_offsets, n_postings=len(terms),
                        size_class=int(d_pad), num_terms=n_terms_seg,
-                       chooser_reason=reason)
+                       chooser_reason=reason, band_cut=cut)
 
     def compact(self, all_segments: bool = False) -> bool:
         """Merge a policy-picked run of adjacent segments into one,
@@ -1122,6 +1198,7 @@ class SegmentedIndex:
             doc_base=seg.doc_base, docs=seg.doc_span,
             postings_in=touched, postings_out=seg.n_postings,
             size_class=seg.size_class, layout=seg.layout,
+            band_cut=seg.band_cut,
             chooser_reason=seg.chooser_reason,
             duration_us=(time.perf_counter() - t0) * 1e6)
         return True
@@ -1169,7 +1246,8 @@ class SegmentedIndex:
             doc_base=new.doc_base, docs=new.doc_span,
             from_layout=seg.layout, layout=new.layout,
             postings_in=seg.n_postings, postings_out=new.n_postings,
-            size_class=new.size_class, chooser_reason=new.chooser_reason,
+            size_class=new.size_class, band_cut=new.band_cut,
+            chooser_reason=new.chooser_reason,
             duration_us=(time.perf_counter() - t0) * 1e6)
 
     # -- norms / doc metadata ----------------------------------------------
@@ -1217,10 +1295,15 @@ class SegmentedIndex:
         norm_pad = np.zeros(d_pad, np.float32)
         norm_pad[:seg.doc_span] = self._norm[
             seg.doc_base:seg.doc_base + seg.doc_span]
-        seg.index = dataclasses.replace(
-            seg.index,
-            docs=DocTable(norm=jnp.asarray(norm_pad),
-                          rank=seg.index.docs.rank))
+        docs = DocTable(norm=jnp.asarray(norm_pad),
+                        rank=seg.index.docs.rank)
+        if isinstance(seg.index, layouts.BandedCsrIndex):
+            # one DocTable object, shared by both bands (as at build)
+            seg.index = layouts.BandedCsrIndex(
+                packed=dataclasses.replace(seg.index.packed, docs=docs),
+                hor=dataclasses.replace(seg.index.hor, docs=docs))
+        else:
+            seg.index = dataclasses.replace(seg.index, docs=docs)
 
     def _delta_device(self) -> dict:
         if self._delta_dev is None or self._delta_dirty:
@@ -1308,7 +1391,8 @@ class SegmentedIndex:
         si.events.emit(
             "seal", epoch=si._epoch, doc_base=0, docs=seg.doc_span,
             postings=seg.n_postings, size_class=seg.size_class,
-            layout=seg.layout, chooser_reason=seg.chooser_reason,
+            layout=seg.layout, band_cut=seg.band_cut,
+            chooser_reason=seg.chooser_reason,
             via="from_host")
         return si
 

@@ -203,6 +203,78 @@ def est_packed_posting_bytes(stats: SegmentStats, block: int = _BLOCK,
     return int(offsets + nb * (block * per_slot + 12))
 
 
+def banded_posting_bytes_from_words(words, nblocks, cut: int,
+                                    block: int = _BLOCK,
+                                    lane_quantum: int = 1) -> int:
+    """EXACT posting-array bytes of an (unpadded) BandedCsrIndex built
+    with band cut ``cut`` from per-term packed widths ``words`` and
+    block counts ``nblocks`` (``layouts.term_packed_words``).  Terms
+    with ``0 < words <= cut`` land in the packed band, whose stride is
+    the band-local max width rounded up to ``lane_quantum`` (pass 8 to
+    price at the seal path's packed lane-dim padding); the rest pay the
+    HOR slot cost.  Both bands carry a full-vocabulary offsets array.
+    """
+    import numpy as np
+    words = np.asarray(words, dtype=np.int64)
+    nblocks = np.asarray(nblocks, dtype=np.int64)
+    offsets = 2 * (len(words) + 1) * 4
+    in_packed = (words > 0) & (words <= int(cut))
+    nb_p = int(nblocks[in_packed].sum())
+    nb_h = int(nblocks[(words > 0) & ~in_packed].sum())
+    if nb_p:
+        q = max(int(lane_quantum), 1)
+        stride = -(-int(words[in_packed].max()) // q) * q
+    else:
+        stride = 1
+    return (offsets
+            + nb_p * (4 * stride + _PACKED_TF_BYTES * block + 12)
+            + nb_h * (block * _HOR_SLOT_BYTES + 8))
+
+
+def choose_band_cut(words, nblocks, block: int = _BLOCK,
+                    lane_quantum: int = 1) -> tuple[int, int]:
+    """Pick the band cut (in int32 words) minimizing the exact banded
+    byte model over the realized per-term widths.  Candidates are 0
+    (everything HOR) plus each distinct realized width — the byte curve
+    only changes at those points, so the scan is exact and bounded by
+    the number of distinct widths (<= ~129 at block 128).  Ties break
+    toward the SMALLER cut (fewer terms paying the packed stride).
+    Returns ``(cut, posting_bytes_at_cut)``."""
+    import numpy as np
+    words = np.asarray(words, dtype=np.int64)
+    nblocks = np.asarray(nblocks, dtype=np.int64)
+    cands = [0] + sorted({int(w) for w in words[words > 0]})
+    best_cut, best_bytes = 0, None
+    for c in cands:
+        b = banded_posting_bytes_from_words(words, nblocks, c, block=block,
+                                            lane_quantum=lane_quantum)
+        if best_bytes is None or b < best_bytes:
+            best_cut, best_bytes = c, b
+    return best_cut, int(best_bytes)
+
+
+def est_banded_posting_bytes(stats: SegmentStats, block: int = _BLOCK) -> int:
+    """Analytic BandedCsrIndex posting bytes from aggregate stats.
+
+    Zipfian runs put roughly half the vocabulary in a df~1 tail; price
+    that tail as one HOR block per term and the remaining body at the
+    packed rate (whose delta bits now reflect the DENSE body shape, not
+    the tail), plus the second full-vocabulary offsets array the two
+    bands carry.  ``table5_size.py`` prints this estimator's relative
+    error next to the exact-width model."""
+    t_tail = min(stats.num_terms // 2, stats.num_postings)
+    body_terms = stats.num_terms - t_tail
+    body_postings = stats.num_postings - t_tail
+    extra_offsets = (stats.num_terms + 1) * 4
+    if body_terms <= 0 or body_postings <= 0:
+        return est_hor_posting_bytes(stats, block) + extra_offsets
+    body = SegmentStats(num_docs=stats.num_docs,
+                        num_postings=body_postings, num_terms=body_terms)
+    tail_bytes = t_tail * (block * _HOR_SLOT_BYTES + 8)
+    return int(est_packed_posting_bytes(body, block) + tail_bytes
+               + extra_offsets)
+
+
 def est_posting_bytes(stats: SegmentStats, layout: str,
                       block: int = _BLOCK) -> int:
     """Analytic posting-array bytes for any registered layout — the
@@ -221,6 +293,8 @@ def est_posting_bytes(stats: SegmentStats, layout: str,
         return est_hor_posting_bytes(stats, block)
     if layout == "packed":
         return est_packed_posting_bytes(stats, block)
+    if layout == "banded":
+        return est_banded_posting_bytes(stats, block)
     raise ValueError(f"unknown layout {layout!r}")
 
 
@@ -260,6 +334,8 @@ class LayoutCostModel:
                                 layout: str) -> int:
         if layout == "packed":
             return est_packed_posting_bytes(stats)
+        if layout == "banded":
+            return est_banded_posting_bytes(stats)
         return est_hor_posting_bytes(stats)
 
     def measured_cost_s(self, backend: str, size_class: int,
@@ -287,18 +363,42 @@ class LayoutCostModel:
             return LayoutDecision(best, (
                 f"measured:{backend}@{size_class} "
                 + " ".join(f"{l}={costs[l]:.2e}s" for l in self.candidates)))
+        d = self._analytic_choose(stats, size_class)
+        measured = [l for l in self.candidates if costs[l] is not None]
+        if measured:
+            # a PARTIAL sweep (some but not all candidates timed) must
+            # not masquerade as a measurement: the decision below came
+            # from the byte model, and campaign reports read the reason
+            return LayoutDecision(d.layout, (
+                f"analytic:partial-measured({','.join(measured)}) "
+                + d.reason[len("analytic:"):]))
+        return d
+
+    def _analytic_choose(self, stats: SegmentStats,
+                         size_class: int) -> LayoutDecision:
+        """Byte-model rung, generalized over ``candidates``: the best
+        non-hor layout by predicted bytes must beat hor by the HBM
+        ratio or the run stays hor.  With the historical default
+        candidates this emits character-identical reasons to the
+        original two-layout chooser."""
         if stats.num_docs < self.min_packed_docs:
             return LayoutDecision("hor", (
                 f"analytic:small-segment {stats.num_docs}"
                 f"<{self.min_packed_docs} docs (decode-bound)"))
+        non_hor = [l for l in self.candidates if l != "hor"]
+        if not non_hor:
+            return LayoutDecision("hor",
+                                  f"analytic:hor only candidate @{size_class}")
         hb = self.predicted_posting_bytes(stats, "hor")
-        pb = self.predicted_posting_bytes(stats, "packed")
-        ratio = pb / max(hb, 1)
+        nh_bytes = {l: self.predicted_posting_bytes(stats, l)
+                    for l in non_hor}
+        best = min(non_hor, key=lambda l: (nh_bytes[l], l))
+        ratio = nh_bytes[best] / max(hb, 1)
         if ratio <= self.hbm_ratio_max:
-            return LayoutDecision("packed", (
+            return LayoutDecision(best, (
                 f"analytic:bytes/q {ratio:.2f}x hor @{size_class}"))
         return LayoutDecision("hor", (
-            f"analytic:packed only {ratio:.2f}x hor @{size_class}"
+            f"analytic:{best} only {ratio:.2f}x hor @{size_class}"
             f" (>{self.hbm_ratio_max})"))
 
     def to_dict(self) -> dict:

@@ -539,6 +539,12 @@ def build_doc_sharded_fused(host: PostingsHost, n_shards: int, *,
         return build_doc_sharded_packed(host, n_shards, tile=tile), reason
     if layout == "hor":
         return build_doc_sharded_blocked(host, n_shards, tile=tile), reason
+    if layout == "banded":
+        raise ValueError(
+            "banded is not a bulk doc-sharded layout: banded segments "
+            "doc-shard through the segment-stack serving tier "
+            "(stack_segment_shards / make_doc_sharded_segment_scorer), "
+            "which carries both bands per group slot")
     raise ValueError(f"unknown layout: {layout!r}")
 
 
@@ -661,7 +667,7 @@ class StackGroupMeta:
     recompile-avoidance contract.  ``n_slots`` (the group's stack depth)
     is itself pow2-quantized so sealing one more same-class segment
     reuses the compiled scorer."""
-    layout: str              # "hor" | "packed"
+    layout: str              # "hor" | "packed" | "banded"
     w_pad: int               # vocab slots per segment (size class)
     nb_pad: int              # posting-block rows per segment
     d_pad: int               # padded local doc span
@@ -671,12 +677,32 @@ class StackGroupMeta:
     max_blocks_per_term: int
     route_span_max: int
     route_pairs_max: int
+    # banded only: the HOR band's statics ride alongside the packed
+    # band's (which reuse the fields above); 0 for hor/packed groups so
+    # pre-banded group keys are unchanged
+    hor_nb_pad: int = 0
+    hor_max_blocks_per_term: int = 0
+    hor_route_span_max: int = 0
+    hor_route_pairs_max: int = 0
 
 
 def _segment_group_key(ix) -> StackGroupMeta:
     """The (size_class, layout) bucket a sealed segment stacks into.
     ``n_slots`` is filled in later (it is a property of the stack, not
     of one segment)."""
+    if isinstance(ix, layouts.BandedCsrIndex):
+        p, h = ix.packed, ix.hor
+        return StackGroupMeta(
+            layout="banded", w_pad=int(p.sorted_hash.shape[0]),
+            nb_pad=int(p.packed.shape[0]), d_pad=int(p.docs.num_docs),
+            block=p.block, words_per_block=p.words_per_block, n_slots=0,
+            max_blocks_per_term=p.max_blocks_per_term,
+            route_span_max=p.route_span_max,
+            route_pairs_max=p.route_pairs_max,
+            hor_nb_pad=int(h.block_docs.shape[0]),
+            hor_max_blocks_per_term=h.max_blocks_per_term,
+            hor_route_span_max=h.route_span_max,
+            hor_route_pairs_max=h.route_pairs_max)
     if isinstance(ix, layouts.PackedCsrIndex):
         return StackGroupMeta(
             layout="packed", w_pad=int(ix.sorted_hash.shape[0]),
@@ -699,9 +725,16 @@ def _segment_group_key(ix) -> StackGroupMeta:
 def _group_array_names(layout: str) -> tuple:
     common = ("sorted_hash", "block_offsets", "tile_first", "tile_count",
               "norm", "doc_base")
+    packed = ("packed", "block_tfs", "block_bits", "block_base",
+              "block_count")
+    if layout == "banded":
+        # the un-prefixed block arrays are the packed band's (the vocab
+        # is shared — both bands carry the full hash-sorted vocabulary)
+        return common + packed + ("hor_block_offsets", "hor_block_docs",
+                                  "hor_block_tfs", "hor_tile_first",
+                                  "hor_tile_count")
     if layout == "packed":
-        return common + ("packed", "block_tfs", "block_bits", "block_base",
-                         "block_count")
+        return common + packed
     return common + ("block_docs", "block_tfs")
 
 
@@ -720,7 +753,7 @@ def _empty_group_arrays(meta: StackGroupMeta, n_shards: int) -> dict:
         "norm": np.zeros((S, G, meta.d_pad), np.float32),
         "doc_base": np.zeros((S, G), np.int32),
     }
-    if meta.layout == "packed":
+    if meta.layout in ("packed", "banded"):
         arrays.update({
             "packed": np.zeros((S, G, nb, meta.words_per_block), np.uint32),
             "block_tfs": np.zeros((S, G, nb, b), np.float16),
@@ -733,11 +766,28 @@ def _empty_group_arrays(meta: StackGroupMeta, n_shards: int) -> dict:
             "block_docs": np.full((S, G, nb, b), -1, np.int32),
             "block_tfs": np.zeros((S, G, nb, b), np.float32),
         })
+    if meta.layout == "banded":
+        hnb = meta.hor_nb_pad
+        arrays.update({
+            "hor_block_offsets": np.zeros((S, G, meta.w_pad + 1), np.int32),
+            "hor_block_docs": np.full((S, G, hnb, b), -1, np.int32),
+            "hor_block_tfs": np.zeros((S, G, hnb, b), np.float32),
+            "hor_tile_first": np.zeros((S, G, hnb), np.int32),
+            "hor_tile_count": np.zeros((S, G, hnb), np.int32),
+        })
     return arrays
 
 
 def _fill_group_slot(arrays: dict, s: int, g: int, seg) -> None:
     ix = seg.index
+    if isinstance(ix, layouts.BandedCsrIndex):
+        h = ix.hor
+        arrays["hor_block_offsets"][s, g] = np.asarray(h.block_offsets)
+        arrays["hor_block_docs"][s, g] = np.asarray(h.block_docs)
+        arrays["hor_block_tfs"][s, g] = np.asarray(h.block_tfs)
+        arrays["hor_tile_first"][s, g] = np.asarray(h.tile_first)
+        arrays["hor_tile_count"][s, g] = np.asarray(h.tile_count)
+        ix = ix.packed        # the un-prefixed arrays are the packed band
     arrays["sorted_hash"][s, g] = np.asarray(ix.sorted_hash)
     arrays["block_offsets"][s, g] = np.asarray(ix.block_offsets)
     arrays["tile_first"][s, g] = np.asarray(ix.tile_first)
@@ -885,7 +935,8 @@ def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
                                         local_candidate_merge)
     from repro.kernels import autotune
     from repro.kernels.fused_decode_score import (
-        build_batched_pairs, default_k_tile,
+        build_batched_pairs, default_k_tile, extract_tile_candidates,
+        fused_score_blocked_pallas, fused_score_packed_pallas,
         fused_topk_blocked_pallas, fused_topk_packed_pallas)
     from repro.kernels.ops import expand_block_candidates, round_up_pairs
 
@@ -927,6 +978,57 @@ def _build_stack_scorer(mesh: Mesh, axis: str, k: int, tile: int,
             n_tiles = max(-(-meta.d_pad // tile), 1)
             m_blocks = max(meta.max_blocks_per_term, 1)
             k_tile = _group_k_tile(cfg)
+            if meta.layout == "banded":
+                # per-band dense partials summed BEFORE extraction — a
+                # per-band candidate top-k cannot merge (scores are
+                # additive over terms), so the banded slot mirrors the
+                # single-host banded engine: one lookup, two fused dense
+                # launches, shared scoring tail, per-tile candidates
+                m_h = max(meta.hor_max_blocks_per_term, 1)
+                mp_p = max(min(meta.route_pairs_max,
+                               t * m_blocks * max(meta.route_span_max, 1)),
+                           8)
+                mp_h = max(min(meta.hor_route_pairs_max,
+                               t * m_h * max(meta.hor_route_span_max, 1)),
+                           8)
+                for g in range(meta.n_slots):
+                    pos = jnp.searchsorted(sq["sorted_hash"][g],
+                                           qh).astype(jnp.int32)
+                    pos = jnp.clip(pos, 0, sq["sorted_hash"].shape[1] - 1)
+                    hit = (sq["sorted_hash"][g][pos] == qh) & (qh != 0)
+                    tid = jnp.where(hit, pos, -1)
+                    cb, cv, cq, cw, _ = expand_block_candidates(
+                        sq["block_offsets"][g], tid[None], w[None],
+                        m_blocks, meta.block)
+                    pb, pt, pqw, pcap, _ovf = build_batched_pairs(
+                        cb, cv, cq, cw, sq["tile_first"][g],
+                        sq["tile_count"][g], n_tiles, 1, mp_p)
+                    pqw = jnp.pad(pqw, ((0, 0), (0, cfg.q_pad - 1)))
+                    acc = fused_score_packed_pallas(
+                        sq["packed"][g], sq["block_tfs"][g], pb, pt, pqw,
+                        pcap, sq["block_bits"][g][pb],
+                        sq["block_base"][g][pb], sq["block_count"][g][pb],
+                        meta.d_pad, meta.block, tile)[0]
+                    cb, cv, cq, cw, _ = expand_block_candidates(
+                        sq["hor_block_offsets"][g], tid[None], w[None],
+                        m_h, meta.block)
+                    pb, pt, pqw, pcap, _ovf = build_batched_pairs(
+                        cb, cv, cq, cw, sq["hor_tile_first"][g],
+                        sq["hor_tile_count"][g], n_tiles, 1, mp_h)
+                    pqw = jnp.pad(pqw, ((0, 0), (0, cfg.q_pad - 1)))
+                    acc = acc + fused_score_blocked_pallas(
+                        sq["hor_block_docs"][g], sq["hor_block_tfs"][g],
+                        pb, pt, pqw, pcap, meta.d_pad, tile)[0]
+                    nrm = sq["norm"][g]
+                    final = jnp.where(
+                        (nrm > 0) & (acc > 0),
+                        acc / (jnp.maximum(nrm, 1e-12) * qnorm), -jnp.inf)
+                    vals, ids = extract_tile_candidates(final[None], tile,
+                                                        k_tile)
+                    all_v.append(vals[0])
+                    all_i.append(jnp.where(ids[0] >= 0,
+                                           ids[0] + sq["doc_base"][g], -1))
+                continue
             pps = cfg.pairs_per_step
             qn = jnp.full((cfg.q_pad,), 1.0, jnp.float32).at[0].set(qnorm)
             max_pairs = max(min(meta.route_pairs_max,
@@ -1223,6 +1325,123 @@ def build_term_sharded_packed(host: PostingsHost, n_shards: int
     )
 
 
+@dataclasses.dataclass
+class BandedTermShardedIndex:
+    """Stacked per-vocab-shard BANDED arrays for the fused engine.
+
+    Each shard re-bands its hash range with the byte model
+    (``layouts.build_banded``): high-df terms pack into that shard's
+    packed band at a band-local word stride, the decode-bound tail
+    stays HOR.  Terms are whole, so every query term's postings live
+    entirely in ONE band of one shard — the scorer sums the two dense
+    band partials locally BEFORE the cross-shard psum, keeping the
+    term-sharding tax at one [D] reduction exactly like the
+    single-layout twins.  The un-prefixed block arrays are the packed
+    band's; the HOR band rides under ``hor_*``.
+    """
+    sorted_hash: np.ndarray        # u32[S, Wmax]  (padded with 0xFFFFFFFF)
+    df: np.ndarray                 # i32[S, Wmax]  global df (whole terms)
+    block_offsets: np.ndarray      # i32[S, Wmax+1]   packed band
+    packed: np.ndarray             # u32[S, NBmax, WPB]
+    block_tfs: np.ndarray          # f16[S, NBmax, BLOCK]
+    block_bits: np.ndarray         # i32[S, NBmax]  (1 on padding blocks)
+    block_base: np.ndarray         # i32[S, NBmax]
+    block_count: np.ndarray        # i32[S, NBmax]  (0 on padding blocks)
+    tile_first: np.ndarray         # i32[S, NBmax]
+    tile_count: np.ndarray         # i32[S, NBmax]
+    hor_block_offsets: np.ndarray  # i32[S, Wmax+1]   hor band
+    hor_block_docs: np.ndarray     # i32[S, HNBmax, BLOCK]
+    hor_block_tfs: np.ndarray      # f32[S, HNBmax, BLOCK]
+    hor_tile_first: np.ndarray     # i32[S, HNBmax]
+    hor_tile_count: np.ndarray     # i32[S, HNBmax]
+    norm: np.ndarray               # f32[D] (replicated)
+    n_shards: int
+    num_docs: int
+    tile: int
+    block: int
+    words_per_block: int
+    max_blocks_per_term: int
+    route_span_max: int
+    route_pairs_max: int
+    hor_max_blocks_per_term: int
+    hor_route_span_max: int
+    hor_route_pairs_max: int
+
+    def device_arrays(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+def build_term_sharded_banded(host: PostingsHost, n_shards: int
+                              ) -> BandedTermShardedIndex:
+    """Per-vocab-shard banding over the SAME slicing as the hor/packed
+    term-sharded builders — identical per-shard term order, so a query
+    term resolves to the same shard regardless of layout."""
+    subs, wmax = _term_shard_subhosts(host, n_shards)
+    shards = [layouts.build_banded(sub) for sub in subs]
+    block = shards[0].block
+    nbmax = max(int(ix.packed.packed.shape[0]) for ix in shards)
+    hnbmax = max(int(ix.hor.block_docs.shape[0]) for ix in shards)
+    wpb = max(ix.packed.words_per_block for ix in shards)
+    S = n_shards
+    sh_a = np.full((S, wmax), 0xFFFFFFFF, np.uint32)
+    df_a = np.zeros((S, wmax), np.int32)
+    offs_a = np.zeros((S, wmax + 1), np.int32)
+    pk = np.zeros((S, nbmax, wpb), np.uint32)
+    bt = np.zeros((S, nbmax, block), np.float16)
+    bits_a = np.ones((S, nbmax), np.int32)     # padding blocks decode inert
+    base_a = np.zeros((S, nbmax), np.int32)
+    cnt_a = np.zeros((S, nbmax), np.int32)
+    tf_a = np.zeros((S, nbmax), np.int32)
+    tc_a = np.zeros((S, nbmax), np.int32)
+    h_offs_a = np.zeros((S, wmax + 1), np.int32)
+    h_bd = np.full((S, hnbmax, block), -1, np.int32)
+    h_bt = np.zeros((S, hnbmax, block), np.float32)
+    h_tf_a = np.zeros((S, hnbmax), np.int32)
+    h_tc_a = np.zeros((S, hnbmax), np.int32)
+    for s, ix in enumerate(shards):
+        p, h = ix.packed, ix.hor
+        w = int(p.sorted_hash.shape[0])
+        nb = int(p.packed.shape[0])
+        hnb = int(h.block_docs.shape[0])
+        sh_a[s, :w] = np.asarray(p.sorted_hash)
+        df_a[s, :w] = np.asarray(ix.df)
+        offs_a[s, :w + 1] = np.asarray(p.block_offsets)
+        offs_a[s, w + 1:] = offs_a[s, w]
+        pk[s, :nb, :p.words_per_block] = np.asarray(p.packed)
+        bt[s, :nb] = np.asarray(p.block_tfs)
+        bits_a[s, :nb] = np.asarray(p.block_bits)
+        base_a[s, :nb] = np.asarray(p.block_base)
+        cnt_a[s, :nb] = np.asarray(p.block_count)
+        tf_a[s, :nb] = np.asarray(p.tile_first)
+        tc_a[s, :nb] = np.asarray(p.tile_count)
+        h_offs_a[s, :w + 1] = np.asarray(h.block_offsets)
+        h_offs_a[s, w + 1:] = h_offs_a[s, w]
+        h_bd[s, :hnb] = np.asarray(h.block_docs)
+        h_bt[s, :hnb] = np.asarray(h.block_tfs)
+        h_tf_a[s, :hnb] = np.asarray(h.tile_first)
+        h_tc_a[s, :hnb] = np.asarray(h.tile_count)
+    return BandedTermShardedIndex(
+        sorted_hash=sh_a, df=df_a, block_offsets=offs_a, packed=pk,
+        block_tfs=bt, block_bits=bits_a, block_base=base_a,
+        block_count=cnt_a, tile_first=tf_a, tile_count=tc_a,
+        hor_block_offsets=h_offs_a, hor_block_docs=h_bd,
+        hor_block_tfs=h_bt, hor_tile_first=h_tf_a, hor_tile_count=h_tc_a,
+        norm=host.norm.astype(np.float32), n_shards=S,
+        num_docs=host.num_docs, tile=layouts.ROUTE_TILE, block=block,
+        words_per_block=wpb,
+        max_blocks_per_term=max(ix.packed.max_blocks_per_term
+                                for ix in shards),
+        route_span_max=max(ix.packed.route_span_max for ix in shards),
+        route_pairs_max=max(ix.packed.route_pairs_max for ix in shards),
+        hor_max_blocks_per_term=max(ix.hor.max_blocks_per_term
+                                    for ix in shards),
+        hor_route_span_max=max(ix.hor.route_span_max for ix in shards),
+        hor_route_pairs_max=max(ix.hor.route_pairs_max for ix in shards),
+    )
+
+
 def build_term_sharded_from_view(view, n_shards: int,
                                  layout: str = "hor"):
     """Term-partition an epoch-pinned ``LiveView``: bulk-build the
@@ -1238,14 +1457,16 @@ def build_term_sharded_from_view(view, n_shards: int,
     """
     from repro.core import build
     tc_live, live_ids = view.export_live_corpus()
-    builder = (build_term_sharded_packed if layout == "packed"
-               else build_term_sharded_blocked)
+    builder = {"packed": build_term_sharded_packed,
+               "banded": build_term_sharded_banded}.get(
+                   layout, build_term_sharded_blocked)
     host = build.bulk_build(tc_live)
     return builder(host, n_shards), np.asarray(live_ids, np.int64)
 
 
 def make_term_sharded_fused_scorer(
-        index: BlockedTermShardedIndex | PackedTermShardedIndex,
+        index: (BlockedTermShardedIndex | PackedTermShardedIndex
+                | BandedTermShardedIndex),
         mesh: Mesh, axis: str, k: int = 10, cap: int | None = None,
         return_stats: bool = False):
     """jit fn(query_hashes u32[T]) -> (scores[k], global doc ids[k]).
@@ -1277,19 +1498,24 @@ def make_term_sharded_fused_scorer(
                                     record_truncated, warn_on_overflow)
 
     packed_layout = isinstance(index, PackedTermShardedIndex)
+    banded_layout = isinstance(index, BandedTermShardedIndex)
+    lay = ("banded" if banded_layout
+           else "packed" if packed_layout else "hor")
     arrs = index.device_arrays()
     num_docs, tile = index.num_docs, index.tile
     n_tiles = max(-(-num_docs // tile), 1)
     S = index.n_shards
-    block = (index.block if packed_layout
+    block = (index.block if packed_layout or banded_layout
              else int(index.block_docs.shape[-1]))
     m_blocks = max(index.max_blocks_per_term, 1)
+    m_blocks_h = (max(index.hor_max_blocks_per_term, 1) if banded_layout
+                  else 0)
     if cap is not None:
         m_blocks = max(min(m_blocks, -(-cap // block)), 1)
+        m_blocks_h = max(min(m_blocks_h, -(-cap // block)), 1)
     # dense-score kernels: only the routing-free geometry (query-lane pad
     # and candidate quantum) follows the tuning table here
-    cfg = autotune.lookup("pallas", num_docs,
-                          "packed" if packed_layout else "hor")
+    cfg = autotune.lookup("pallas", num_docs, lay)
     q_pad = cfg.q_pad
     if cfg.tile == tile:
         k_tile = cfg.resolve_k_tile(k)
@@ -1301,9 +1527,15 @@ def make_term_sharded_fused_scorer(
 
     names = ("sorted_hash", "df", "block_offsets", "tile_first",
              "tile_count")
-    names += (("packed", "block_tfs", "block_bits", "block_base",
-               "block_count") if packed_layout
-              else ("block_docs", "block_tfs"))
+    if banded_layout:
+        names += ("packed", "block_tfs", "block_bits", "block_base",
+                  "block_count", "hor_block_offsets", "hor_block_docs",
+                  "hor_block_tfs", "hor_tile_first", "hor_tile_count")
+    elif packed_layout:
+        names += ("packed", "block_tfs", "block_bits", "block_base",
+                  "block_count")
+    else:
+        names += ("block_docs", "block_tfs")
     sharded = {n: P(axis) for n in names}
     sharded["norm"] = P()
 
@@ -1340,7 +1572,7 @@ def make_term_sharded_fused_scorer(
             cand_cap=cand_cap)
         warn_on_overflow(ovf, "term-sharded fused engine")
         pqw = jnp.pad(pqw, ((0, 0), (0, q_pad - 1)))
-        if packed_layout:
+        if packed_layout or banded_layout:
             partial = fused_score_packed_pallas(
                 sq["packed"], sq["block_tfs"], pb, pt, pqw, pcap,
                 sq["block_bits"][pb], sq["block_base"][pb],
@@ -1349,6 +1581,25 @@ def make_term_sharded_fused_scorer(
             partial = fused_score_blocked_pallas(
                 sq["block_docs"], sq["block_tfs"], pb, pt, pqw, pcap,
                 num_docs, tile)[0]
+        if banded_layout:
+            # every term is wholly in one band, so the HOR-band pass
+            # scores exactly the terms the packed band skipped; the two
+            # dense partials sum locally BEFORE the cross-shard psum
+            cand_block, cand_valid, cand_q, cand_w, cand_cap = \
+                expand_block_candidates(sq["hor_block_offsets"], tid[None],
+                                        w[None], m_blocks_h, block, cap=cap)
+            mp_h = max(min(index.hor_route_pairs_max,
+                           t * m_blocks_h
+                           * max(index.hor_route_span_max, 1)), 8)
+            pb, pt, pqw, pcap, ovf = build_batched_pairs(
+                cand_block, cand_valid, cand_q, cand_w,
+                sq["hor_tile_first"], sq["hor_tile_count"], n_tiles, 1,
+                mp_h, cand_cap=cand_cap)
+            warn_on_overflow(ovf, "term-sharded fused engine")
+            pqw = jnp.pad(pqw, ((0, 0), (0, q_pad - 1)))
+            partial = partial + fused_score_blocked_pallas(
+                sq["hor_block_docs"], sq["hor_block_tfs"], pb, pt, pqw,
+                pcap, num_docs, tile)[0]
         # THE term-partitioned cost: a full [D] psum across shards
         scores = jax.lax.psum(partial, axis)
         qn2 = jax.lax.psum(jnp.sum(w * w), axis)
@@ -1372,8 +1623,7 @@ def make_term_sharded_fused_scorer(
         if trace is None:
             return fn(qh)
         span = trace.span("shard_fanout", parent="score", n_shards=S,
-                          k=k, sharding="term",
-                          layout="packed" if packed_layout else "hor")
+                          k=k, sharding="term", layout=lay)
         out = fn(qh)
         span.end()
         sync = trace.span("shard_sync", parent="score")

@@ -37,6 +37,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Iterable
 
 TUNE_SCHEMA = "repro-tune/1"
@@ -98,10 +99,48 @@ def size_class_of(num_docs: int) -> int:
 
 
 def layout_of(index) -> str:
-    """'hor' for BlockedIndex, 'packed' for PackedCsrIndex — the same
-    layout tags the segmented live index uses."""
-    from repro.core.layouts import PackedCsrIndex
+    """'hor' for BlockedIndex, 'packed' for PackedCsrIndex, 'banded' for
+    BandedCsrIndex — the same layout tags the segmented live index
+    uses."""
+    from repro.core.layouts import BandedCsrIndex, PackedCsrIndex
+    if isinstance(index, BandedCsrIndex):
+        return "banded"
     return "packed" if isinstance(index, PackedCsrIndex) else "hor"
+
+
+def _compiled_lowering(backend: str) -> bool:
+    """True when ``backend`` lowers through the compiled (non-interpret)
+    Pallas path, where the bitonic tile reducer is not implemented."""
+    if backend == "pallas-tpu":
+        return True
+    if backend == "pallas":
+        import jax
+        return jax.default_backend() == "tpu"
+    return False
+
+
+_BITONIC_WARNED = False
+
+
+def downgrade_reducer(cfg: TuneConfig, backend: str) -> TuneConfig:
+    """Resolve a ``reducer="bitonic"`` table entry to ``successive`` on
+    compiled lowerings, where the kernel would otherwise reject it at
+    entry (fused_decode_score raises NotImplementedError).  Warns once
+    per process and bumps the ``autotune_bitonic_downgrade`` counter so
+    poisoned tables are visible, not fatal."""
+    global _BITONIC_WARNED
+    if cfg.reducer != "bitonic" or not _compiled_lowering(backend):
+        return cfg
+    from repro.obs.registry import GLOBAL
+    GLOBAL.counter("autotune_bitonic_downgrade").inc()
+    if not _BITONIC_WARNED:
+        _BITONIC_WARNED = True
+        warnings.warn(
+            "tuning table requested reducer='bitonic' on a compiled "
+            f"lowering (backend={backend!r}); downgrading to "
+            "'successive' — re-tune the table on this backend",
+            RuntimeWarning, stacklevel=3)
+    return dataclasses.replace(cfg, reducer="successive")
 
 
 class TuningTable:
@@ -143,11 +182,12 @@ class TuningTable:
         cls_ = size_class_of(num_docs)
         hit = self.get(backend, cls_, layout)
         if hit is not None:
-            return hit
+            return downgrade_reducer(hit, backend)
         below = [(c, cfg) for (b, c, l), cfg in self._entries.items()
                  if b == backend and l == layout and c < cls_]
         if below:
-            return max(below, key=lambda e: e[0])[1]
+            return downgrade_reducer(max(below, key=lambda e: e[0])[1],
+                                     backend)
         return DEFAULT_CONFIG
 
     def to_dict(self) -> dict:

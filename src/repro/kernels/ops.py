@@ -22,7 +22,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.layouts import BlockedIndex, PackedCsrIndex
+from repro.core.layouts import BandedCsrIndex, BlockedIndex, PackedCsrIndex
 from repro.core.query import final_scores
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
@@ -514,6 +514,64 @@ def fused_segment_dense_topk(index: BlockedIndex | PackedCsrIndex,
     return vals, gids, overflow
 
 
+def banded_pairs_budgets(index: BandedCsrIndex, tile: int = TILE,
+                         pairs_per_step: int = 1) -> tuple[int, int]:
+    """Per-band static pair budgets for a banded segment: each band is
+    its own fused-kernel launch with its own routing-pair buffer.  A
+    band can be EMPTY (every term landed on the other side of the cut);
+    an unpadded empty band carries ``route_pairs_max == 0``, which would
+    size a zero-length pair buffer — clamp to the same floor the
+    whole-index budgets use (padded sealed bands never hit this: the
+    size-class pad lifts ``route_pairs_max`` to >= one class)."""
+    return (max(padded_pairs_budget(index.packed, tile, pairs_per_step), 8),
+            max(padded_pairs_budget(index.hor, tile, pairs_per_step), 8))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_tile", "cap_packed", "cap_hor", "max_pairs_packed", "max_pairs_hor",
+    "rank_blend", "tile", "backend", "q_pad"))
+def fused_segment_banded_topk(index: BandedCsrIndex, query_hashes: Array,
+                              idf_w: Array, doc_base: Array, *, k_tile: int,
+                              cap_packed: int, cap_hor: int,
+                              max_pairs_packed: int, max_pairs_hor: int,
+                              rank_blend: float = 0.0, tile: int = TILE,
+                              backend: Backend = "pallas",
+                              q_pad: int = Q_PAD):
+    """Engine over one BANDED segment: one fused dense-score launch per
+    band (packed band with its band-local stride, HOR tail), band
+    partials summed, then the shared scoring tail + per-tile candidate
+    reduction.
+
+    One term lookup serves both bands (they share the sorted_hash
+    buffer; the band a term does NOT live in holds an empty block range
+    for it, so it gates no pairs there).  Scores are additive over
+    terms, so ``acc_packed + acc_hor`` is the whole-segment accumulator
+    — and because every term contributes through exactly one band, a
+    doc's partial in the other band is exactly 0.0, keeping the sum
+    bit-identical to a single-layout engine whenever each doc's terms
+    are band-pure (the engineered parity tests pin this; mixed docs get
+    the same float regrouping tolerance as the term-sharded psum).
+
+    The pytree structure keys compilation on the PAIR of band size
+    classes, so warm-class rebuilds reuse the executable — the same
+    memoization contract as ``fused_segment_topk``."""
+    present = query_hashes != 0
+    tids = jnp.where(present, index.packed.lookup_terms(query_hashes), -1)
+    acc_p, ov_p = fused_batched_scores(
+        index.packed, tids, idf_w, cap_packed, max_pairs=max_pairs_packed,
+        tile=tile, backend=backend, q_pad=q_pad)
+    acc_h, ov_h = fused_batched_scores(
+        index.hor, tids, idf_w, cap_hor, max_pairs=max_pairs_hor,
+        tile=tile, backend=backend, q_pad=q_pad)
+    scores = acc_p + acc_h
+    qnorm = jnp.sqrt(jnp.maximum(jnp.sum(idf_w * idf_w, axis=1), 1e-12))
+    final = final_scores(scores, index.docs.norm, index.docs.rank, qnorm,
+                         rank_blend)
+    vals, ids = extract_tile_candidates(final, tile, k_tile)
+    gids = jnp.where(ids >= 0, ids + doc_base, -1)
+    return vals, gids, ov_p + ov_h
+
+
 @functools.partial(jax.jit, static_argnames=(
     "k_tile", "cap", "rank_blend", "tile"))
 def jnp_segment_topk(index, query_hashes: Array, idf_w: Array,
@@ -575,6 +633,8 @@ def segment_scorer_cache_sizes() -> dict:
     return {
         "fused_segment_topk": fused_segment_topk._cache_size(),
         "fused_segment_dense_topk": fused_segment_dense_topk._cache_size(),
+        "fused_segment_banded_topk":
+            fused_segment_banded_topk._cache_size(),
         "jnp_segment_topk": jnp_segment_topk._cache_size(),
         "jnp_segment_conjunctive": jnp_segment_conjunctive._cache_size(),
     }

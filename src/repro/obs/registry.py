@@ -298,6 +298,23 @@ class EventLog:
         self._seq = 0
         self._counts: dict[str, int] = {}
 
+    @property
+    def capacity(self) -> int:
+        return self._ring.maxlen or 0
+
+    def resize(self, capacity: int) -> None:
+        """Rebound the ring to ``capacity`` events, keeping the newest
+        retained events (shrinking drops from the oldest end).  Seq and
+        per-kind counts are untouched."""
+        capacity = int(capacity)
+        if capacity < 1:
+            raise ValueError(f"event log capacity must be >= 1, "
+                             f"got {capacity}")
+        with self._lock:
+            if capacity == self._ring.maxlen:
+                return
+            self._ring = deque(self._ring, maxlen=capacity)
+
     def emit(self, kind: str, **fields) -> dict:
         with self._lock:
             self._seq += 1

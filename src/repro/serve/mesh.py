@@ -190,6 +190,9 @@ class MeshServer(QueryServer):
         if cfg.layout_policy is not None:
             for r in self.replicas[1:]:
                 r.index.layout_policy = cfg.layout_policy
+        if cfg.event_capacity is not None:
+            for r in self.replicas[1:]:
+                r.index.events.resize(cfg.event_capacity)
         # per-tenant result-cache partitions replace the flat LRU; the
         # metrics gauges follow the attach (they read _cache at call
         # time), so cache_hits/misses keep exporting unchanged

@@ -65,6 +65,12 @@ class ServerConfig:
     index's own policy untouched — bit-identical to pre-chooser
     serving.
 
+    ``event_capacity`` optionally rebounds the index's maintenance
+    event ring at server construction (``index.events.resize``) —
+    long-lived serving meshes keep a deeper audit tail than the
+    library default of 256 without touching ``SegmentedIndex`` call
+    sites.  ``None`` leaves the index's ring as built.
+
     ``trace_sample`` samples end-to-end query traces: every Nth
     submitted ticket carries a ``repro.obs.Trace`` through queue wait,
     batch assembly, per-segment kernel dispatch, candidate merge, and
@@ -84,6 +90,7 @@ class ServerConfig:
     tune: object | None = None
     layout_policy: object | None = None
     trace_sample: int = 0
+    event_capacity: int | None = None
 
 
 class Response:
@@ -167,6 +174,8 @@ class QueryServer:
         with self.index_lock:
             if self.config.layout_policy is not None:
                 index.layout_policy = self.config.layout_policy
+            if self.config.event_capacity is not None:
+                index.events.resize(self.config.event_capacity)
             self._pinned: LiveView = index.view()
         self._purged_epoch = self._pinned.epoch
         self.metrics.observe_layout_mix(self._pinned.layout_mix())

@@ -29,10 +29,13 @@ from repro.core.live_index import (LiveIndexStats, LiveView, SegmentedIndex,
                                    _Delta)
 
 # v2 adds the layout policy + per-segment chooser provenance
-# (size_class, num_terms, chooser_reason); v1 snapshots still restore
-# (no policy, reasons default) — the arrays are identical either way.
-_FORMAT_VERSION = 2
-_READ_VERSIONS = (1, 2)
+# (size_class, num_terms, chooser_reason); v3 adds the per-segment band
+# descriptor (band_cut) so banded segments restore with the EXACT band
+# membership they sealed with.  v1/v2 snapshots still restore (no
+# policy / band_cut re-derived by the builder) — the arrays are
+# identical either way.
+_FORMAT_VERSION = 3
+_READ_VERSIONS = (1, 2, 3)
 
 
 def pin(index: SegmentedIndex) -> LiveView:
@@ -90,7 +93,8 @@ def serialize_segmented(index: SegmentedIndex, lock=None) -> dict:
                       "n_postings": s.n_postings, "layout": s.layout,
                       "size_class": s.size_class,
                       "num_terms": s.num_terms,
-                      "chooser_reason": s.chooser_reason}
+                      "chooser_reason": s.chooser_reason,
+                      "band_cut": int(s.band_cut)}
                      for s in index._segments],
     }
     state = {
@@ -150,7 +154,8 @@ def restore_segmented(state: dict) -> SegmentedIndex:
             np.asarray(state[f"seg{i}_doc_of"], np.int64),
             np.asarray(state[f"seg{i}_terms"], np.int64),
             np.asarray(state[f"seg{i}_tfs"], np.float32),
-            layout=sm.get("layout", meta["seal_layout"]))
+            layout=sm.get("layout", meta["seal_layout"]),
+            band_cut=sm.get("band_cut") or None)
         seg.chooser_reason = sm.get("chooser_reason", "default")
         si._segments.append(seg)
     dl = _Delta(meta["delta"]["doc_cap"], meta["delta"]["post_cap"],

@@ -455,3 +455,46 @@ def test_bitonic_reducer_refused_on_compiled_lowering():
             jnp.ones((16,), jnp.float32), jnp.zeros((16,), jnp.float32),
             jnp.ones((8,), jnp.float32), 16, 8, tile=16,
             reducer="bitonic", interpret=False)
+
+
+def test_poisoned_table_bitonic_downgrades_on_compiled_lowering():
+    """A tuning table carrying reducer='bitonic' for a compiled
+    (non-interpret) lowering must not detonate at kernel entry: lookup
+    downgrades the entry to 'successive' (counter + one-shot warning),
+    on exact hits AND nearest-smaller-class inheritance, while
+    interpret-capable backends keep the tuned reducer.  The env
+    override bypasses the downgrade, so the kernel's hard guard stays
+    the backstop."""
+    import warnings
+
+    from repro.obs.registry import GLOBAL
+
+    t = autotune.TuningTable()
+    t.put("pallas-tpu", 2048, "hor", autotune.TuneConfig(reducer="bitonic"))
+    t.put("xla", 2048, "hor", autotune.TuneConfig(reducer="bitonic"))
+    counter = GLOBAL.counter("autotune_bitonic_downgrade")
+    c0 = counter.value
+    autotune._BITONIC_WARNED = False
+    with pytest.warns(RuntimeWarning, match="bitonic"):
+        cfg = t.lookup("pallas-tpu", 2048, "hor")       # exact class
+    assert cfg.reducer == "successive"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                  # one-shot only
+        cfg = t.lookup("pallas-tpu", 500_000, "hor")    # inherited class
+    assert cfg.reducer == "successive"
+    assert counter.value == c0 + 2
+    # interpret-capable lowerings keep the tuned (bit-identical) reducer
+    assert t.lookup("xla", 2048, "hor").reducer == "bitonic"
+    # the downgrade never rewrites the stored entry
+    assert t.get("pallas-tpu", 2048, "hor").reducer == "bitonic"
+
+    # REPRO_REDUCER=bitonic bypasses table resolution entirely — the
+    # kernel-entry hard guard still refuses the compiled lowering
+    with pytest.raises(NotImplementedError):
+        fused_topk_blocked_pallas(
+            jnp.zeros((1, 8), jnp.int32), jnp.zeros((1, 8), jnp.float32),
+            jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32),
+            jnp.zeros((2, 8), jnp.float32), jnp.zeros((2,), jnp.int32),
+            jnp.ones((16,), jnp.float32), jnp.zeros((16,), jnp.float32),
+            jnp.ones((8,), jnp.float32), 16, 8, tile=16,
+            reducer="bitonic", interpret=False)

@@ -1,0 +1,353 @@
+"""Banded packed segments: the uniform-stride floor fix.
+
+A monolithic ``PackedCsrIndex`` stores every block at the segment-wide
+``max(words_per_block)``, so one rare term whose deltas need 16 bits
+inflates the stride of every dense term — a per-routed-block byte floor
+(524/1032 = 0.508x-vs-hor at 16-bit deltas) that no amount of dense
+data can cross.  ``layouts.build_banded`` cuts the vocabulary by
+per-term packed width: dense terms go into a packed band with a
+band-local stride, the decode-bound tail stays HOR.
+
+The contract under test:
+
+  * the byte model IS the builder: ``choose_band_cut`` +
+    ``banded_posting_bytes_from_words`` price the built arrays to the
+    byte, and on the engineered floor corpus the banded build's
+    per-routed-block bytes drop from >= 0.5x-vs-hor to <= 0.49x;
+  * banded top-k is bit-identical (ties included) to the HOR twin, the
+    monolithic-packed twin, and the jnp oracle — single-host,
+    doc-stacked, and term-sharded;
+  * the band descriptor is state (snapshot v3 round-trips ``band_cut``
+    bitwise; v2 snapshots still restore) and band membership is HOST
+    metadata, so warm size classes add zero new jit entries.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import build, compaction, layouts, size_model
+from repro.core.build import TokenizedCorpus
+from repro.core.live_index import SegmentedIndex
+from repro.kernels import ops
+from repro.text import corpus
+from repro.text.tokenizer import mix32
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _floor_corpus(num_docs=33_000, dense_docs=2048, dense_terms=10):
+    """The merged-class floor reproduction: ``dense_terms`` terms dense
+    over docs 0..dense_docs-1 (unit deltas — 4 packed words/block), a
+    filler term in every doc (keeps all docs live), and ONE rare term in
+    docs {0, num_docs-1} whose single gap needs 16 bits — inflating a
+    monolithic segment's stride to 64 words/block."""
+    rare = dense_terms + 1
+    dense = np.arange(1, dense_terms + 1, dtype=np.int64)
+    doc_term_ids, doc_counts = [], []
+    for d in range(num_docs):
+        ts = [np.array([0], np.int64)]
+        if d < dense_docs:
+            ts.append(dense)
+        if d in (0, num_docs - 1):
+            ts.append(np.array([rare], np.int64))
+        ids = np.concatenate(ts)
+        doc_term_ids.append(ids)
+        doc_counts.append(np.ones(len(ids), np.int64))
+    return TokenizedCorpus(
+        doc_term_ids=doc_term_ids, doc_counts=doc_counts,
+        term_hashes=mix32(np.arange(rare + 1, dtype=np.uint32)),
+        num_docs=num_docs)
+
+
+def _per_routed_block(words_per_block: int, block: int) -> float:
+    """HBM bytes a query streams per routed packed block, over the HOR
+    cost of the same block: (id words + f16 tfs + decode triple) /
+    (i32 ids + f32 tfs + min/max bounds)."""
+    return (words_per_block * 4 + block * 2 + 12) / (block * 8 + 8)
+
+
+def _seal_three_ways(tc):
+    out = {}
+    for layout in ("hor", "packed", "banded"):
+        si = SegmentedIndex(term_hashes=tc.term_hashes,
+                            delta_doc_capacity=tc.num_docs,
+                            delta_posting_capacity=80_000,
+                            policy=compaction.TieredPolicy(min_run=100))
+        si.add_batch(tc)
+        si.seal(layout=layout)
+        out[layout] = si
+    return out
+
+
+def test_uniform_stride_floor_engineered():
+    """The tentpole acceptance: on the engineered merged-class corpus
+    the monolithic packed stride sits AT the 0.508x floor, the banded
+    packed band prices <= 0.49x — and all three layouts (plus the jnp
+    oracle) answer bit-identically, ties included."""
+    tc = _floor_corpus()
+    tri = _seal_three_ways(tc)
+
+    mono = tri["packed"].segments()[0].index
+    assert int(mono.words_per_block) == 64          # inflated by 1 term
+    mono_ratio = _per_routed_block(int(mono.words_per_block), mono.block)
+    assert mono_ratio >= 0.5                        # the floor
+
+    bseg = tri["banded"].segments()[0]
+    assert bseg.layout == "banded" and bseg.band_cut >= 4
+    band = bseg.index
+    assert int(band.packed.words_per_block) < int(mono.words_per_block)
+    band_ratio = _per_routed_block(int(band.packed.words_per_block),
+                                   band.block)
+    assert band_ratio <= 0.49                       # below the floor
+    # the rare wide term lives in the HOR tail, dense terms packed
+    assert int(np.asarray(band.hor.df).astype(np.int64).sum()) == 2
+    assert int(np.count_nonzero(np.asarray(band.packed.df))) == 11
+
+    # bit parity across the stack: ids AND scores, ties included
+    dense_q = np.zeros((3, 8), np.uint32)
+    dense_q[0, :3] = tc.term_hashes[[1, 2, 11]]     # dense + rare
+    dense_q[1, :2] = tc.term_hashes[[3, 11]]
+    dense_q[2, :4] = tc.term_hashes[[4, 5, 6, 7]]   # pure dense ties
+    ref = tri["hor"].topk(dense_q, k=10)
+    oracle = tri["banded"].topk(dense_q, k=10, engine="jnp")
+    for si in (tri["packed"], tri["banded"]):
+        got = si.topk(dense_q, k=10)
+        np.testing.assert_array_equal(np.asarray(got.doc_ids),
+                                      np.asarray(ref.doc_ids))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(ref.scores))
+    np.testing.assert_array_equal(np.asarray(oracle.doc_ids),
+                                  np.asarray(ref.doc_ids))
+    np.testing.assert_allclose(np.asarray(oracle.scores),
+                               np.asarray(ref.scores),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_byte_model_prices_banded_build_exactly():
+    """``choose_band_cut`` + the exact-width estimator must equal the
+    built (unpadded) arrays to the byte, and order the three layouts
+    banded < monolithic packed < hor on the floor corpus."""
+    host = build.bulk_build(_floor_corpus(num_docs=33_000, dense_docs=512,
+                                          dense_terms=6))
+    words, nblocks = layouts.term_packed_words(host)
+    cut, predicted = size_model.choose_band_cut(words, nblocks)
+    bix = layouts.build_banded(host)
+    assert predicted == bix.posting_bytes()
+    assert predicted == size_model.banded_posting_bytes_from_words(
+        words, nblocks, cut)
+    mono = layouts.build_packed_csr(host).posting_bytes()
+    hor = size_model.hor_posting_bytes_from_df(host.df)
+    assert bix.posting_bytes() < mono < hor
+    # the realized band stride matches the cut's band-local max width
+    in_band = (words > 0) & (words <= cut)
+    assert int(bix.packed.words_per_block) == int(words[in_band].max())
+
+
+def test_banded_chooser_slice():
+    """Bounded chooser run for the PR lane: with banded as a candidate,
+    small seals stay hor (decode-bound), the compacted merge flips
+    banded via the byte model — and answers stay bit-identical to the
+    jnp oracle through the flip."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=360, vocab=150,
+                                           avg_distinct=12, seed=5))
+    pol = size_model.LayoutCostModel(min_packed_docs=256,
+                                     candidates=("hor", "banded"))
+    si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=90,
+                        delta_posting_capacity=32_768,
+                        policy=compaction.TieredPolicy(min_run=100),
+                        layout_policy=pol)
+    for a in range(0, 360, 90):
+        si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:a + 90],
+                                     tc.doc_counts[a:a + 90],
+                                     tc.term_hashes, 90))
+        si.seal()
+    assert [s.layout for s in si.segments()] == ["hor"] * 4
+    qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                   3, 3, num_docs=si.live_doc_count, seed=3)
+    before = si.topk(qh, k=10)
+    assert si.compact(all_segments=True)
+    seg = si.segments()[0]
+    assert seg.layout == "banded" and seg.band_cut > 0
+    assert "bytes/q" in seg.chooser_reason
+    assert si.layout_mix()["counts"] == {"banded": 1}
+    after = si.topk(qh, k=10)
+    np.testing.assert_array_equal(np.asarray(before.doc_ids),
+                                  np.asarray(after.doc_ids))
+    oracle = si.topk(qh, k=10, engine="jnp")
+    np.testing.assert_array_equal(np.asarray(after.doc_ids),
+                                  np.asarray(oracle.doc_ids))
+    np.testing.assert_allclose(np.asarray(after.scores),
+                               np.asarray(oracle.scores),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_banded_warm_class_zero_new_jit():
+    """Two banded seals in the same size class (different band cuts —
+    the cut is host metadata, not a pytree static) must reuse the
+    warm engine: zero growth in the segment-scorer jit caches."""
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=400, vocab=200,
+                                           avg_distinct=18, seed=7))
+    si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=200,
+                        delta_posting_capacity=32_768,
+                        policy=compaction.TieredPolicy(min_run=100),
+                        seal_layout="banded")
+    qh = None
+    sizes = None
+    for a in (0, 200):
+        si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:a + 200],
+                                     tc.doc_counts[a:a + 200],
+                                     tc.term_hashes, 200))
+        si.seal()
+        qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                       2, 3, num_docs=si.live_doc_count,
+                                       seed=9)
+        si.topk(qh, k=10)
+        if sizes is None:
+            sizes = ops.segment_scorer_cache_sizes()     # warm after seg 1
+    segs = si.segments()
+    assert [s.layout for s in segs] == ["banded", "banded"]
+    assert all(s.band_cut > 0 for s in segs)
+    assert segs[0].size_class == segs[1].size_class
+    assert ops.segment_scorer_cache_sizes() == sizes     # zero growth
+
+
+def test_banded_snapshot_v3_roundtrip_and_v2_back_compat(tmp_path):
+    from repro.serve import snapshot
+
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=300, vocab=140,
+                                           avg_distinct=11, seed=13))
+    si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=150,
+                        delta_posting_capacity=32_768,
+                        policy=compaction.TieredPolicy(min_run=100))
+    for a, layout in ((0, "banded"), (150, "hor")):
+        si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:a + 150],
+                                     tc.doc_counts[a:a + 150],
+                                     tc.term_hashes, 150))
+        si.seal(layout=layout)
+    qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes,
+                                   3, 3, num_docs=si.live_doc_count, seed=1)
+    want = si.topk(qh, k=10)
+    path = tmp_path / "snap.npz"
+    snapshot.save_segmented(si, path)
+    rt = snapshot.load_segmented(path)
+    assert [s.layout for s in rt.segments()] == ["banded", "hor"]
+    assert [s.band_cut for s in rt.segments()] == \
+        [s.band_cut for s in si.segments()]
+    assert rt.segments()[0].band_cut > 0
+    # the restored band membership is bitwise: same cut -> same arrays
+    a, b = si.segments()[0].index, rt.segments()[0].index
+    np.testing.assert_array_equal(np.asarray(a.packed.df),
+                                  np.asarray(b.packed.df))
+    assert int(a.packed.words_per_block) == int(b.packed.words_per_block)
+    got = rt.topk(qh, k=10)
+    np.testing.assert_array_equal(np.asarray(want.doc_ids),
+                                  np.asarray(got.doc_ids))
+    np.testing.assert_array_equal(np.asarray(want.scores),
+                                  np.asarray(got.scores))
+
+    # a v2 snapshot (no band_cut in the manifest) must still restore:
+    # non-banded segments rebuild identically, the version check passes
+    state = snapshot.serialize_segmented(si)
+    meta = json.loads(bytes(np.asarray(state["meta"])).decode())
+    meta["version"] = 2
+    for sm in meta["segments"]:
+        del sm["band_cut"]
+        sm["layout"] = "hor"          # v2 never sealed banded segments
+    state["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    old = snapshot.restore_segmented(state)
+    assert [s.layout for s in old.segments()] == ["hor", "hor"]
+    assert all(s.band_cut == 0 for s in old.segments())
+
+
+BANDED_SHARDED_SCRIPT = r"""
+import numpy as np, jax
+from repro.text import corpus
+from repro.core.build import TokenizedCorpus
+from repro.core.live_index import SegmentedIndex
+from repro.distributed import retrieval
+
+tc = corpus.generate(corpus.CorpusSpec(num_docs=800, vocab=400,
+                                       avg_distinct=30, seed=9))
+si = SegmentedIndex(term_hashes=tc.term_hashes, delta_doc_capacity=400,
+                    seal_layout="banded")
+for a in range(0, 800, 200):
+    si.add_batch(TokenizedCorpus(tc.doc_term_ids[a:a + 200],
+                                 tc.doc_counts[a:a + 200],
+                                 tc.term_hashes, 200))
+    si.seal()
+view = si.view()
+assert all(s.layout == "banded" and s.band_cut > 0 for s in view.segments)
+
+qh = corpus.sample_query_terms(np.asarray(si._df), si.term_hashes, 4, 4,
+                               num_docs=si.live_doc_count, seed=2)
+k = 10
+ref = view.topk(qh, k)
+ref_ids, ref_scores = np.asarray(ref.doc_ids), np.asarray(ref.scores)
+mesh = jax.make_mesh((4,), ("shards",))
+
+# doc-stacked banded groups: BITWISE equal to the single host
+stacks = retrieval.stack_segment_shards(view, 4)
+assert all(m.layout == "banded" for m, _ in stacks.groups)
+scorer = retrieval.make_doc_sharded_segment_scorer(stacks, mesh,
+                                                   "shards", k=k)
+for i in range(len(qh)):
+    vv, ii = scorer(qh[i])
+    vv, ii = np.asarray(vv), np.asarray(ii)
+    hit = np.isfinite(vv)
+    np.testing.assert_array_equal(
+        np.where(hit, ii, -1).astype(np.int32), ref_ids[i])
+    np.testing.assert_array_equal(np.where(hit, vv, 0.0), ref_scores[i])
+
+# warm-class rebuild: zero stack-scorer cache growth
+before = retrieval.stack_scorer_cache_sizes()
+s2 = retrieval.make_doc_sharded_segment_scorer(
+    retrieval.stack_segment_shards(si.view(), 4), mesh, "shards", k=k)
+s2(qh[0])
+assert retrieval.stack_scorer_cache_sizes() == before, (
+    before, retrieval.stack_scorer_cache_sizes())
+
+# term-sharded banded: ids bit-identical, scores to psum tolerance
+tix, live_ids = retrieval.build_term_sharded_from_view(view, 4,
+                                                       layout="banded")
+assert type(tix).__name__ == "BandedTermShardedIndex"
+tscorer = retrieval.make_term_sharded_fused_scorer(tix, mesh, "shards",
+                                                   k=k)
+for i in range(len(qh)):
+    vv, ii = tscorer(qh[i])
+    vv, ii = np.asarray(vv), np.asarray(ii)
+    hit = np.isfinite(vv) & (ii >= 0)
+    gids = np.where(hit, live_ids[np.maximum(ii, 0)], -1).astype(np.int32)
+    np.testing.assert_array_equal(gids, ref_ids[i])
+    np.testing.assert_allclose(np.where(hit, vv, 0.0), ref_scores[i],
+                               rtol=1e-5, atol=1e-6)
+
+# banded is NOT a bulk doc-sharded layout: the stack tier serves it
+try:
+    retrieval.build_doc_sharded_fused(
+        __import__("repro.core.build", fromlist=["bulk_build"])
+        .bulk_build(tc), 2, layout="banded")
+    raise SystemExit("bulk banded did not raise")
+except ValueError as e:
+    assert "segment-stack" in str(e)
+
+print("BANDED_SHARDED_OK")
+"""
+
+
+def test_banded_sharded_parity_subprocess():
+    """Doc-stacked banded groups are BITWISE equal to the single-host
+    answer across 4 shards; term-sharded banded matches to psum
+    tolerance with bit-identical ids; warm-class rebuilds add zero jit
+    entries; and the bulk doc-sharded path refuses banded loudly
+    (subprocess: XLA device count must be set before jax init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", BANDED_SHARDED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert "BANDED_SHARDED_OK" in out.stdout, out.stderr[-4000:]

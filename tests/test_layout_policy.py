@@ -324,3 +324,26 @@ def test_auto_layout_fuzz_bounded(seed, min_docs, compact):
                                             size_class=s.size_class)
         assert s.layout == want
     _assert_oracle_parity(si, _queries(si, n=2, seed=seed))
+
+
+def test_partial_sweep_reason_is_honest():
+    """A sweep that timed only ONE candidate layout must not masquerade
+    as a measurement: the decision comes from the byte model and the
+    reason says so — 'analytic:partial-measured(<swept>)' — while still
+    starting with 'analytic' so reason-prefix consumers keep working."""
+    table = autotune.TuningTable()
+    table.put("pallas", 2048, "hor", autotune.TuneConfig(), cost_s=1e-4)
+    prev = autotune.set_active(table)
+    try:
+        pol = size_model.LayoutCostModel(min_packed_docs=64)
+        big = size_model.SegmentStats(2_000, 60_000, 500)
+        d = pol.choose(big, size_class=2048)
+        assert d.reason.startswith("analytic:partial-measured(hor) ")
+        assert d.reason.startswith("analytic")
+        # the decision itself matches the pure-analytic twin
+        ref = pol.choose(big, size_class=4096)       # nothing swept there
+        assert d.layout == ref.layout == "packed"
+        assert ref.reason.startswith("analytic:bytes/q")
+        assert "partial" not in ref.reason
+    finally:
+        autotune.set_active(prev)

@@ -511,3 +511,47 @@ def test_check_regression_rejects_malformed_registry():
     no_stages = json.loads(json.dumps(ok))
     no_stages["stages"] = {}
     assert any("stages" in p for p in check_registry_section(no_stages))
+
+
+def test_event_log_capacity_configurable_end_to_end():
+    """EventLog capacity is caller-sized, not the hard-coded 256:
+    ``resize`` rebounds the ring keeping the newest events (seq and
+    per-kind counts survive), ``SegmentedIndex(event_capacity=)`` sizes
+    the index's log at construction, and the serving tier plumbs it
+    (``ServerConfig.event_capacity`` resizes the served index,
+    ``MeshConfig`` inherits it for every replica)."""
+    log = EventLog(capacity=4)
+    for i in range(6):
+        log.emit("seal", epoch=i)
+    assert log.capacity == 4 and len(log) == 4
+    log.resize(2)                         # shrink keeps the NEWEST
+    assert log.capacity == 2
+    assert [e["epoch"] for e in log.tail(10)] == [4, 5]
+    assert log.total == 6 and log.counts() == {"seal": 6}
+    log.resize(8)                         # grow keeps everything held
+    log.emit("compact", merged=2)
+    assert len(log) == 3
+    with pytest.raises(ValueError):
+        log.resize(0)
+
+    tc = corpus.generate(corpus.CorpusSpec(num_docs=200, vocab=100,
+                                           avg_distinct=10, seed=4))
+    si = SegmentedIndex(term_hashes=tc.term_hashes,
+                        delta_doc_capacity=200, event_capacity=7)
+    assert si.events.capacity == 7
+
+    from repro.serve import MeshConfig, MeshServer, QueryServer, ServerConfig
+    si.add_batch(_slice(tc, 0, 200))
+    si.seal()
+    QueryServer(si, ServerConfig(backend="xla", event_capacity=9))
+    assert si.events.capacity == 9
+    QueryServer(si, ServerConfig(backend="xla"))     # None leaves it alone
+    assert si.events.capacity == 9
+
+    import jax
+    ms = MeshServer(si, MeshConfig(batch_size=4, k=10, n_shards=1,
+                                   n_replicas=2, auto_handoff=False,
+                                   event_capacity=11),
+                    mesh=jax.make_mesh((1,), ("shards",)))
+    assert all(r.index.events.capacity == 11 for r in ms.replicas)
+    ms.stop()

@@ -120,7 +120,8 @@ def live_schedules(draw):
     steps = []
     for _ in range(n_batches):
         steps.append({
-            "layout": draw(st.sampled_from(["hor", "packed", None])),
+            "layout": draw(st.sampled_from(["hor", "packed", "banded",
+                                            None])),
             "delete": draw(st.integers(0, 5)),
             "compact": draw(st.booleans()),
         })
@@ -261,7 +262,8 @@ MESHES = {2: jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",)),
 @given(docs=st.integers(150, 300), vocab=st.integers(60, 200),
        avg=st.integers(5, 14), seed=st.integers(0, 5000),
        n_shards=st.sampled_from([2, 4]),
-       layouts_seq=st.lists(st.sampled_from(["hor", "packed", None]),
+       layouts_seq=st.lists(st.sampled_from(["hor", "packed", "banded",
+                                             None]),
                             min_size=4, max_size=4),
        policy_docs=st.sampled_from([0, 64, 256]),
        n_del=st.integers(0, 8))
